@@ -1,0 +1,47 @@
+"""Kernel-layer microbench: BSR (batched-MXU path) vs ELL (gather path) vs
+dense matmul for the or_and traversal step, across fill ratios.
+
+CPU timings are indicative only (the roofline analysis in EXPERIMENTS.md is
+the TPU perf story); what this table demonstrates is the format-selection
+crossover that `core.ops.auto_format` encodes.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import BSR, ELL, ops, semiring as S
+
+
+def run(rows):
+    rng = np.random.default_rng(0)
+    n, f = 4096, 128
+    for nnz, tag in ((40_000, "sparse0.2%"), (400_000, "dense2.4%")):
+        r = rng.integers(0, n, size=nnz)
+        c = rng.integers(0, n, size=nnz)
+        X = (rng.uniform(size=(n, f)) < 0.05).astype(np.float32)
+        Xj = jnp.asarray(X)
+        bsr = BSR.from_coo(r, c, None, (n, n), block=128)
+        ell = ELL.from_coo(r, c, None, (n, n))
+        dense = jnp.asarray(bsr.to_dense())
+        impls = {
+            "bsr_jnp": jax.jit(lambda x: ops.mxm(bsr, x, S.OR_AND)),
+            "ell_gather": jax.jit(lambda x: ops.mxm(ell, x, S.OR_AND)),
+            "dense_mxu": jax.jit(lambda x: ops.mxm(dense, x, S.OR_AND)),
+        }
+        outs = {}
+        for name, fn in impls.items():
+            outs[name] = np.asarray(fn(Xj))
+            t0 = time.perf_counter()
+            for _ in range(3):
+                np.asarray(fn(Xj))
+            dt = (time.perf_counter() - t0) / 3
+            rows.append((f"kernel_{tag}_{name}", dt * 1e6,
+                         f"fill={bsr.fill_ratio:.4f}"))
+        for name, out in outs.items():
+            np.testing.assert_allclose(out, outs["dense_mxu"],
+                                       err_msg=f"{tag} {name}")
+    return rows

@@ -1,0 +1,30 @@
+"""Paper §II claim: "reads scale and handle large throughput easily" —
+queries/sec vs concurrent batch width (the threadpool analog: width = F)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro import algorithms as alg
+from repro.graph.datagen import rmat_graph
+
+
+def run(rows):
+    g = rmat_graph(scale=11, edge_factor=8, seed=5, fmt="bsr", block=128)
+    A_T = g.relations["KNOWS"].A_T
+    rng = np.random.default_rng(0)
+    k = 2
+    for width in (1, 8, 64, 256):
+        seeds = rng.integers(0, g.n, size=width)
+        fn = jax.jit(lambda s: alg.khop_counts(A_T, s, g.n, k=k))
+        np.asarray(fn(seeds))
+        reps = max(1, 256 // width)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            np.asarray(fn(seeds))
+        dt = (time.perf_counter() - t0) / reps
+        rows.append((f"throughput_width{width}", dt / width * 1e6,
+                     f"qps={width / dt:.0f}"))
+    return rows

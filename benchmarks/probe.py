@@ -1,0 +1,168 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Probe-corrected roofline terms.
+
+XLA's `cost_analysis()` (and static HLO text) counts a while-loop body ONCE,
+not x trip-count — with scan-over-layers every measured term undercounts by
+~n_layers. Fix, using only compiled artifacts: lower the SAME cell at probe
+layer counts (e.g. L=1 and L=2, attention chunk-scan folded via kv_chunk=0),
+fit the linear model f(L) = base + L * per_layer per metric
+(flops / bytes / collective bytes), and evaluate at the real L.
+
+Families with a *time* recurrence (rwkv6 wkv, zamba2 SSD) additionally get an
+analytic recurrence term (the scan step is an outer product; S steps cannot
+be folded) — documented in EXPERIMENTS.md §Roofline caveats.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.probe --all [--out experiments/probe]
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+
+import numpy as np
+
+from repro.configs.base import ARCHS, SHAPES, get_config, shapes_for
+
+
+def _probe_plans(cfg):
+    """Returns (rows, eval_row, replace_list): design rows [1, *counts] per
+    probe config, the evaluation row for the real config, and the dataclass
+    replacements producing each probe."""
+    if cfg.family == "whisper":
+        probes = [(1, 1), (2, 1), (1, 2)]
+        rows = [[1, ld, le] for ld, le in probes]
+        evalr = [1, cfg.n_layers, cfg.encoder_layers]
+        reps = [dict(n_layers=ld, encoder_layers=le, kv_chunk=0,
+                     scan_unroll=True) for ld, le in probes]
+        return rows, evalr, reps
+    if cfg.family == "zamba2":
+        e = cfg.shared_attn_every
+        Ls = [e, e + 1, 2 * e]
+
+        def counts(L):
+            n_full, rem = divmod(L, e)
+            ns = n_full + (1 if rem else 0)
+            return [1, L, ns]
+        rows = [counts(L) for L in Ls]
+        evalr = counts(cfg.n_layers)
+        reps = [dict(n_layers=L, kv_chunk=0, scan_unroll=True) for L in Ls]
+        return rows, evalr, reps
+    # dense / moe / llava / rwkv6: linear in n_layers
+    rows = [[1, 1], [1, 2]]
+    evalr = [1, cfg.n_layers]
+    reps = [dict(n_layers=L, kv_chunk=0, scan_unroll=True)
+            for L in (1, 2)]
+    return rows, evalr, reps
+
+
+def _recurrence_flops(cfg, shape):
+    """Analytic per-device add for time-recurrence scans (fwd; x3 for train)."""
+    B = shape.global_batch
+    S = shape.seq_len if shape.kind != "decode" else 1
+    if cfg.family == "rwkv6":
+        per_step = 7 * B * cfg.ssm_heads * cfg.head_dim ** 2
+        return per_step * S * cfg.n_layers
+    if cfg.family == "zamba2":
+        d_inner = 2 * cfg.d_model
+        P = d_inner // cfg.ssm_heads
+        per_step = 7 * B * cfg.ssm_heads * P * cfg.ssm_state
+        return per_step * S * cfg.n_layers
+    return 0.0
+
+
+def probe_cell(arch: str, shape_name: str, outdir: str, multi_pod=False,
+               rules=None):
+    # local import so XLA_FLAGS is already set
+    from repro.launch import dryrun as dr
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rows, evalr, reps = _probe_plans(cfg)
+    meshname = "pod2x16x16" if multi_pod else "pod16x16"
+    cell = f"{arch}__{shape_name}__{meshname}"
+    print(f"[probe] {cell}: {len(reps)} probes", flush=True)
+    mets = {"flops": [], "bytes": [], "coll": []}
+    try:
+        for rep in reps:
+            pcfg = dataclasses.replace(cfg, **rep)
+            lowered, mesh, _, _ = dr.lower_cell(
+                arch, shape_name, multi_pod, rules=rules, cfg=pcfg)
+            compiled = lowered.compile()
+            cost = dr.cost_stats(compiled)
+            coll, _ = dr.collective_stats(compiled.as_text())
+            mets["flops"].append(cost["flops_per_device"])
+            mets["bytes"].append(cost["bytes_per_device"])
+            mets["coll"].append(float(coll))
+        X = np.asarray(rows, dtype=np.float64)
+        ev = np.asarray(evalr, dtype=np.float64)
+        corrected = {}
+        for k, ys in mets.items():
+            theta, *_ = np.linalg.lstsq(X, np.asarray(ys), rcond=None)
+            corrected[k] = float(max(ev @ theta, 0.0))
+        rec_fl = _recurrence_flops(cfg, shape)
+        if rec_fl:
+            nchips = 512 if multi_pod else 256
+            mult = 3.0 if shape.kind == "train" else 1.0
+            corrected["flops"] += rec_fl * mult / nchips
+            corrected["recurrence_flops_added"] = rec_fl * mult / nchips
+        rl = dr.roofline(512 if multi_pod else 256, corrected["flops"],
+                         corrected["bytes"], corrected["coll"])
+        n_active = cfg.active_param_count()
+        tokens = shape.global_batch * (shape.seq_len
+                                       if shape.kind != "decode" else 1)
+        model_flops_dev = ((6 if shape.kind == "train" else 2)
+                           * n_active * tokens / (512 if multi_pod else 256))
+        rec = {"cell": cell, "arch": arch, "shape": shape_name,
+               "mesh": meshname, "status": "ok", "kind": shape.kind,
+               "corrected": corrected, "roofline": rl,
+               "probe_points": {k: v for k, v in mets.items()},
+               "model_flops_per_device": model_flops_dev,
+               "useful_flops_ratio": model_flops_dev
+               / max(corrected["flops"], 1.0)}
+        print(f"  corrected: dom={rl['dominant']} "
+              f"compute={rl['compute_s']*1e3:.1f}ms "
+              f"mem={rl['memory_s']*1e3:.1f}ms "
+              f"coll={rl['collective_s']*1e3:.1f}ms "
+              f"useful={rec['useful_flops_ratio']:.2f}", flush=True)
+    except Exception as e:
+        rec = {"cell": cell, "status": "error",
+               "error": f"{type(e).__name__}: {e}"}
+        print(f"  ERROR {type(e).__name__}: {str(e)[:200]}", flush=True)
+    os.makedirs(outdir, exist_ok=True)
+    with open(os.path.join(outdir, cell + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/probe")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+    archs = ARCHS if args.all else [args.arch]
+    err = 0
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = ([args.shape] if args.shape
+                  else [s.name for s in shapes_for(cfg)])
+        for s in shapes:
+            if s in cfg.skip_shapes:
+                continue
+            p = os.path.join(args.out, f"{arch}__{s}__pod16x16.json")
+            if args.resume and os.path.exists(p):
+                with open(p) as f:
+                    if json.load(f).get("status") == "ok":
+                        continue
+            rec = probe_cell(arch, s, args.out)
+            err += rec.get("status") != "ok"
+    sys.exit(1 if err else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""Aggregate experiments/dryrun/*.json into the §Roofline table.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun]
+Writes experiments/roofline.md (markdown) + prints a CSV summary.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(dirname):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_s(x):
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x * 1e6:.1f}us"
+
+
+def table(recs, mesh="pod16x16"):
+    lines = [
+        "| cell | kind | compute | memory | collective | dominant | "
+        "MFU-bound | useful/HLO flops | mem GB | fits |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("mesh") != mesh:
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"| {r['cell']} | - | ERROR: "
+                         f"{r.get('error', '?')[:60]} |" + " |" * 8)
+            continue
+        rl = r["roofline"]
+        ratio = r.get("useful_flops_ratio", 0.0)
+        mfu_bound = (rl["compute_s"] / rl["bound_s"] * ratio
+                     if rl["bound_s"] else 0.0)
+        mem = r["memory"]["peak_per_device_bytes"] / 1e9
+        lines.append(
+            f"| {r['arch']} x {r['shape']} | {r.get('kind','?')} "
+            f"| {fmt_s(rl['compute_s'])} | {fmt_s(rl['memory_s'])} "
+            f"| {fmt_s(rl['collective_s'])} | {rl['dominant']} "
+            f"| {mfu_bound:.3f} | {ratio:.3f} | {mem:.2f} "
+            f"| {'Y' if r.get('fits_hbm') else 'N'} |")
+    return "\n".join(lines)
+
+
+def csv(recs):
+    out = ["cell,status,dominant,compute_s,memory_s,collective_s,"
+           "useful_ratio,mem_gb,fits"]
+    for r in recs:
+        if r.get("status") != "ok":
+            out.append(f"{r['cell']},error,,,,,,,")
+            continue
+        rl = r["roofline"]
+        out.append(
+            f"{r['cell']},ok,{rl['dominant']},{rl['compute_s']:.4e},"
+            f"{rl['memory_s']:.4e},{rl['collective_s']:.4e},"
+            f"{r.get('useful_flops_ratio', 0):.3f},"
+            f"{r['memory']['peak_per_device_bytes'] / 1e9:.2f},"
+            f"{int(bool(r.get('fits_hbm')))}")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--out", default="experiments/roofline.md")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    if not recs:
+        print("no dryrun records found")
+        return
+    md = ["# Roofline (single-pod 16x16, per-device terms)", "",
+          table(recs, "pod16x16"), "",
+          "# Multi-pod compile check (2x16x16)", "",
+          table(recs, "pod2x16x16")]
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        f.write("\n".join(md) + "\n")
+    print(csv(recs))
+    print(f"\nwrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Benchmark harness: one function per paper table/claim.
+
+  khop        — paper Fig. 1 (k-hop response time, RedisGraph protocol)
+  throughput  — paper §II (threadpool/read-scaling claim)
+  kernels     — format-selection crossover (BSR/ELL/dense)
+  triangles   — GraphChallenge (paper future-work item)
+
+Prints ``name,us_per_call,derived`` CSV. Roofline terms come from the
+dry-run artifacts: ``python -m benchmarks.roofline``.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import bench_khop, bench_kernels, bench_throughput, \
+        bench_triangles
+    rows: list = []
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    suites = {
+        "khop": bench_khop.run,
+        "throughput": bench_throughput.run,
+        "kernels": bench_kernels.run,
+        "triangles": bench_triangles.run,
+    }
+    print("name,us_per_call,derived")
+    for name, fn in suites.items():
+        if only and name != only:
+            continue
+        start = len(rows)
+        fn(rows)
+        for r in rows[start:]:
+            print(f"{r[0]},{r[1]:.1f},{r[2]}")
+
+
+if __name__ == "__main__":
+    main()

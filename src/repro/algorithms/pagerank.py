@@ -1,0 +1,24 @@
+"""PageRank via plus_times vxm (pull form) with dangling-mass correction."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ops, semiring as S
+
+
+def pagerank(A, A_T, n: int, alpha: float = 0.85, iters: int = 50,
+             impl: str = "auto") -> jnp.ndarray:
+    ones = jnp.ones((n, 1), dtype=jnp.float32)
+    deg = ops.mxm(A, ones, S.PLUS_TIMES, impl=impl)[:, 0]      # out-degree
+    dangling = deg == 0
+    inv_deg = jnp.where(dangling, 0.0, 1.0 / jnp.maximum(deg, 1e-30))
+
+    def body(_, r):
+        push = r * inv_deg
+        pulled = ops.mxm(A_T, push[:, None], S.PLUS_TIMES, impl=impl)[:, 0]
+        dmass = jnp.sum(jnp.where(dangling, r, 0.0)) / n
+        return (1.0 - alpha) / n + alpha * (pulled + dmass)
+
+    r0 = jnp.full((n,), 1.0 / n, dtype=jnp.float32)
+    return jax.lax.fori_loop(0, iters, body, r0)

@@ -1,0 +1,33 @@
+"""Single-source shortest paths = Bellman-Ford over the min_plus semiring.
+
+Tropical-format caveat (documented in DESIGN.md): edge weights of exactly 0.0
+are indistinguishable from "absent" in tile storage; generators use w >= 0.5.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ops, semiring as S
+
+
+def sssp(A_T, seeds, n: int, max_iter: int = 0, impl: str = "auto"):
+    """dist (n, F): tropical distance from each seed column."""
+    seeds = jnp.asarray(seeds)
+    f = seeds.shape[0]
+    dist = jnp.full((n, f), jnp.inf, dtype=jnp.float32)
+    dist = dist.at[seeds, jnp.arange(f)].set(0.0)
+    iters = max_iter or n - 1
+
+    def cond(state):
+        t, dist, changed = state
+        return jnp.logical_and(t < iters, changed)
+
+    def body(state):
+        t, dist, _ = state
+        relaxed = ops.mxm(A_T, dist, S.MIN_PLUS, impl=impl)
+        new = jnp.minimum(dist, relaxed)
+        return t + 1, new, jnp.any(new < dist)
+
+    _, dist, _ = jax.lax.while_loop(cond, body, (0, dist, True))
+    return dist

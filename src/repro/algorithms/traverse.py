@@ -1,0 +1,55 @@
+"""BFS / k-hop over the boolean semiring — the paper's benchmark workload.
+
+`MATCH (a)-[:R*1..k]->(b) WHERE id(a)=seed RETURN count(DISTINCT b)` lowers to
+exactly `khop_counts`: k masked or_and vxm steps with a complemented visited
+mask, batched over seeds in the frontier's F dimension (the threadpool analog:
+one column == one concurrent query).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ops, semiring as S
+
+
+def seeds_to_frontier(seeds, n: int) -> jnp.ndarray:
+    """(F,) seed vertex ids -> one-hot (n, F) frontier matrix."""
+    seeds = jnp.asarray(seeds)
+    return (jax.nn.one_hot(seeds, n, dtype=jnp.float32)).T
+
+
+def bfs_step(A_T, frontier: jnp.ndarray, visited: jnp.ndarray,
+             impl: str = "auto") -> jnp.ndarray:
+    """next<!visited> = A^T (x)_or_and frontier  — one traversal hop."""
+    return ops.mxm(A_T, frontier, S.OR_AND, mask=visited, complement=True,
+                   impl=impl)
+
+
+def bfs_levels(A_T, seeds, n: int, max_iter: int, impl: str = "auto"):
+    """Levels (n, F): hop distance from each seed column; +inf if unreached."""
+    frontier = seeds_to_frontier(seeds, n)
+    levels = jnp.where(frontier > 0, 0.0, jnp.inf).astype(jnp.float32)
+
+    def cond(state):
+        t, frontier, _ = state
+        return jnp.logical_and(t < max_iter, jnp.any(frontier > 0))
+
+    def body(state):
+        t, frontier, levels = state
+        visited = jnp.isfinite(levels).astype(jnp.float32)
+        nxt = bfs_step(A_T, frontier, visited, impl=impl)
+        levels = jnp.where(nxt > 0, t + 1.0, levels)
+        return t + 1.0, nxt, levels
+
+    _, _, levels = jax.lax.while_loop(
+        cond, body, (jnp.float32(0.0), frontier, levels))
+    return levels
+
+
+def khop_counts(A_T, seeds, n: int, k: int, impl: str = "auto") -> jnp.ndarray:
+    """TigerGraph k-hop benchmark semantics: |{v : 1 <= dist(seed, v) <= k}|."""
+    levels = bfs_levels(A_T, seeds, n, max_iter=k, impl=impl)
+    inrange = jnp.logical_and(levels >= 1.0, levels <= float(k))
+    return jnp.sum(inrange.astype(jnp.int32), axis=0)

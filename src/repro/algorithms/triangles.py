@@ -1,0 +1,19 @@
+"""Triangle counting — C<A> = A (x)_plus_pair A, sum(C)/6 (GraphChallenge;
+listed as RedisGraph future work, implemented here).
+
+Requires a symmetric (undirected) adjacency. The B operand is densified —
+fine at bench scale; a BSR x BSR SpGEMM kernel is the documented scale-out
+path (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import ops, semiring as S
+
+
+def triangle_count(A, impl: str = "auto") -> jnp.ndarray:
+    dense = A.to_dense() if hasattr(A, "to_dense") else A
+    mask = (dense != 0).astype(jnp.int8)
+    C = ops.mxm(A, dense, S.PLUS_PAIR, mask=mask, impl=impl)
+    return (jnp.sum(C) / 6.0).astype(jnp.int32)

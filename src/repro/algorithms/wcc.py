@@ -1,0 +1,34 @@
+"""Weakly-connected components by min-label propagation over min_plus.
+
+label'_i = min(label_i, min_{j in N(i)} label_j); the min over neighbors is a
+min_plus vxm with unit weights followed by a -1 shift (unit weights because
+0-weights are not storable in tropical tile format).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ops, semiring as S
+
+
+def wcc(A_T, A, n: int, max_iter: int = 0, impl: str = "auto") -> jnp.ndarray:
+    labels = jnp.arange(n, dtype=jnp.float32)
+    iters = max_iter or n
+
+    def step(A_dir, labels):
+        pulled = ops.mxm(A_dir, labels[:, None], S.MIN_PLUS, impl=impl)[:, 0]
+        return jnp.minimum(labels, pulled - 1.0)
+
+    def cond(state):
+        t, labels, changed = state
+        return jnp.logical_and(t < iters, changed)
+
+    def body(state):
+        t, labels, _ = state
+        new = step(A_T, labels)     # pull from in-neighbors
+        new = step(A, new)          # and out-neighbors (undirected closure)
+        return t + 1, new, jnp.any(new < labels)
+
+    _, labels, _ = jax.lax.while_loop(cond, body, (0, labels, True))
+    return labels.astype(jnp.int32)

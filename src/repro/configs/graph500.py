@@ -1,0 +1,12 @@
+"""The paper's own workload configs: Graph500 scale-21 (dry-run analog of the
+paper's 2.4M-vertex / 67M-edge dataset, padded-deg-64 ELL) — consumed by
+launch/dryrun.py GRAPH_CELLS and the benchmarks."""
+
+GRAPH_CONFIG = dict(
+    name="graph500_s21",
+    n_vertices=2_097_152,      # scale 21
+    max_deg=64,                # padded ELL degree (edge factor 16, bucketed)
+    queries=256,               # concurrent k-hop queries (threadpool width)
+    k=2,
+    formats=("khop", "khop_bitmap", "khop_bitmap_sentinel"),
+)

@@ -1,0 +1,11 @@
+"""Twitter graph config (paper: 41.6M vertices / 1.47B edges) — the large
+dataset of the paper's benchmark, as a distributed ELL dry-run cell."""
+
+GRAPH_CONFIG = dict(
+    name="twitter41m",
+    n_vertices=41_600_000,
+    max_deg=64,                # degree-bucketed ELL stand-in (DESIGN.md GE-3)
+    queries=256,
+    k=2,
+    formats=("khop", "khop_bitmap", "khop_bitmap_sentinel"),
+)

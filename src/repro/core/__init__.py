@@ -1,0 +1,7 @@
+# The paper's primary contribution: GraphBLAS (sparse semiring linear algebra)
+# as the storage + execution substrate of a graph database, TPU-native.
+from repro.core import ops, semiring
+from repro.core.bsr import BSR
+from repro.core.ell import ELL
+
+__all__ = ["ops", "semiring", "BSR", "ELL"]

@@ -1,0 +1,194 @@
+"""Block-Sparse-Row matrices: the TPU-native replacement for SuiteSparse CSR.
+
+The adjacency matrix is partitioned into ``block x block`` *dense* tiles; only
+tiles containing at least one edge are stored.  Dense 128x128 tiles feed the MXU
+directly; the tile-index lists carry the sparsity *between* tiles.  Construction
+is host-side numpy (the database load path); the device representation is a
+registered pytree so BSR matrices flow through jit/shard_map.
+
+Kernel-steering invariants (relied on by kernels/bsr_mxm.py):
+  * blocks are sorted by (block_row, block_col);
+  * every block-row has >= 1 stored block (empty rows get a padding block with
+    valid=0) so the output tile of every row is initialized exactly once;
+  * `first` marks the first block of each block-row; `last` the last;
+  * trailing grid padding repeats the final block with valid=0, first=0, last=0.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class BSR:
+    shape: Tuple[int, int]
+    block: int
+    # device arrays -------------------------------------------------------
+    blocks: jnp.ndarray      # (nnzb, block, block) tile payloads
+    block_rows: jnp.ndarray  # (nnzb,) i32 block-row of each tile
+    block_cols: jnp.ndarray  # (nnzb,) i32 block-col of each tile
+    first: jnp.ndarray       # (nnzb,) i32 1 iff first tile in its block-row
+    last: jnp.ndarray        # (nnzb,) i32 1 iff last tile in its block-row
+    valid: jnp.ndarray       # (nnzb,) i32 0 for padding tiles
+    row_ptr: jnp.ndarray     # (nbrows+1,) i32 CSR-style pointers over tiles
+    # static metadata ------------------------------------------------------
+    nnz: int                 # scalar element count (pre-blocking)
+
+    # -- pytree ------------------------------------------------------------
+    def tree_flatten(self):
+        children = (self.blocks, self.block_rows, self.block_cols,
+                    self.first, self.last, self.valid, self.row_ptr)
+        aux = (self.shape, self.block, self.nnz)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        shape, block, nnz = aux
+        return cls(shape, block, *children, nnz=nnz)
+
+    # -- properties ----------------------------------------------------------
+    @property
+    def nnzb(self) -> int:
+        return self.blocks.shape[0]
+
+    @property
+    def nbrows(self) -> int:
+        return -(-self.shape[0] // self.block)
+
+    @property
+    def nbcols(self) -> int:
+        return -(-self.shape[1] // self.block)
+
+    @property
+    def fill_ratio(self) -> float:
+        """nnz / stored-tile capacity — the BSR-vs-ELL format-switch signal."""
+        cap = int(np.asarray(self.valid).sum()) * self.block * self.block
+        return self.nnz / max(cap, 1)
+
+    # -- construction --------------------------------------------------------
+    @staticmethod
+    def from_coo(rows, cols, vals, shape, block: int = 128,
+                 dtype=jnp.float32, pad_to: int = 8) -> "BSR":
+        rows = np.asarray(rows, dtype=np.int64)
+        cols = np.asarray(cols, dtype=np.int64)
+        if vals is None:
+            vals = np.ones(rows.shape[0], dtype=np.float64)
+        vals = np.asarray(vals, dtype=np.float64)
+        n, m = shape
+        nbr, nbc = -(-n // block), -(-m // block)
+        brow, bcol = rows // block, cols // block
+        key = brow * nbc + bcol
+        order = np.argsort(key, kind="stable")
+        rows, cols, vals, key = rows[order], cols[order], vals[order], key[order]
+        ukey, starts = np.unique(key, return_index=True)
+        starts = np.append(starts, rows.shape[0])
+        ubrow, ubcol = (ukey // nbc).astype(np.int32), (ukey % nbc).astype(np.int32)
+
+        # ensure every block-row has >= 1 tile: add invalid padding tiles
+        present = np.zeros(nbr, dtype=bool)
+        present[ubrow] = True
+        missing = np.nonzero(~present)[0].astype(np.int32)
+
+        tot = len(ukey) + len(missing)
+        blocks = np.zeros((tot, block, block), dtype=np.float32)
+        b_r = np.empty(tot, dtype=np.int32)
+        b_c = np.empty(tot, dtype=np.int32)
+        valid = np.empty(tot, dtype=np.int32)
+
+        for i in range(len(ukey)):
+            s, e = starts[i], starts[i + 1]
+            lr = (rows[s:e] - ubrow[i] * block).astype(np.int64)
+            lc = (cols[s:e] - ubcol[i] * block).astype(np.int64)
+            np.add.at(blocks[i], (lr, lc), 0.0)  # touch
+            blocks[i][lr, lc] = vals[s:e]
+        b_r[: len(ukey)] = ubrow
+        b_c[: len(ukey)] = ubcol
+        valid[: len(ukey)] = 1
+        b_r[len(ukey):] = missing
+        b_c[len(ukey):] = 0
+        valid[len(ukey):] = 0
+
+        # re-sort with padding tiles interleaved
+        order = np.argsort(b_r * nbc + b_c, kind="stable")
+        blocks, b_r, b_c, valid = blocks[order], b_r[order], b_c[order], valid[order]
+
+        first = np.zeros(tot, dtype=np.int32)
+        last = np.zeros(tot, dtype=np.int32)
+        first[0] = 1
+        first[1:] = (b_r[1:] != b_r[:-1]).astype(np.int32)
+        last[:-1] = first[1:]
+        last[-1] = 1
+
+        row_ptr = np.zeros(nbr + 1, dtype=np.int32)
+        np.add.at(row_ptr, b_r + 1, 1)
+        row_ptr = np.cumsum(row_ptr).astype(np.int32)
+
+        # pad nnzb to a grid-friendly multiple; pads repeat the final tile
+        pad = (-tot) % pad_to
+        if pad:
+            blocks = np.concatenate([blocks, np.zeros((pad, block, block), np.float32)])
+            b_r = np.concatenate([b_r, np.full(pad, b_r[-1], np.int32)])
+            b_c = np.concatenate([b_c, np.full(pad, b_c[-1], np.int32)])
+            valid = np.concatenate([valid, np.zeros(pad, np.int32)])
+            first = np.concatenate([first, np.zeros(pad, np.int32)])
+            last = np.concatenate([last, np.zeros(pad, np.int32)])
+
+        return BSR(
+            shape=(n, m), block=block,
+            blocks=jnp.asarray(blocks, dtype=dtype),
+            block_rows=jnp.asarray(b_r), block_cols=jnp.asarray(b_c),
+            first=jnp.asarray(first), last=jnp.asarray(last),
+            valid=jnp.asarray(valid), row_ptr=jnp.asarray(row_ptr),
+            nnz=int(rows.shape[0]),
+        )
+
+    @staticmethod
+    def from_dense(A, block: int = 128, dtype=jnp.float32) -> "BSR":
+        A = np.asarray(A)
+        r, c = np.nonzero(A)
+        return BSR.from_coo(r, c, A[r, c], A.shape, block=block, dtype=dtype)
+
+    def to_dense(self) -> jnp.ndarray:
+        n, m = self.shape
+        block = self.block
+        nbr, nbc = self.nbrows, self.nbcols
+        out = np.zeros((nbr * block, nbc * block), dtype=np.float32)
+        blocks = np.asarray(self.blocks, dtype=np.float32)
+        br = np.asarray(self.block_rows)
+        bc = np.asarray(self.block_cols)
+        va = np.asarray(self.valid)
+        for i in range(blocks.shape[0]):
+            if va[i]:
+                out[br[i] * block:(br[i] + 1) * block,
+                    bc[i] * block:(bc[i] + 1) * block] = blocks[i]
+        return jnp.asarray(out[:n, :m])
+
+    def transpose(self) -> "BSR":
+        """Host-side rebuild (RedisGraph also maintains explicit transposes)."""
+        dense = np.asarray(self.to_dense()).T
+        return BSR.from_dense(dense, block=self.block, dtype=self.blocks.dtype)
+
+    def to_coo(self):
+        """Host-side COO extraction (snapshot/persistence path)."""
+        b = self.block
+        blocks = np.asarray(self.blocks, dtype=np.float32)
+        br = np.asarray(self.block_rows)
+        bc = np.asarray(self.block_cols)
+        va = np.asarray(self.valid)
+        rows, cols, vals = [], [], []
+        for i in range(blocks.shape[0]):
+            if not va[i]:
+                continue
+            lr, lc = np.nonzero(blocks[i])
+            rows.append(lr + br[i] * b)
+            cols.append(lc + bc[i] * b)
+            vals.append(blocks[i][lr, lc])
+        if not rows:
+            return (np.zeros(0, np.int64),) * 2 + (np.zeros(0, np.float32),)
+        return (np.concatenate(rows), np.concatenate(cols),
+                np.concatenate(vals))

@@ -1,0 +1,230 @@
+"""GraphBLAS operations over BSR / ELL / dense operands.
+
+The op surface mirrors the GraphBLAS C API subset RedisGraph uses:
+  mxm / mxv / vxm          (semiring matmul, the traversal primitive)
+  ewise_add / ewise_mult   (element-wise monoid/op application)
+  reduce                   (monoid reduction)
+  apply / select           (unary op / predicate filter)
+plus GraphBLAS masks (with complement) and accumulators.
+
+Frontiers are dense ``(N, F)`` matrices: F queries traverse at once — the TPU
+analog of RedisGraph's threadpool (one column = one query's frontier).
+
+Three execution paths per format:
+  dense  -> semiring.dense_mxm (oracle)
+  BSR    -> Pallas kernel (kernels/bsr_mxm.py) or the XLA-native batched-matmul
+            + segment-reduce path below (`bsr_mxm_jnp`)
+  ELL    -> gather + masked reduce on the VPU (`ell_mxm`)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import semiring as S
+from repro.core.bsr import BSR
+from repro.core.ell import ELL
+
+Array = jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# masks & accumulators
+# ---------------------------------------------------------------------------
+def apply_mask(result: Array, mask: Optional[Array], complement: bool,
+               accum: Optional[S.Monoid], old: Optional[Array],
+               identity: float) -> Array:
+    """GraphBLAS C<M> (+)= result, replace semantics when old is None."""
+    if mask is not None:
+        m = mask == 0 if complement else mask != 0
+        keep = jnp.where(m, result, np.float32(identity))
+    else:
+        keep = result
+    if accum is not None and old is not None:
+        return accum.op(old, keep)
+    if old is not None and mask is not None:
+        m = mask == 0 if complement else mask != 0
+        return jnp.where(m, keep, old)
+    return keep
+
+
+# ---------------------------------------------------------------------------
+# BSR semiring matmul — XLA-native path (batched matmul + segment reduce)
+# ---------------------------------------------------------------------------
+def _segment_reduce(vals: Array, ids: Array, num: int, monoid: S.Monoid) -> Array:
+    if monoid.name == "plus":
+        return jax.ops.segment_sum(vals, ids, num_segments=num)
+    if monoid.name in ("or", "max"):
+        out = jax.ops.segment_max(vals, ids, num_segments=num)
+        return jnp.maximum(out, np.float32(monoid.identity) if monoid.name == "or" else out)
+    if monoid.name == "min":
+        return jax.ops.segment_min(vals, ids, num_segments=num)
+    raise NotImplementedError(monoid.name)
+
+
+def bsr_mxm_jnp(A: BSR, X: Array, sr: S.Semiring) -> Array:
+    """Y = A (x) X with A in BSR. Batched 128x128 matmuls (MXU-shaped even in
+    XLA) + a segment reduction over block rows."""
+    n, m = A.shape
+    b = A.block
+    f = X.shape[1]
+    nbr, nbc = A.nbrows, A.nbcols
+    Xp = jnp.pad(X.astype(jnp.float32), ((0, nbc * b - m), (0, 0)))
+    Xb = Xp.reshape(nbc, b, f)
+    Xg = Xb[A.block_cols]                       # (nnzb, b, f) gather of X tiles
+    blocks = A.blocks.astype(jnp.float32)
+    valid = A.valid.astype(jnp.float32)[:, None, None]
+
+    if sr.mode == "dot":
+        contrib = jnp.einsum("kab,kbf->kaf", blocks, Xg,
+                             preferred_element_type=jnp.float32) * valid
+        y = _segment_reduce(contrib, A.block_rows, nbr, sr.add)
+    elif sr.mode in ("dot_indicator", "dot_pair"):
+        contrib = jnp.einsum("kab,kbf->kaf", (blocks != 0).astype(jnp.float32),
+                             (Xg != 0).astype(jnp.float32),
+                             preferred_element_type=jnp.float32) * valid
+        y = _segment_reduce(contrib, A.block_rows, nbr, sr.add)
+        if sr.mode == "dot_indicator":
+            y = (y > 0).astype(jnp.float32)
+    elif sr.mode == "dot_first":
+        contrib = jnp.einsum("kab,kbf->kaf", blocks,
+                             (Xg != 0).astype(jnp.float32),
+                             preferred_element_type=jnp.float32) * valid
+        y = _segment_reduce(contrib, A.block_rows, nbr, sr.add)
+    elif sr.mode == "bcast":
+        ident = np.float32(sr.identity)
+        a = jnp.where((blocks != 0) & (A.valid[:, None, None] != 0),
+                      blocks, ident)
+
+        def one(k):
+            prod = sr.mul(a[k][:, :, None], Xg[k][None, :, :])   # (b, b, f)
+            return sr.add.reduce(prod, axis=1)
+
+        contrib = jax.lax.map(one, jnp.arange(A.nnzb))
+        y = _segment_reduce(contrib, A.block_rows, nbr, sr.add)
+    else:
+        raise NotImplementedError(sr.mode)
+    return y.reshape(nbr * b, f)[:n]
+
+
+# ---------------------------------------------------------------------------
+# ELL semiring matmul — gather path (hypersparse)
+# ---------------------------------------------------------------------------
+def ell_mxm(A: ELL, X: Array, sr: S.Semiring, row_chunk: int = 0) -> Array:
+    """Y[i,f] = add_{j in adj(i)} mul(w_ij, X[j,f]) via gather + masked reduce."""
+    n, _ = A.shape
+    ident = np.float32(sr.identity)
+
+    def block(idx, msk, val):
+        Xg = X.astype(jnp.float32)[idx]                    # (rows, deg, f)
+        w = val[:, :, None]
+        m = msk[:, :, None]
+        if sr.mode == "dot":
+            term = jnp.where(m, w * Xg, ident)
+        elif sr.mode in ("dot_indicator", "dot_pair"):
+            term = jnp.where(m & (Xg != 0), 1.0, ident)
+        elif sr.mode == "dot_first":
+            term = jnp.where(m & (Xg != 0), w, ident)
+        elif sr.mode == "bcast":
+            term = jnp.where(m, sr.mul(w, Xg), ident)
+        else:
+            raise NotImplementedError(sr.mode)
+        y = sr.add.reduce(term, axis=1)
+        if sr.mode == "dot_indicator":
+            y = (y > 0).astype(jnp.float32)
+        return y
+
+    if row_chunk and n > row_chunk:
+        pads = (-n) % row_chunk
+        idx = jnp.pad(A.indices, ((0, pads), (0, 0)))
+        msk = jnp.pad(A.mask, ((0, pads), (0, 0)))
+        val = jnp.pad(A.values, ((0, pads), (0, 0)))
+        nb = (n + pads) // row_chunk
+        out = jax.lax.map(
+            lambda i: block(
+                jax.lax.dynamic_slice_in_dim(idx, i * row_chunk, row_chunk),
+                jax.lax.dynamic_slice_in_dim(msk, i * row_chunk, row_chunk),
+                jax.lax.dynamic_slice_in_dim(val, i * row_chunk, row_chunk)),
+            jnp.arange(nb))
+        return out.reshape(nb * row_chunk, -1)[:n]
+    return block(A.indices, A.mask, A.values)
+
+
+# ---------------------------------------------------------------------------
+# public op surface
+# ---------------------------------------------------------------------------
+def mxm(A, X: Array, sr: S.Semiring, *, mask: Optional[Array] = None,
+        complement: bool = False, accum: Optional[S.Monoid] = None,
+        C: Optional[Array] = None, impl: str = "auto") -> Array:
+    """Semiring matmul Y<mask> (accum)= A (x) X. A: BSR | ELL | dense."""
+    if isinstance(A, BSR):
+        if impl == "pallas":
+            from repro.kernels import ops as kops  # lazy: kernels import core
+            y = kops.bsr_mxm(A, X, sr)
+        else:
+            y = bsr_mxm_jnp(A, X, sr)
+    elif isinstance(A, ELL):
+        y = ell_mxm(A, X, sr)
+    else:
+        y = S.dense_mxm(S.structural_dense(A, sr), X, sr)
+    return apply_mask(y, mask, complement, accum, C, sr.identity)
+
+
+def mxv(A, x: Array, sr: S.Semiring, **kw) -> Array:
+    """y = A (x) x for a single vector (column frontier of width 1)."""
+    y = mxm(A, x[:, None], sr, **{k: (v[:, None] if k in ("mask", "C") and v is not None else v)
+                                  for k, v in kw.items()})
+    return y[:, 0]
+
+
+def vxm(x: Array, A, sr: S.Semiring, *, A_T=None, **kw) -> Array:
+    """y = x (x) A == A^T (x) x. Pass A_T (stored transpose) when available —
+    RedisGraph maintains explicit transposes for exactly this."""
+    target = A_T if A_T is not None else _transpose(A)
+    return mxv(target, x, sr, **kw)
+
+
+def _transpose(A):
+    if isinstance(A, (BSR, ELL)):
+        return A.transpose()
+    return A.T
+
+
+def ewise_add(a: Array, b: Array, monoid: S.Monoid) -> Array:
+    return monoid.op(a, b)
+
+
+def ewise_mult(a: Array, b: Array, op) -> Array:
+    return op(a, b)
+
+
+def reduce(x: Array, monoid: S.Monoid, axis=None) -> Array:
+    return monoid.reduce(x, axis=axis)
+
+
+def apply(f, x: Array) -> Array:
+    return f(x)
+
+
+def select(pred, x: Array, identity: float = 0.0) -> Array:
+    return jnp.where(pred(x), x, np.float32(identity))
+
+
+# ---------------------------------------------------------------------------
+# format auto-selection (SuiteSparse's CSR/bitmap/hyper switch, TPU edition)
+# ---------------------------------------------------------------------------
+def auto_format(rows, cols, vals, shape, block: int = 128,
+                bsr_min_fill: float = 0.02):
+    """Pick BSR (MXU path) when stored tiles are dense enough, else ELL."""
+    rows_np = np.asarray(rows)
+    cols_np = np.asarray(cols)
+    nbc = -(-shape[1] // block)
+    nb = len(np.unique(rows_np // block * nbc + cols_np // block))
+    fill = len(rows_np) / max(nb * block * block, 1)
+    if fill >= bsr_min_fill:
+        return BSR.from_coo(rows, cols, vals, shape, block=block)
+    return ELL.from_coo(rows, cols, vals, shape)

@@ -1,0 +1,147 @@
+"""GraphBLAS semirings as first-class JAX objects.
+
+A semiring is (add-monoid, multiply-op). The add monoid must be commutative and
+associative with an identity; the multiply op distributes over it. RedisGraph's
+traversals run on the boolean (or_and) semiring; algorithms use the others:
+
+  plus_times  — classic arithmetic (PageRank, counts)
+  or_and      — structural reachability (BFS, k-hop)        [MXU via f32 matmul + >0]
+  min_plus    — tropical / shortest paths (SSSP)            [VPU broadcast-reduce]
+  max_plus    — critical path / widest-ish                  [VPU broadcast-reduce]
+  plus_pair   — common-neighbor counting (triangles)        [MXU on indicators]
+  plus_first  — weight-push traversal (y += A_ij present -> x carried)
+  any_pair    — structural "pick any witness" (alias of or_and on structure)
+
+`mxu=True` semirings lower to a single `jnp.dot` (optionally on indicator
+matrices) inside the Pallas kernel — the 128x128 systolic array path.  The
+tropical semirings cannot use the MXU and fall back to a chunked
+broadcast-reduce on the VPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class Monoid:
+    name: str
+    op: Callable[[Array, Array], Array]
+    identity: float
+
+    def reduce(self, x: Array, axis=None) -> Array:
+        if self.name == "plus":
+            return jnp.sum(x, axis=axis)
+        if self.name == "min":
+            return jnp.min(x, axis=axis)
+        if self.name == "max":
+            return jnp.max(x, axis=axis)
+        if self.name == "or":
+            return jnp.max(x, axis=axis)
+        raise NotImplementedError(self.name)
+
+
+PLUS = Monoid("plus", lambda a, b: a + b, 0.0)
+MIN = Monoid("min", jnp.minimum, float("inf"))
+MAX = Monoid("max", jnp.maximum, float("-inf"))
+OR = Monoid("or", jnp.maximum, 0.0)  # over {0,1} indicators
+
+
+@dataclasses.dataclass(frozen=True)
+class Semiring:
+    name: str
+    add: Monoid
+    mul: Callable[[Array, Array], Array]
+    mxu: bool  # True if A@B over this semiring lowers to a single MXU matmul
+    # How dense_mxm computes it; one of {"dot", "dot_indicator", "bcast"}.
+    mode: str
+
+    @property
+    def identity(self) -> float:
+        return self.add.identity
+
+
+def _pair(a: Array, b: Array) -> Array:
+    return ((a != 0) & (b != 0)).astype(jnp.float32)
+
+
+def _first(a: Array, b: Array) -> Array:
+    del b
+    return a
+
+
+PLUS_TIMES = Semiring("plus_times", PLUS, lambda a, b: a * b, mxu=True, mode="dot")
+OR_AND = Semiring("or_and", OR, _pair, mxu=True, mode="dot_indicator")
+ANY_PAIR = Semiring("any_pair", OR, _pair, mxu=True, mode="dot_indicator")
+PLUS_PAIR = Semiring("plus_pair", PLUS, _pair, mxu=True, mode="dot_pair")
+MIN_PLUS = Semiring("min_plus", MIN, lambda a, b: a + b, mxu=False, mode="bcast")
+MAX_PLUS = Semiring("max_plus", MAX, lambda a, b: a + b, mxu=False, mode="bcast")
+PLUS_FIRST = Semiring("plus_first", PLUS, _first, mxu=True, mode="dot_first")
+
+SEMIRINGS = {
+    s.name: s
+    for s in [PLUS_TIMES, OR_AND, ANY_PAIR, PLUS_PAIR, MIN_PLUS, MAX_PLUS, PLUS_FIRST]
+}
+
+
+def get(name: str) -> Semiring:
+    return SEMIRINGS[name]
+
+
+def dense_mxm(A: Array, B: Array, sr: Semiring) -> Array:
+    """Reference semiring matmul on dense operands: Y[i,f] = add_j mul(A[i,j], B[j,f]).
+
+    Structural semantics: an entry is "stored" iff nonzero (tests construct
+    graphs that way). This is the oracle for every sparse kernel.
+    """
+    if sr.mode == "dot":
+        return jnp.dot(
+            A.astype(jnp.float32), B.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+    if sr.mode == "dot_indicator":
+        y = jnp.dot(
+            (A != 0).astype(jnp.float32), (B != 0).astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        return (y > 0).astype(jnp.float32)
+    if sr.mode == "dot_pair":
+        return jnp.dot(
+            (A != 0).astype(jnp.float32), (B != 0).astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+    if sr.mode == "dot_first":
+        # y[i,f] = sum_j where both stored: A[i,j]  (B acts as structural mask)
+        return jnp.dot(
+            A.astype(jnp.float32), (B != 0).astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+    if sr.mode == "bcast":
+        # Tropical: no MXU analogue. Chunk K to bound the (i,k,f) intermediate.
+        # Structural convention: only A is structural (absent edge == add
+        # identity, pre-encoded via structural_dense); B is a *dense* operand —
+        # every entry participates (0 is a real distance).
+        n, k = A.shape
+        f = B.shape[1]
+        acc = jnp.full((n, f), sr.identity, dtype=jnp.float32)
+        chunk = max(1, min(k, 4096 // max(1, f // 64 or 1)))
+        for start in range(0, k, chunk):
+            a = A[:, start : start + chunk].astype(jnp.float32)
+            b = B[start : start + chunk, :].astype(jnp.float32)
+            part = sr.add.reduce(sr.mul(a[:, :, None], b[None, :, :]), axis=1)
+            acc = sr.add.op(acc, part)
+        return acc
+    raise NotImplementedError(sr.mode)
+
+
+def structural_dense(A: Array, sr: Semiring) -> Array:
+    """Encode a 0/weight dense matrix for a semiring's dense ref: tropical
+    semirings need absent entries to be the add identity, not 0."""
+    if sr.mode == "bcast":
+        return jnp.where(A != 0, A.astype(jnp.float32), np.float32(sr.identity))
+    return A

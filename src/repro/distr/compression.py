@@ -1,0 +1,46 @@
+"""int8 gradient compression with error feedback.
+
+At 1000+ node scale the DP all-reduce is bandwidth-bound; quantizing grads to
+int8 (per-tensor absmax scale) cuts collective bytes 4x vs f32 / 2x vs bf16.
+Error feedback (residual carried to the next step) keeps SGD unbiased in the
+long run (Seide et al.; Karimireddy et al.).
+
+In SPMD jit the all-reduce is implicit (GSPMD inserts it for sharded-batch
+grads); compressing before the mean-reduce is modeled here by quantize ->
+dequantize around the gradient tree — the dry-run HLO then carries int8
+collectives when wired via shard_map (see distr/graph2d.py for the explicit-
+collective pattern). Numerics are what tests validate.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(g):
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_decompress(grads, error_fb=None):
+    """Quantize each gradient leaf to int8 (+ error feedback residual)."""
+    if error_fb is None:
+        error_fb = jax.tree.map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, scale = quantize(g32)
+        deq = dequantize(q, scale)
+        return deq.astype(g.dtype), g32 - deq
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(error_fb)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree.unflatten(tdef, [o[0] for o in outs]),
+            jax.tree.unflatten(tdef, [o[1] for o in outs]))

@@ -1,0 +1,186 @@
+"""Distributed graph traversal: 2D-sharded ELL k-hop over the mesh.
+
+Layout (DESIGN.md §5):
+  * adjacency rows (ELL indices/mask)  -> "data" axis (within a pod, the
+    graph is row-partitioned; pods replicate the graph),
+  * frontier/query columns F           -> ("pod", "model") — queries scale
+    out across pods, the paper's threadpool claim at pod scale,
+  * between hops, each data-shard owns the new frontier rows it produced;
+    an all-gather over "data" rebuilds the full frontier for the next
+    gather step (the explicit collective the roofline reads).
+
+shard_map keeps the collectives explicit — `lowered.as_text()` shows exactly
+one all-gather per hop plus the final reduce.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def khop_counts_2d(mesh: Mesh, n: int, k: int, packed: bool = False,
+                   sentinel: bool = False):
+    """Returns a function (indices, mask, frontier0) -> counts (F,).
+
+    indices/mask: (N, max_deg) ELL rows (row-sharded over "data");
+    frontier0:    (N, F) one-hot seeds (int8; F sharded over pod+model).
+
+    packed=True — GraphBLAS *bitmap format* on the query axis: 8 queries per
+    byte. The or_and semiring over {0,1} is bitwise, so the per-hop frontier
+    all-gather and the neighbor gathers move 8x fewer bytes (§Perf GE-1).
+
+    sentinel=True — padded slots point at a dedicated all-zero row (index n)
+    instead of carrying a validity mask: the mask array and its `where` op
+    disappear from the hop loop (§Perf GE-2). The mask input is ignored.
+    """
+    fr_axes = tuple(a for a in ("pod", "model") if a in mesh.axis_names)
+
+    def body(idx_l, msk_l, seed_l):
+        # seed_l: (N/data, F_l) this shard's rows of the one-hot frontier
+        if packed:
+            # pack query bits: (rows, F_l) int8 -> (rows, ceil(F_l/8)) uint8
+            rows, fl = seed_l.shape
+            pad = (-fl) % 8
+            bits = jnp.pad(seed_l, ((0, 0), (0, pad)))
+            bits = bits.reshape(rows, (fl + pad) // 8, 8).astype(jnp.uint8)
+            weights = (1 << jnp.arange(8, dtype=jnp.uint8))
+            frontier = (bits * weights).sum(axis=-1).astype(jnp.uint8)
+        else:
+            frontier = seed_l
+        visited = frontier
+
+        for _ in range(k):
+            x_full = jax.lax.all_gather(frontier, "data", axis=0, tiled=True)
+            if sentinel:
+                # padded slots index row n: append one zero row, skip masking
+                x_full = jnp.concatenate(
+                    [x_full, jnp.zeros((1,) + x_full.shape[1:], x_full.dtype)],
+                    axis=0)
+            gathered = x_full[idx_l]                      # (rows, deg, F')
+            if packed:
+                if not sentinel:
+                    gathered = jnp.where(msk_l[..., None], gathered,
+                                         jnp.uint8(0))
+                nxt = jax.lax.reduce(
+                    gathered, jnp.uint8(0), jax.lax.bitwise_or, (1,))
+                nxt = jnp.bitwise_and(nxt, jnp.bitwise_not(visited))
+                visited = jnp.bitwise_or(visited, nxt)
+            else:
+                if not sentinel:
+                    gathered = jnp.where(msk_l[..., None], gathered, 0)
+                nxt = gathered.max(axis=1)
+                nxt = jnp.where(visited > 0, 0, nxt).astype(jnp.int8)
+                visited = jnp.maximum(visited, nxt)
+            frontier = nxt
+
+        if packed:
+            # unpack once at the end: count_j = popcount(visited bit j) - seed
+            shifts = jnp.arange(8, dtype=jnp.uint8)
+            per_bit = (visited[:, :, None] >> shifts) & jnp.uint8(1)
+            count = per_bit.astype(jnp.int32).sum(axis=0).reshape(-1)
+            count = count[: seed_l.shape[1]]              # drop bit padding
+        else:
+            count = visited.astype(jnp.int32).sum(axis=0)
+        # rows are sharded over "data": total count sums across row shards
+        count = jax.lax.psum(count, "data") - 1           # exclude the seed
+        return count
+
+    fr_spec = P("data", fr_axes if len(fr_axes) > 1 else (fr_axes[0] if fr_axes else None))
+    out_spec = P(fr_axes if len(fr_axes) > 1 else (fr_axes[0] if fr_axes else None))
+    f = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P("data", None), P("data", None), fr_spec),
+        out_specs=out_spec,
+        check_vma=False)
+    return f
+
+
+def pagerank_2d(mesh: Mesh, n: int, iters: int, alpha: float = 0.85,
+                push_dtype=None):
+    """Distributed PageRank on the same row-sharded ELL layout (plus_times
+    semiring): per iteration one frontier all-gather over "data" + local
+    gather-reduce + dangling-mass psum. Returns fn(indices, mask, out_deg).
+
+    indices/mask: (N, max_deg) rows of A^T (in-neighbors), "data"-sharded;
+    out_deg: (N,) f32, "data"-sharded. Result: ranks (N,) "data"-sharded.
+
+    push_dtype=bf16 (§Perf GE-4): the all-gathered push vector is the
+    collective payload; ranks sum in f32 locally, so bf16 on the wire halves
+    collective bytes at ~3 decimal digits of rank precision.
+    """
+
+    def body(idx_l, msk_l, deg_l):
+        rows = idx_l.shape[0]
+        r_l = jnp.full((rows,), 1.0 / n, jnp.float32)
+        inv_deg_l = jnp.where(deg_l > 0, 1.0 / jnp.maximum(deg_l, 1e-30), 0.0)
+        dangling_l = deg_l == 0
+
+        for _ in range(iters):
+            push_l = r_l * inv_deg_l
+            if push_dtype is not None:
+                push_l = push_l.astype(push_dtype)
+            push = jax.lax.all_gather(push_l, "data", axis=0, tiled=True)
+            # convert only inside the reduce (f32 accumulator): converting
+            # the gathered values eagerly makes XLA hoist the f32 cast above
+            # the all-gather, silently doubling the wire bytes (§Perf GE-4).
+            gathered = jnp.where(msk_l, push[idx_l],
+                                 jnp.zeros((), push.dtype))
+            pulled_l = jnp.sum(gathered, axis=1, dtype=jnp.float32)
+            dmass = jax.lax.psum(
+                jnp.sum(jnp.where(dangling_l, r_l, 0.0)), "data") / n
+            r_l = (1.0 - alpha) / n + alpha * (pulled_l + dmass)
+        return r_l
+
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P("data", None), P("data", None), P("data")),
+        out_specs=P("data"),
+        check_vma=False)
+
+
+def sssp_2d(mesh: Mesh, n: int, iters: int):
+    """Distributed Bellman-Ford over min_plus on the row-sharded ELL layout —
+    the third core semiring on the mesh (or_and: khop; plus_times: pagerank).
+
+    Returns fn(indices, mask, weights, dist0):
+      indices/mask/weights: (N, max_deg) rows of A^T (in-neighbor edges,
+      w(j->i) at row i), "data"-sharded; dist0: (N, F) seed distances
+      (inf except 0 at seeds), F sharded over pod+model.
+    """
+    fr_axes = tuple(a for a in ("pod", "model") if a in mesh.axis_names)
+
+    def body(idx_l, msk_l, w_l, dist_l):
+        for _ in range(iters):
+            dist = jax.lax.all_gather(dist_l, "data", axis=0, tiled=True)
+            cand = dist[idx_l] + w_l[..., None]            # (rows, deg, F_l)
+            cand = jnp.where(msk_l[..., None], cand, jnp.inf)
+            relaxed = cand.min(axis=1)
+            dist_l = jnp.minimum(dist_l, relaxed)
+        return dist_l
+
+    fr = fr_axes if len(fr_axes) > 1 else (fr_axes[0] if fr_axes else None)
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P("data", None), P("data", None), P("data", None),
+                  P("data", fr)),
+        out_specs=P("data", fr),
+        check_vma=False)
+
+
+def input_specs_2d(n: int, max_deg: int, f: int):
+    """ShapeDtypeStruct stand-ins for the distributed k-hop dry-run."""
+    return (jax.ShapeDtypeStruct((n, max_deg), jnp.int32),
+            jax.ShapeDtypeStruct((n, max_deg), jnp.bool_),
+            jax.ShapeDtypeStruct((n, f), jnp.int8))
+
+
+def shardings_2d(mesh: Mesh, n: int, max_deg: int, f: int):
+    fr_axes = tuple(a for a in ("pod", "model") if a in mesh.axis_names)
+    fr = fr_axes if len(fr_axes) > 1 else (fr_axes[0] if fr_axes else None)
+    return (NamedSharding(mesh, P("data", None)),
+            NamedSharding(mesh, P("data", None)),
+            NamedSharding(mesh, P("data", fr)))

@@ -1,0 +1,105 @@
+"""Logical-axis sharding context (MaxText-style logical axis rules).
+
+Model code annotates activations with *logical* axes ("batch", "seq",
+"embed", ...); the active ShardCtx maps them onto mesh axes and applies
+with_sharding_constraint. With no context set (unit tests, single-device
+smoke runs) every annotation is a no-op, keeping model code mesh-agnostic.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> mesh axes (tuples tried in full, then progressively dropped
+# if the dimension size isn't divisible by the axis-group product)
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "seq": (),                 # sequence replicated by default; SP opts in
+    "seq_shard": "skip",       # §Perf T1: forced q seq-sharding made GSPMD
+                               # re-replicate per layer; leave to propagation
+    "seq_full": ("pod", "data", "model"),  # long-context decode KV
+    "embed": ("model",),
+    "ff": ("model",),
+    "heads": ("model",),
+    "kv_heads": (),
+    "head_dim": ("model",),
+    "vocab": ("model",),
+    "expert": ("model",),
+    "none": (),
+}
+
+_CTX: Optional["ShardCtx"] = None
+
+
+class ShardCtx:
+    def __init__(self, mesh: Mesh, rules: Optional[dict] = None):
+        self.mesh = mesh
+        self.rules = dict(DEFAULT_RULES)
+        if rules:
+            self.rules.update(rules)
+
+    def axes_for(self, logical: Optional[str], dim_size: int):
+        if logical is None:
+            return None
+        group = self.rules.get(logical, ())
+        if group == "skip":
+            return None
+        group = tuple(a for a in group if a in self.mesh.axis_names)
+        # drop leading axes until the group divides the dimension
+        while group:
+            prod = 1
+            for a in group:
+                prod *= self.mesh.shape[a]
+            if prod <= dim_size and dim_size % prod == 0:
+                return group if len(group) > 1 else group[0]
+            group = group[1:]
+        return None
+
+    def pspec(self, shape, *logical) -> P:
+        assert len(logical) == len(shape), (shape, logical)
+        spec = []
+        used = set()
+        for l, s in zip(logical, shape):
+            axes = self.axes_for(l, s)
+            group = axes if isinstance(axes, tuple) else (axes,) if axes else ()
+            if any(a in used for a in group):
+                axes = None          # a mesh axis shards at most one dim:
+                group = ()           # first logical annotation wins
+            used.update(group)
+            spec.append(axes)
+        return P(*spec)
+
+    def constrain(self, x, *logical):
+        # rule value "skip": leave the tensor entirely unconstrained (no
+        # with_sharding_constraint op at all) — lets GSPMD propagate freely.
+        if any(self.rules.get(l) == "skip" for l in logical if l):
+            return x
+        spec = self.pspec(x.shape, *logical)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+
+def get() -> Optional[ShardCtx]:
+    return _CTX
+
+
+@contextlib.contextmanager
+def use(ctx: Optional[ShardCtx]):
+    global _CTX
+    prev = _CTX
+    _CTX = ctx
+    try:
+        yield ctx
+    finally:
+        _CTX = prev
+
+
+def shard(x, *logical):
+    """Annotate activation x with logical axes; no-op without a ShardCtx."""
+    ctx = get()
+    if ctx is None:
+        return x
+    return ctx.constrain(x, *logical)

@@ -1,0 +1,181 @@
+"""Sharding policy: params / inputs / caches -> PartitionSpecs on the mesh.
+
+Scheme (DESIGN.md §5): 2D FSDP x TP for LM weights — "model" on the last
+divisible dim (column parallel), the data axis-group on the largest remaining
+divisible dim (FSDP); stacked layer dims (scan) never shard. Embeddings are
+special-cased so logits come out vocab-sharded on "model". Optimizer state
+inherits its parameter's spec. Caches: batch -> data group, sequence -> the
+largest remaining group (flash-decode style; batch=1 long-context shards the
+sequence over the whole mesh).
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def data_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _prod(mesh: Mesh, axes) -> int:
+    p = 1
+    for a in axes:
+        p *= mesh.shape[a]
+    return p
+
+
+def _fits(dim: int, size: int) -> bool:
+    return dim >= size and dim % size == 0
+
+
+STACKED = re.compile(r"(layers|segments|enc_layers|dec_layers|seg\d+)")
+EMBED = re.compile(r"(embed|tok|out)\b|vision_proj|front_proj")
+# Row-parallel (Megatron pairing, §Perf T5): these matrices CONSUME a
+# model-sharded activation (ff hidden / attention heads), so "model" must sit
+# on their contraction (second-to-last) dim; the generic greedy would put it
+# on the output dim and force GSPMD to all-gather the hidden per layer.
+ROW_PARALLEL = re.compile(r"\['(wd|wo|wcv|out_proj)'\]")
+
+
+def param_pspec(path: str, shape, mesh: Mesh, vocab: Optional[int] = None) -> P:
+    ndim = len(shape)
+    spec = [None] * ndim
+    if ndim == 0:
+        return P()
+    skip = set()
+    if STACKED.search(path):
+        skip.add(0)
+    model = mesh.shape["model"]
+    dgroup = data_axes(mesh)
+    dsize = _prod(mesh, dgroup)
+
+    # embeddings: model on the vocab-sized dim -> vocab-sharded logits
+    if EMBED.search(path) and vocab is not None and vocab in shape:
+        vdim = shape.index(vocab)
+        if _fits(shape[vdim], model):
+            spec[vdim] = "model"
+        for i in reversed(range(ndim)):
+            if i != vdim and i not in skip and _fits(shape[i], dsize):
+                spec[i] = dgroup if len(dgroup) > 1 else dgroup[0]
+                break
+        return P(*spec)
+
+    # row-parallel down/out projections: model on the contraction dim
+    if ROW_PARALLEL.search(path) and ndim >= 2 and _fits(shape[-2], model):
+        spec[-2] = "model"
+        if _fits(shape[-1], dsize):
+            spec[-1] = dgroup if len(dgroup) > 1 else dgroup[0]
+        return P(*spec)
+
+    # generic greedy: model -> last divisible dim; data -> largest remaining
+    mdim = None
+    for i in reversed(range(ndim)):
+        if i not in skip and _fits(shape[i], model):
+            mdim = i
+            spec[i] = "model"
+            break
+    best, best_sz = None, 0
+    for i in range(ndim):
+        if i in skip or i == mdim:
+            continue
+        if _fits(shape[i], dsize) and shape[i] > best_sz:
+            best, best_sz = i, shape[i]
+    if best is not None:
+        spec[best] = dgroup if len(dgroup) > 1 else dgroup[0]
+    return P(*spec)
+
+
+def param_shardings(param_specs_tree, mesh: Mesh, vocab: Optional[int] = None):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(param_specs_tree)
+    out = []
+    for kp, leaf in flat:
+        spec = param_pspec(jax.tree_util.keystr(kp), leaf.shape, mesh, vocab)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def batch_pspec(shape, mesh: Mesh) -> P:
+    """Input batches: dim0 = batch over the data group (when divisible)."""
+    dgroup = data_axes(mesh)
+    spec = [None] * len(shape)
+    if shape and _fits(shape[0], _prod(mesh, dgroup)):
+        spec[0] = dgroup if len(dgroup) > 1 else dgroup[0]
+    elif shape and "data" in mesh.axis_names and _fits(shape[0], mesh.shape["data"]):
+        spec[0] = "data"
+    return P(*spec)
+
+
+def batch_shardings(batch_specs, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, batch_pspec(s.shape, mesh)), batch_specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def cache_pspec(shape, mesh: Mesh, batch: int, seq_to_model: bool = True) -> P:
+    """KV caches / recurrent states.
+
+    batch > 1 : batch dim -> data group; longest (sequence) dim -> "model".
+    batch == 1: longest dim -> the whole mesh (pod x data x model) — the
+    long_500k layout; every chip holds a slice of the one sequence.
+    """
+    ndim = len(shape)
+    spec = [None] * ndim
+    dgroup = data_axes(mesh)
+    model = mesh.shape["model"]
+    used = set()
+    if batch > 1:
+        for i, d in enumerate(shape):
+            if d == batch and _fits(d, _prod(mesh, dgroup)):
+                spec[i] = dgroup if len(dgroup) > 1 else dgroup[0]
+                used.add(i)
+                break
+        if seq_to_model:
+            # largest remaining dim gets "model"
+            cands = [(d, i) for i, d in enumerate(shape)
+                     if i not in used and i != 0 and _fits(d, model)]
+            if cands:
+                d, i = max(cands)
+                spec[i] = "model"
+    else:
+        all_axes = dgroup + ("model",)
+        total = _prod(mesh, all_axes)
+        cands = [(d, i) for i, d in enumerate(shape) if i != 0 and _fits(d, total)]
+        if cands:
+            d, i = max(cands)
+            spec[i] = all_axes
+        else:
+            cands = [(d, i) for i, d in enumerate(shape)
+                     if i != 0 and _fits(d, model)]
+            if cands:
+                d, i = max(cands)
+                spec[i] = "model"
+    return P(*spec)
+
+
+def cache_shardings(cache_specs_tree, mesh: Mesh, batch: int,
+                    seq_to_model: bool = True):
+    return jax.tree.map(
+        lambda s: NamedSharding(
+            mesh, cache_pspec(s.shape, mesh, batch, seq_to_model)),
+        cache_specs_tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def opt_state_shardings(opt_state_specs, mesh: Mesh,
+                        vocab: Optional[int] = None):
+    """Optimizer moments shard like their parameters (same shapes -> same
+    inference); factored Adafactor rows/cols and scalars get their own."""
+
+    def one(path, leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, param_pspec(path, leaf.shape, mesh, vocab))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(opt_state_specs)
+    out = [one(jax.tree_util.keystr(kp), leaf) for kp, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,6 @@
+from repro.engine.database import Database, MutableGraph
+from repro.engine.persistence import load_snapshot, save_snapshot
+from repro.engine.server import QueryServer
+
+__all__ = ["Database", "MutableGraph", "QueryServer",
+           "load_snapshot", "save_snapshot"]

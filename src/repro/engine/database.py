@@ -1,0 +1,130 @@
+"""The database shell: named graphs + query routing (GRAPH.QUERY analog).
+
+Mutations (CREATE) stage host-side edits; reads rebuild the frozen matrix set
+lazily (Redis fork-snapshot spirit: readers always see an immutable build).
+Every mutating command is appended to the AOF before acking — replay after a
+crash restores the graph (persistence.py).
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.graph.graph import Graph, GraphBuilder
+from repro.query import qast as A
+from repro.query.executor import Result, execute, explain
+from repro.query.parser import parse
+
+
+class MutableGraph:
+    def __init__(self, n_hint: int = 16):
+        self.next_id = 0
+        self.labels: Dict[str, list] = {}
+        self.props: Dict[str, dict] = {}
+        self.edges: list = []           # (rel, src, dst)
+        self._built: Optional[Graph] = None
+        self.fmt = "auto"
+        self.block = 64
+
+    # -- mutations -------------------------------------------------------------
+    def create_node(self, label: Optional[str], props: dict) -> int:
+        nid = int(props["id"])
+        self.next_id = max(self.next_id, nid + 1)
+        if label:
+            self.labels.setdefault(label, []).append(nid)
+        for k, v in props.items():
+            if k != "id":
+                self.props.setdefault(k, {})[nid] = float(v)
+        self._built = None
+        return nid
+
+    def create_edge(self, src: int, rel: str, dst: int) -> None:
+        self.next_id = max(self.next_id, src + 1, dst + 1)
+        self.edges.append((rel, int(src), int(dst)))
+        self._built = None
+
+    # -- reads -------------------------------------------------------------------
+    def freeze(self) -> Graph:
+        if self._built is None:
+            n = max(self.next_id, 1)
+            b = GraphBuilder(n)
+            for label, ids in self.labels.items():
+                b.add_label(label, ids)
+            for prop, kv in self.props.items():
+                b.set_prop(prop, list(kv.keys()), list(kv.values()))
+            by_rel: Dict[str, list] = {}
+            for rel, s, d in self.edges:
+                by_rel.setdefault(rel, []).append((s, d))
+            for rel, pairs in by_rel.items():
+                arr = np.asarray(pairs, dtype=np.int64)
+                b.add_edges(rel, arr[:, 0], arr[:, 1])
+            self._built = b.build(fmt=self.fmt, block=self.block)
+        return self._built
+
+
+class Database:
+    def __init__(self, data_dir: Optional[str] = None):
+        self.graphs: Dict[str, MutableGraph] = {}
+        self.data_dir = data_dir
+        if data_dir:
+            os.makedirs(data_dir, exist_ok=True)
+            self._replay_aof()
+
+    def _graph(self, name: str) -> MutableGraph:
+        return self.graphs.setdefault(name, MutableGraph())
+
+    # -- commands ------------------------------------------------------------
+    def query(self, name: str, text: str, impl: str = "auto") -> Result:
+        q = parse(text)
+        if isinstance(q, A.CreateQuery):
+            self._append_aof(name, text)
+            return self._apply_create(name, q)
+        return execute(self._graph(name).freeze(), q, impl=impl)
+
+    def explain(self, name: str, text: str) -> str:
+        return explain(self._graph(name).freeze(), text)
+
+    def load_graph(self, name: str, graph_or_builder) -> None:
+        """Bulk load a pre-built Graph (datagen path)."""
+        mg = self._graph(name)
+        g = graph_or_builder
+        mg._built = g
+        mg.next_id = g.n
+
+    def _apply_create(self, name: str, q: A.CreateQuery) -> Result:
+        mg = self._graph(name)
+        created_n = created_e = 0
+        for item in q.items:
+            if isinstance(item, A.CreateNode):
+                mg.create_node(item.label, item.props)
+                created_n += 1
+            else:
+                mg.create_edge(item.src, item.rel, item.dst)
+                created_e += 1
+        return Result(["nodes_created", "edges_created"],
+                      [(created_n, created_e)])
+
+    # -- persistence (AOF) ------------------------------------------------------
+    def _aof_path(self, name: str) -> str:
+        return os.path.join(self.data_dir, f"{name}.aof")
+
+    def _append_aof(self, name: str, text: str) -> None:
+        if not self.data_dir:
+            return
+        with open(self._aof_path(name), "a") as f:
+            f.write(text.replace("\n", " ") + "\n")
+            f.flush()
+            os.fsync(f.fileno())
+
+    def _replay_aof(self) -> None:
+        for fn in sorted(os.listdir(self.data_dir)):
+            if not fn.endswith(".aof"):
+                continue
+            name = fn[: -len(".aof")]
+            with open(os.path.join(self.data_dir, fn)) as f:
+                for line in f:
+                    line = line.strip()
+                    if line:
+                        self._apply_create(name, parse(line))

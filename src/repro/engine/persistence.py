@@ -1,0 +1,61 @@
+"""RDB-analog snapshots: full binary dump of a frozen Graph (npz + manifest).
+
+Snapshot + AOF tail = Redis-style point-in-time recovery: restore the
+snapshot, then replay AOF entries appended after it.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Optional
+
+import numpy as np
+
+from repro.graph.graph import Graph, GraphBuilder
+
+
+def save_snapshot(graph: Graph, path: str) -> None:
+    """Atomic (write-temp + rename) snapshot — crash-safe like Redis RDB."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    payload = {"n": np.asarray(graph.n)}
+    manifest = {"n": graph.n, "relations": [], "labels": [], "props": []}
+    for name, rel in graph.relations.items():
+        r, c, v = rel.A.to_coo()
+        payload[f"rel_{name}_r"] = r
+        payload[f"rel_{name}_c"] = c
+        payload[f"rel_{name}_v"] = v
+        manifest["relations"].append(name)
+    for name, mask in graph.labels.items():
+        payload[f"label_{name}"] = np.asarray(mask)
+        manifest["labels"].append(name)
+    for name, col in graph.node_props.items():
+        payload[f"prop_{name}"] = np.asarray(col)
+        manifest["props"].append(name)
+    payload["manifest"] = np.frombuffer(
+        json.dumps(manifest).encode(), dtype=np.uint8)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                               suffix=".tmp")
+    os.close(fd)
+    with open(tmp, "wb") as f:
+        np.savez_compressed(f, **payload)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def load_snapshot(path: str, fmt: str = "auto", block: int = 64) -> Graph:
+    with np.load(path) as z:
+        manifest = json.loads(bytes(z["manifest"]).decode())
+        n = manifest["n"]
+        b = GraphBuilder(n)
+        for name in manifest["labels"]:
+            b.add_label(name, np.nonzero(z[f"label_{name}"])[0])
+        for name in manifest["props"]:
+            col = z[f"prop_{name}"]
+            ids = np.nonzero(~np.isnan(col))[0]
+            b.set_prop(name, ids, col[ids])
+        for name in manifest["relations"]:
+            b.add_edges(name, z[f"rel_{name}_r"], z[f"rel_{name}_c"],
+                        z[f"rel_{name}_v"])
+        return b.build(fmt=fmt, block=block)

@@ -1,0 +1,145 @@
+"""Batched query server — the TPU analog of RedisGraph's threadpool.
+
+RedisGraph: the Redis main thread accepts queries; a threadpool of W workers
+executes them one-query-one-thread for throughput.  TPU analog: an accept
+queue groups *pattern-compatible* queries (same plan signature, different
+seeds) and executes each group as ONE batched frontier traversal — the F
+dimension of the frontier matrix is the threadpool width.  Incompatible
+queries fall back to solo execution (a width-1 batch).
+
+This is the serving driver used by examples/serve_queries.py and the
+throughput benchmark (the paper's "reads scale easily" claim).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.graph.graph import Graph
+from repro.query import qast as A
+from repro.query.executor import Result, _node_mask, _project, execute
+from repro.query.parser import parse
+from repro.query.planner import Plan, plan
+
+import jax.numpy as jnp
+
+from repro.core import ops, semiring as S
+from repro.query.executor import _expand
+
+
+@dataclasses.dataclass
+class Submitted:
+    qid: int
+    plan: Plan
+    result: Optional[Result] = None
+    latency_s: float = 0.0
+
+
+def _signature(p: Plan):
+    return (p.src_var, p.src_label,
+            tuple((e.rel, e.direction, e.min_hops, e.max_hops,
+                   e.dst_var, e.dst_label) for e in p.expands),
+            p.semiring,
+            tuple((r.kind, r.var, r.prop, r.distinct, r.alias)
+                  for r in p.returns),
+            p.limit,
+            tuple(sorted((v, len(ps)) for v, ps in p.var_preds.items())))
+
+
+class QueryServer:
+    def __init__(self, graph: Graph, impl: str = "auto",
+                 max_batch: int = 512):
+        self.graph = graph
+        self.impl = impl
+        self.max_batch = max_batch
+        self._queue: List[Submitted] = []
+        self._next_id = 0
+        self.stats = {"batches": 0, "queries": 0, "solo": 0,
+                      "batched_width_total": 0}
+
+    def submit(self, text: str) -> int:
+        p = plan(parse(text))
+        s = Submitted(self._next_id, p)
+        self._next_id += 1
+        self._queue.append(s)
+        return s.qid
+
+    def flush(self) -> Dict[int, Result]:
+        """Execute everything queued; group compatible seeded queries."""
+        groups: Dict[tuple, List[Submitted]] = {}
+        solo: List[Submitted] = []
+        for s in self._queue:
+            if s.plan.seeds is not None:
+                groups.setdefault(_signature(s.plan), []).append(s)
+            else:
+                solo.append(s)
+        out: Dict[int, Result] = {}
+        for sig, members in groups.items():
+            for start in range(0, len(members), self.max_batch):
+                chunk = members[start:start + self.max_batch]
+                self._run_batch(chunk, out)
+        for s in solo:
+            t0 = time.perf_counter()
+            res = execute(self.graph, _requery(s.plan), impl=self.impl)
+            s.latency_s = time.perf_counter() - t0
+            out[s.qid] = res
+            self.stats["solo"] += 1
+            self.stats["queries"] += 1
+        self._queue.clear()
+        return out
+
+    def _run_batch(self, members: List[Submitted], out: Dict[int, Result]):
+        """One batched frontier traversal answers every member's query."""
+        g = self.graph
+        n = g.n
+        p0 = members[0].plan
+        t0 = time.perf_counter()
+
+        seed_lists = [sorted(set(m.plan.seeds)) for m in members]
+        flat = np.concatenate([np.asarray(s, np.int64) for s in seed_lists])
+        src_mask = _node_mask(g, p0.src_label, p0.var_preds.get(p0.src_var), n)
+        keep = src_mask[flat]
+
+        sr = S.get(p0.semiring)
+        f = len(flat)
+        B = jnp.zeros((n, f), dtype=jnp.float32)
+        cols = jnp.arange(f)
+        B = B.at[jnp.asarray(np.where(keep, flat, 0)), cols].set(
+            jnp.asarray(keep.astype(np.float32)))
+        for e in p0.expands:
+            dst_mask = _node_mask(g, e.dst_label, p0.var_preds.get(e.dst_var), n)
+            B = _expand(g, B, e, sr, dst_mask, self.impl)
+        B = np.asarray(B)
+
+        dt = time.perf_counter() - t0
+        off = 0
+        for m, seeds in zip(members, seed_lists):
+            w = len(seeds)
+            sub = B[:, off:off + w]
+            kept = np.asarray(seeds)[keep[off:off + w]]
+            subk = sub[:, keep[off:off + w]]
+            m.result = _project(g, m.plan, kept, jnp.asarray(subk))
+            m.latency_s = dt
+            out[m.qid] = m.result
+            off += w
+        self.stats["batches"] += 1
+        self.stats["queries"] += len(members)
+        self.stats["batched_width_total"] += f
+
+
+def _requery(p: Plan):
+    """Rebuild a MatchQuery from a plan (solo fallback path)."""
+    nodes = [A.NodePat(p.src_var, p.src_label, {})]
+    edges = []
+    for e in p.expands:
+        edges.append(A.EdgePat(None, e.rel, e.direction, e.min_hops, e.max_hops))
+        nodes.append(A.NodePat(e.dst_var, e.dst_label, {}))
+    where = []
+    for v, preds in p.var_preds.items():
+        where.extend(preds)
+    if p.seeds is not None:
+        where.append(A.InSeeds(p.src_var, list(p.seeds)))
+    return A.MatchQuery(nodes, edges, where, p.returns, p.limit)

@@ -1,0 +1,4 @@
+from repro.graph.graph import Graph, GraphBuilder, Relation
+from repro.graph import datagen
+
+__all__ = ["Graph", "GraphBuilder", "Relation", "datagen"]

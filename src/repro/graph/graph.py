@@ -1,0 +1,122 @@
+"""Property graph backed by sparse matrices — RedisGraph's data model.
+
+  * one boolean adjacency matrix per relationship type (+ the union matrix),
+  * one boolean diagonal (stored as a vector) per node label,
+  * numeric node properties as dense columns (value + presence),
+  * explicit transposes maintained per relation (RedisGraph does the same) so
+    vxm pulls never transpose at query time.
+
+Matrices live in BSR (MXU path) or ELL (hypersparse gather path); the format
+is chosen per relation by `core.ops.auto_format` unless forced.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import BSR, ELL, ops
+
+
+@dataclasses.dataclass
+class Relation:
+    name: str
+    A: object          # BSR | ELL — row i -> out-neighbors
+    A_T: object        # transpose, for pull-style vxm
+    nnz: int
+
+
+@dataclasses.dataclass
+class Graph:
+    n: int
+    relations: Dict[str, Relation]
+    labels: Dict[str, jnp.ndarray]             # label -> bool (n,)
+    node_props: Dict[str, jnp.ndarray]         # prop -> f32 (n,) (nan = absent)
+    adj: Optional[Relation] = None             # union over relation types
+
+    def relation(self, name: Optional[str]) -> Relation:
+        if name is None:
+            return self.adj
+        return self.relations[name]
+
+    def label_mask(self, label: Optional[str]) -> jnp.ndarray:
+        if label is None:
+            return jnp.ones(self.n, dtype=bool)
+        return self.labels[label]
+
+    @property
+    def nnz(self) -> int:
+        return sum(r.nnz for r in self.relations.values())
+
+
+class GraphBuilder:
+    """Accumulates nodes/edges host-side, then freezes into device matrices."""
+
+    def __init__(self, n: int):
+        self.n = n
+        self._edges: Dict[str, list] = {}
+        self._labels: Dict[str, np.ndarray] = {}
+        self._props: Dict[str, np.ndarray] = {}
+
+    def add_label(self, label: str, node_ids) -> "GraphBuilder":
+        mask = self._labels.setdefault(label, np.zeros(self.n, dtype=bool))
+        mask[np.asarray(node_ids)] = True
+        return self
+
+    def set_prop(self, prop: str, node_ids, values) -> "GraphBuilder":
+        col = self._props.setdefault(prop, np.full(self.n, np.nan, np.float32))
+        col[np.asarray(node_ids)] = np.asarray(values, dtype=np.float32)
+        return self
+
+    def add_edges(self, rel: str, src, dst, weights=None) -> "GraphBuilder":
+        src = np.asarray(src, dtype=np.int64)
+        dst = np.asarray(dst, dtype=np.int64)
+        w = (np.ones_like(src, dtype=np.float32) if weights is None
+             else np.asarray(weights, dtype=np.float32))
+        self._edges.setdefault(rel, []).append((src, dst, w))
+        return self
+
+    def build(self, fmt: str = "auto", block: int = 128) -> Graph:
+        relations = {}
+        all_src, all_dst = [], []
+        for rel, chunks in self._edges.items():
+            src = np.concatenate([c[0] for c in chunks])
+            dst = np.concatenate([c[1] for c in chunks])
+            w = np.concatenate([c[2] for c in chunks])
+            src, dst, w = _dedup(src, dst, w, self.n)
+            relations[rel] = Relation(
+                rel,
+                _make(src, dst, w, self.n, fmt, block),
+                _make(dst, src, w, self.n, fmt, block),
+                nnz=len(src))
+            all_src.append(src)
+            all_dst.append(dst)
+        adj = None
+        if all_src:
+            s = np.concatenate(all_src)
+            d = np.concatenate(all_dst)
+            s, d, w = _dedup(s, d, np.ones_like(s, np.float32), self.n)
+            adj = Relation("", _make(s, d, w, self.n, fmt, block),
+                           _make(d, s, w, self.n, fmt, block), nnz=len(s))
+        return Graph(
+            n=self.n,
+            relations=relations,
+            labels={k: jnp.asarray(v) for k, v in self._labels.items()},
+            node_props={k: jnp.asarray(v) for k, v in self._props.items()},
+            adj=adj)
+
+
+def _dedup(src, dst, w, n):
+    key = src * n + dst
+    _, idx = np.unique(key, return_index=True)
+    return src[idx], dst[idx], w[idx]
+
+
+def _make(src, dst, w, n, fmt, block):
+    if fmt == "bsr":
+        return BSR.from_coo(src, dst, w, (n, n), block=block)
+    if fmt == "ell":
+        return ELL.from_coo(src, dst, w, (n, n))
+    return ops.auto_format(src, dst, w, (n, n), block=block)

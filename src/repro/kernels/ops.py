@@ -1,0 +1,29 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels run in interpret mode — the kernel body
+executes in Python for correctness validation; on TPU backends the same call
+compiles to Mosaic. `interpret` is resolved from the default backend unless
+forced.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import semiring as S
+from repro.core.bsr import BSR
+from repro.kernels import bsr_mxm as _bsr
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def bsr_mxm(A: BSR, X: jnp.ndarray, sr: S.Semiring, *,
+            mask: jnp.ndarray | None = None, complement: bool = False,
+            f_tile: int = _bsr.DEFAULT_F_TILE,
+            interpret: bool | None = None) -> jnp.ndarray:
+    if interpret is None:
+        interpret = _interpret_default()
+    return _bsr.bsr_mxm(A, X, sr, mask=mask, complement=complement,
+                        f_tile=f_tile, interpret=interpret)

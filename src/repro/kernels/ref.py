@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the Pallas kernels: densify + semiring.dense_mxm."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import semiring as S
+from repro.core.bsr import BSR
+
+
+def bsr_mxm_ref(A: BSR, X: jnp.ndarray, sr: S.Semiring, *,
+                mask: jnp.ndarray | None = None,
+                complement: bool = False) -> jnp.ndarray:
+    D = A.to_dense()
+    y = S.dense_mxm(S.structural_dense(D, sr), X, sr)
+    if mask is not None:
+        keep = (mask == 0) if complement else (mask != 0)
+        y = jnp.where(keep, y, np.float32(sr.identity))
+    return y

@@ -1,0 +1,399 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# (setdefault so tests can run reduced-device smoke dry-runs via env.)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces, without allocating any real tensors:
+  * compiled.memory_analysis()  -> does it fit 16 GB/chip,
+  * compiled.cost_analysis()    -> per-device HLO FLOPs / bytes,
+  * HLO-parsed collective bytes -> the roofline's collective term,
+and writes one JSON under experiments/dryrun/. benchmarks/roofline.py
+aggregates these into EXPERIMENTS.md §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both      # the full 40-cell grid
+  python -m repro.launch.dryrun --graph --mesh both    # paper-workload cells
+"""
+import argparse
+import json
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ARCHS, SHAPES, get_config, shapes_for
+from repro.distr import graph2d, sharding as sh
+from repro.distr.shardctx import ShardCtx, use
+from repro.launch.mesh import make_production_mesh
+from repro.models import get_model
+from repro.serve.serve_step import make_serve_step
+from repro.train import optimizer as opt_mod
+from repro.train.train_step import make_train_step
+
+# TPU v5e-class hardware constants (roofline denominators)
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # B/s / chip
+LINK_BW = 50e9             # B/s / link
+
+_COLL = re.compile(
+    r"(\w+)\[([\d,]*)\]\S*\s+(all-gather|all-reduce|reduce-scatter|"
+    r"all-to-all|collective-permute)", re.IGNORECASE)
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def collective_stats(hlo_text: str):
+    """Sum result-buffer bytes of every collective op in the partitioned HLO
+    (per-device convention; see EXPERIMENTS.md §Roofline)."""
+    by_kind = {}
+    total = 0
+    for m in _COLL.finditer(hlo_text):
+        dt, dims, kind = m.group(1), m.group(2), m.group(3).lower()
+        sz = _DTYPE_BYTES.get(dt, 4)
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        b = n * sz
+        e = by_kind.setdefault(kind, {"count": 0, "bytes": 0})
+        e["count"] += 1
+        e["bytes"] += b
+        total += b
+    return total, by_kind
+
+
+def mem_stats(compiled):
+    ma = compiled.memory_analysis()
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        out[k] = int(getattr(ma, k, 0) or 0)
+    out["peak_per_device_bytes"] = (out["argument_size_in_bytes"]
+                                    + out["temp_size_in_bytes"]
+                                    + out["output_size_in_bytes"]
+                                    - out["alias_size_in_bytes"])
+    return out
+
+
+def cost_stats(compiled):
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {"flops_per_device": float(ca.get("flops", 0.0)),
+            "bytes_per_device": float(ca.get("bytes accessed", 0.0))}
+
+
+def roofline(nchips, flops_dev, bytes_dev, coll_bytes_dev):
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    coll_s = coll_bytes_dev / LINK_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": coll_s}
+    dom = max(terms, key=terms.get)
+    terms["dominant"] = dom
+    terms["bound_s"] = terms[dom]
+    return terms
+
+
+# ---------------------------------------------------------------------------
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               seq_to_model: bool = True, rules: dict | None = None,
+               cfg=None):
+    cfg = cfg or get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = get_model(cfg)
+    ctx = ShardCtx(mesh, rules=rules)
+
+    pspecs = model.param_specs()
+    pshard = sh.param_shardings(pspecs, mesh, vocab=cfg.vocab)
+
+    with use(ctx):
+        if shape.kind == "train":
+            opt_cfg = opt_mod.OptConfig(name=cfg.optimizer)
+            ospecs = jax.eval_shape(opt_mod.init_fn(cfg.optimizer), pspecs)
+            oshard = sh.opt_state_shardings(ospecs, mesh, vocab=cfg.vocab)
+            bspecs = model.train_input_specs(shape)
+            bshard = sh.batch_shardings(bspecs, mesh)
+            import jax.numpy as _jnp
+            step = make_train_step(
+                model, opt_cfg, microbatches=cfg.microbatches,
+                accum_dtype={"float32": _jnp.float32,
+                             "bfloat16": _jnp.bfloat16}[cfg.grad_accum_dtype],
+                hoist_weight_gather=cfg.hoist_weight_gather)
+            mshard = jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                                  {"loss": 0, "grad_norm": 0, "lr": 0})
+            fn = jax.jit(step,
+                         in_shardings=(pshard, oshard, bshard),
+                         out_shardings=(pshard, oshard, mshard),
+                         donate_argnums=(0, 1))
+            lowered = fn.lower(pspecs, ospecs, bspecs)
+        elif shape.kind == "prefill":
+            bspecs = model.train_input_specs(shape)
+            bspecs.pop("labels", None)
+            bshard = sh.batch_shardings(bspecs, mesh)
+            fn = jax.jit(lambda p, b: model.prefill_fn(p, b)[0],
+                         in_shardings=(pshard, bshard))
+            lowered = fn.lower(pspecs, bspecs)
+        else:  # decode
+            cspecs = model.cache_specs(shape.global_batch, shape.seq_len)
+            cshard = sh.cache_shardings(cspecs, mesh, shape.global_batch,
+                                        seq_to_model=seq_to_model)
+            bspecs = model.decode_input_specs(shape)
+            bshard = sh.batch_shardings(bspecs, mesh)
+            pos = jax.ShapeDtypeStruct((), jnp.int32)
+            posshard = NamedSharding(mesh, P())
+            serve = make_serve_step(model)
+            tokshard = sh.batch_shardings(
+                {"t": jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)},
+                mesh)["t"]
+            fn = jax.jit(serve,
+                         in_shardings=(pshard, cshard, bshard, posshard),
+                         out_shardings=(tokshard, cshard),
+                         donate_argnums=(1,))
+            lowered = fn.lower(pspecs, cspecs, bspecs, pos)
+    return lowered, mesh, cfg, shape
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, outdir: str,
+             seq_to_model: bool = True, tag: str = "", rules=None):
+    t0 = time.time()
+    meshname = "pod2x16x16" if multi_pod else "pod16x16"
+    cell = f"{arch}__{shape_name}__{meshname}{tag}"
+    outpath = os.path.join(outdir, cell + ".json")
+    print(f"[dryrun] {cell} ...", flush=True)
+    try:
+        lowered, mesh, cfg, shape = lower_cell(arch, shape_name, multi_pod,
+                                               seq_to_model=seq_to_model,
+                                               rules=rules)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        nchips = int(np.prod(list(mesh.shape.values())))
+        cost = cost_stats(compiled)
+        mem = mem_stats(compiled)
+        coll_total, coll_kinds = collective_stats(compiled.as_text())
+        rl = roofline(nchips, cost["flops_per_device"],
+                      cost["bytes_per_device"], coll_total)
+        n_params = cfg.param_count()
+        n_active = cfg.active_param_count()
+        tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                       else 1)
+        model_flops = (6 if shape.kind == "train" else 2) * n_active * tokens
+        rec = {
+            "cell": cell, "arch": arch, "shape": shape_name,
+            "mesh": meshname, "chips": nchips, "kind": shape.kind,
+            "status": "ok",
+            "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+            "cost": cost, "memory": mem,
+            "collective_bytes_per_device": coll_total,
+            "collectives": coll_kinds,
+            "roofline": rl,
+            "n_params": n_params, "n_active_params": n_active,
+            "model_flops": model_flops,
+            "model_flops_per_device": model_flops / nchips,
+            "useful_flops_ratio": (model_flops / nchips)
+            / max(cost["flops_per_device"], 1.0),
+            "fits_hbm": mem["peak_per_device_bytes"] < 16e9,
+        }
+        print(f"  ok: compile {t_compile:.0f}s  "
+              f"dom={rl['dominant']} bound={rl['bound_s']*1e3:.2f}ms  "
+              f"mem={mem['peak_per_device_bytes']/1e9:.2f}GB", flush=True)
+    except Exception as e:  # record failures as cells too
+        rec = {"cell": cell, "arch": arch, "shape": shape_name,
+               "mesh": meshname, "status": "error",
+               "error": f"{type(e).__name__}: {e}"}
+        print(f"  ERROR: {type(e).__name__}: {str(e)[:300]}", flush=True)
+    os.makedirs(outdir, exist_ok=True)
+    with open(outpath, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+# -- the paper's own workload: distributed k-hop cells ---------------------------
+GRAPH_CELLS = {
+    # name: (n_vertices, max_deg buckets, F queries, k)
+    "graph500_s21": (2_097_152, 64, 256, 2),
+    "twitter41m": (41_600_000, 64, 256, 2),
+}
+
+
+def run_graph_cell(name: str, multi_pod: bool, outdir: str,
+                   packed: bool = False, sentinel: bool = False):
+    t0 = time.time()
+    meshname = "pod2x16x16" if multi_pod else "pod16x16"
+    kind = "khop" + ("_bitmap" if packed else "") + \
+        ("_sentinel" if sentinel else "")
+    cell = f"graph_{name}__{kind}__{meshname}"
+    print(f"[dryrun] {cell} ...", flush=True)
+    n, max_deg, fq, k = GRAPH_CELLS[name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    try:
+        fn = graph2d.khop_counts_2d(mesh, n, k, packed=packed,
+                                    sentinel=sentinel)
+        specs = graph2d.input_specs_2d(n, max_deg, fq)
+        shards = graph2d.shardings_2d(mesh, n, max_deg, fq)
+        jfn = jax.jit(fn, in_shardings=shards)
+        lowered = jfn.lower(*specs)
+        compiled = lowered.compile()
+        nchips = int(np.prod(list(mesh.shape.values())))
+        cost = cost_stats(compiled)
+        mem = mem_stats(compiled)
+        coll_total, coll_kinds = collective_stats(compiled.as_text())
+        rl = roofline(nchips, cost["flops_per_device"],
+                      cost["bytes_per_device"], coll_total)
+        rec = {"cell": cell, "arch": f"graph_{name}", "shape": kind,
+               "mesh": meshname, "chips": nchips, "kind": "graph",
+               "status": "ok", "compile_s": round(time.time() - t0, 1),
+               "cost": cost, "memory": mem,
+               "collective_bytes_per_device": coll_total,
+               "collectives": coll_kinds, "roofline": rl,
+               "fits_hbm": mem["peak_per_device_bytes"] < 16e9}
+        print(f"  ok: dom={rl['dominant']} "
+              f"mem={mem['peak_per_device_bytes']/1e9:.2f}GB", flush=True)
+    except Exception as e:
+        rec = {"cell": cell, "status": "error",
+               "error": f"{type(e).__name__}: {e}"}
+        print(f"  ERROR: {str(e)[:300]}", flush=True)
+    os.makedirs(outdir, exist_ok=True)
+    with open(os.path.join(outdir, cell + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def run_pagerank_cell(name: str, multi_pod: bool, outdir: str,
+                      iters: int = 10):
+    t0 = time.time()
+    meshname = "pod2x16x16" if multi_pod else "pod16x16"
+    cell = f"graph_{name}__pagerank__{meshname}"
+    print(f"[dryrun] {cell} ...", flush=True)
+    n, max_deg, fq, k = GRAPH_CELLS[name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    try:
+        fn = graph2d.pagerank_2d(mesh, n, iters=iters)
+        specs = (jax.ShapeDtypeStruct((n, max_deg), jnp.int32),
+                 jax.ShapeDtypeStruct((n, max_deg), jnp.bool_),
+                 jax.ShapeDtypeStruct((n,), jnp.float32))
+        shards = (NamedSharding(mesh, P("data", None)),
+                  NamedSharding(mesh, P("data", None)),
+                  NamedSharding(mesh, P("data")))
+        compiled = jax.jit(fn, in_shardings=shards).lower(*specs).compile()
+        nchips = int(np.prod(list(mesh.shape.values())))
+        cost = cost_stats(compiled)
+        mem = mem_stats(compiled)
+        coll_total, coll_kinds = collective_stats(compiled.as_text())
+        rl = roofline(nchips, cost["flops_per_device"],
+                      cost["bytes_per_device"], coll_total)
+        rec = {"cell": cell, "arch": f"graph_{name}", "shape": "pagerank",
+               "mesh": meshname, "chips": nchips, "kind": "graph",
+               "status": "ok", "compile_s": round(time.time() - t0, 1),
+               "cost": cost, "memory": mem,
+               "collective_bytes_per_device": coll_total,
+               "collectives": coll_kinds, "roofline": rl,
+               "fits_hbm": mem["peak_per_device_bytes"] < 16e9}
+        print(f"  ok: dom={rl['dominant']} "
+              f"mem={mem['peak_per_device_bytes']/1e9:.2f}GB", flush=True)
+    except Exception as e:
+        rec = {"cell": cell, "status": "error",
+               "error": f"{type(e).__name__}: {e}"}
+        print(f"  ERROR: {str(e)[:300]}", flush=True)
+    os.makedirs(outdir, exist_ok=True)
+    with open(os.path.join(outdir, cell + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--graph", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--resume", action="store_true",
+                    help="skip cells whose JSON already exists and is ok")
+    ap.add_argument("--seq-to-model", default="1")
+    ap.add_argument("--rule", action="append", default=[],
+                    help="logical-axis rule override, e.g. seq_shard=skip "
+                         "or batch=pod,data (perf iterations)")
+    ap.add_argument("--tag", default="", help="suffix for output cell names")
+    args = ap.parse_args()
+
+    rules = {}
+    for r in args.rule:
+        k, v = r.split("=", 1)
+        rules[k] = "skip" if v == "skip" else tuple(a for a in v.split(",") if a)
+    rules = rules or None
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    ok = err = skip = 0
+
+    def done(cell):
+        p = os.path.join(args.out, cell + ".json")
+        if not os.path.exists(p):
+            return False
+        with open(p) as f:
+            return json.load(f).get("status") == "ok"
+
+    if args.graph:
+        # plus_times workload: distributed PageRank on the paper's graphs
+        for name in GRAPH_CELLS:
+            for mp in meshes:
+                meshname = "pod2x16x16" if mp else "pod16x16"
+                if args.resume and done(f"graph_{name}__pagerank__{meshname}"):
+                    skip += 1
+                    continue
+                rec = run_pagerank_cell(name, mp, args.out)
+                ok += rec.get("status") == "ok"
+                err += rec.get("status") != "ok"
+        for name in GRAPH_CELLS:
+            for packed, sentinel in ((False, False), (True, False),
+                                     (True, True)):
+                kindname = "khop" + ("_bitmap" if packed else "") + \
+                    ("_sentinel" if sentinel else "")
+                for mp in meshes:
+                    meshname = "pod2x16x16" if mp else "pod16x16"
+                    if args.resume and done(f"graph_{name}__{kindname}__{meshname}"):
+                        skip += 1
+                        continue
+                    rec = run_graph_cell(name, mp, args.out, packed=packed,
+                                         sentinel=sentinel)
+                    ok += rec.get("status") == "ok"
+                    err += rec.get("status") != "ok"
+    archs = ARCHS if args.all else ([args.arch] if args.arch else [])
+    for arch in archs:
+        cfg = get_config(arch)
+        shape_list = ([args.shape] if args.shape
+                      else [s.name for s in shapes_for(cfg)])
+        for shape_name in shape_list:
+            if shape_name in cfg.skip_shapes:
+                print(f"[dryrun] skip {arch} x {shape_name} (documented)")
+                continue
+            for mp in meshes:
+                meshname = "pod2x16x16" if mp else "pod16x16"
+                if args.resume and done(f"{arch}__{shape_name}__{meshname}"):
+                    skip += 1
+                    continue
+                rec = run_cell(arch, shape_name, mp, args.out,
+                               seq_to_model=args.seq_to_model == "1",
+                               tag=args.tag, rules=rules)
+                ok += rec.get("status") == "ok"
+                err += rec.get("status") != "ok"
+    print(f"[dryrun] done: {ok} ok, {err} errors, {skip} skipped(resume)")
+    sys.exit(1 if err else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Production meshes. Functions, not module constants: importing this module
+never touches jax device state (the dry-run sets XLA_FLAGS first)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever this host actually has (smoke tests, examples): 1D data mesh."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))

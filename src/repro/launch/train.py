@@ -1,0 +1,115 @@
+"""End-to-end training driver (the example e2e path runs this on CPU).
+
+Production path: sharded params on the host mesh, async checkpointing with
+atomic LATEST, restart-safe data stream, elastic resume (restore reshards
+onto whatever mesh the restarted job has), straggler note: at >1 pod the
+launcher runs one process per pod; a pod that misses `heartbeat_timeout` is
+declared dead and the job restarts from LATEST on the surviving pods
+(launch/elastic.py simulates the control flow).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b \
+      --tiny 1 --steps 20 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ShapeConfig, get_config
+from repro.models import get_model
+from repro.train import checkpoint as ckpt
+from repro.train import optimizer as opt_mod
+from repro.train.data import synthetic_batch
+from repro.train.train_step import make_train_step
+
+
+def tiny_config(cfg):
+    return dataclasses.replace(
+        cfg, n_layers=2, d_model=64, d_ff=128, vocab=251, n_heads=4,
+        n_kv_heads=2, head_dim=16, dtype="float32",
+        **({"n_experts": 4} if cfg.family == "moe" else {}),
+        **({"ssm_heads": 4} if cfg.family in ("rwkv6", "zamba2") else {}),
+        **({"encoder_layers": 2, "n_audio_frames": 8, "d_frontend": 16}
+           if cfg.family == "whisper" else {}),
+        **({"n_image_tokens": 4, "d_frontend": 16}
+           if cfg.family == "llava" else {}),
+        **({"shared_attn_every": 2, "ssm_state": 8, "n_layers": 4,
+            "n_heads": 4, "n_kv_heads": 4}
+           if cfg.family == "zamba2" else {}))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--tiny", type=int, default=1,
+                    help="reduced config (CPU scale); 0 = full config")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compress-grads", type=int, default=0)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.tiny:
+        cfg = tiny_config(cfg)
+    shape = ShapeConfig("cli", args.seq, args.batch, "train")
+    model = get_model(cfg)
+    opt_cfg = opt_mod.OptConfig(name=cfg.optimizer, lr=args.lr,
+                                warmup_steps=5, total_steps=args.steps)
+    params = model.init(0)
+    opt_state = opt_mod.init_fn(cfg.optimizer)(params)
+
+    start = 0
+    writer = None
+    if args.ckpt_dir:
+        writer = ckpt.AsyncCheckpointer(args.ckpt_dir)
+        if args.resume and ckpt.latest_step(args.ckpt_dir) is not None:
+            (params, opt_state), start = ckpt.restore(
+                (params, opt_state), args.ckpt_dir)
+            print(f"[train] resumed from step {start}")
+
+    step_fn = jax.jit(make_train_step(
+        model, opt_cfg, microbatches=args.microbatches,
+        compress_grads=bool(args.compress_grads)),
+        donate_argnums=(0, 1))
+    error_fb = (jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                if args.compress_grads else None)
+
+    losses = []
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch = synthetic_batch(cfg, shape, step)
+        batch = jax.tree.map(jnp.asarray, batch)
+        if args.compress_grads:
+            params, opt_state, metrics, error_fb = step_fn(
+                params, opt_state, batch, error_fb)
+        else:
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+        if step % 10 == 0 or step == args.steps - 1:
+            print(f"[train] step {step} loss {losses[-1]:.4f} "
+                  f"lr {float(metrics['lr']):.2e} "
+                  f"gnorm {float(metrics['grad_norm']):.3f}", flush=True)
+        if writer and (step + 1) % args.ckpt_every == 0:
+            writer.save((params, opt_state), step + 1)
+    if writer:
+        writer.save((params, opt_state), args.steps)
+        writer.wait()
+    dt = time.time() - t0
+    print(f"[train] done: {args.steps - start} steps in {dt:.1f}s; "
+          f"loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

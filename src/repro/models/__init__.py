@@ -1,0 +1,4 @@
+from repro.models.base import ModelBundle, init_from_specs
+from repro.models.registry import get_model
+
+__all__ = ["ModelBundle", "get_model", "init_from_specs"]

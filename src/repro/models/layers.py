@@ -1,0 +1,309 @@
+"""Shared transformer building blocks (functional, dict-of-arrays params).
+
+Attention uses a chunked online-softmax (flash-attention pattern) scan over
+KV blocks so the (S, T) score matrix is never materialized — mandatory for
+the 32k prefill shapes and HLO-compact (lax.scan) for fast SPMD compiles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distr.shardctx import shard
+
+NEG_INF = -1e30
+
+
+# -- helpers -------------------------------------------------------------------
+def spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def rmsnorm(x, w, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def softcap(x, cap: float):
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def rope(x, positions, theta: float):
+    """x: (..., S, n, h); positions: (S,) broadcast over batch/heads."""
+    h = x.shape[-1]
+    half = h // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[:, None].astype(jnp.float32) * freqs        # (S, half)
+    cos = jnp.cos(ang)[:, None, :]                              # (S, 1, half)
+    sin = jnp.sin(ang)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- attention ---------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class AttnFlavor:
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope_theta: float = 10_000.0
+    qkv_bias: bool = False
+    attn_softcap: float = 0.0
+    sliding_window: int = 0      # 0 = full
+    causal: bool = True
+    use_rope: bool = True
+
+
+def attn_specs(d_model: int, fl: AttnFlavor, dtype, prefix=()):
+    H, K, h = fl.n_heads, fl.n_kv_heads, fl.head_dim
+    p = {
+        "wq": spec((d_model, H * h), dtype),
+        "wk": spec((d_model, K * h), dtype),
+        "wv": spec((d_model, K * h), dtype),
+        "wo": spec((H * h, d_model), dtype),
+    }
+    if fl.qkv_bias:
+        p.update({"bq": spec((H * h,), dtype), "bk": spec((K * h,), dtype),
+                  "bv": spec((K * h,), dtype)})
+    return p
+
+
+def _proj_qkv(p, x, fl: AttnFlavor):
+    B, S, _ = x.shape
+    H, K, h = fl.n_heads, fl.n_kv_heads, fl.head_dim
+    q = x @ p["wq"] + (p.get("bq", 0))
+    k = x @ p["wk"] + (p.get("bk", 0))
+    v = x @ p["wv"] + (p.get("bv", 0))
+    return (q.reshape(B, S, K, H // K, h), k.reshape(B, S, K, h),
+            v.reshape(B, S, K, h))
+
+
+def chunked_attention(q, k, v, *, q_positions, kv_positions, fl: AttnFlavor,
+                      kv_chunk: int = 1024, softcap_val: float = 0.0,
+                      window_runtime=None):
+    """Online-softmax attention.
+
+    q: (B, S, K, G, h);  k, v: (B, T, K, h)
+    q_positions: (S,), kv_positions: (T,) — global token positions for the
+    causal / sliding-window masks (valid entries >= 0; padding marked -1).
+    """
+    B, S, K, G, h = q.shape
+    T = k.shape[1]
+    if S == 1:
+        # Decode: chunking buys nothing (the S x T score tensor is 1 x T) and
+        # the chunk reshape on a sequence-sharded KV cache forces GSPMD to
+        # all-gather the ENTIRE cache per layer (§Perf T3: 1.2 s collective
+        # on zamba2 long_500k). Single chunk keeps the cache sharded.
+        kv_chunk = 0
+    C = min(kv_chunk, T) if kv_chunk else T
+    pad = (-T) % C
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, (0, pad), constant_values=-1)
+    nchunks = (T + pad) // C
+    kc = k.reshape(B, nchunks, C, K, h).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nchunks, C, K, h).transpose(1, 0, 2, 3, 4)
+    pc = kv_positions.reshape(nchunks, C)
+
+    scale = 1.0 / np.sqrt(h)
+    qf = (q * scale).astype(jnp.float32)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kch, vch, pch = xs
+        logits = jnp.einsum("bskgh,bckh->bskgc", qf, kch.astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+        logits = softcap(logits, softcap_val)
+        valid = pch[None, :] >= 0                              # (1, C)
+        if fl.causal:
+            causal = q_positions[:, None] >= pch[None, :]      # (S, C)
+            valid = valid & causal
+        if fl.sliding_window:
+            inwin = q_positions[:, None] - pch[None, :] < fl.sliding_window
+            valid = valid & inwin
+        if window_runtime is not None:
+            # traced per-layer window (gemma2 local/global alternation, §Perf
+            # T8): a data-dependent mask instead of lax.cond'd twin attention
+            # branches, which duplicated every cache/attention buffer.
+            inwin = (q_positions[:, None] - pch[None, :]) < window_runtime
+            valid = valid & (jnp.asarray(window_runtime <= 0) | inwin)
+        logits = jnp.where(valid[None, :, None, None, :], logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        p_ = jnp.exp(logits - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p_.sum(axis=-1)
+        pv = jnp.einsum("bskgc,bckh->bskgh", p_, vch.astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+        acc = acc * alpha[..., None] + pv
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, S, K, G), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((B, S, K, G), dtype=jnp.float32)
+    a0 = jnp.zeros((B, S, K, G, h), dtype=jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc, vc, pc))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.astype(q.dtype)
+
+
+def attention(p, x, fl: AttnFlavor, *, positions, cache=None, cache_slot=None,
+              kv_positions=None, kv_chunk: int = 1024, window_runtime=None):
+    """Full attention layer.
+
+    Training/prefill: cache=None, positions (S,).
+    Decode: cache=(k,v) of (B, T, K, h); x is (B, 1, D); cache_slot is the
+    write index (ring-buffer slot for SWA archs); kv_positions (T,) gives the
+    *global* token position held by each cache slot (-1 = empty).
+    """
+    B, S, _ = x.shape
+    q, k, v = _proj_qkv(p, x, fl)
+    if fl.use_rope:
+        q = rope(q.reshape(B, S, -1, fl.head_dim), positions, fl.rope_theta
+                 ).reshape(q.shape)
+        k = rope(k, positions, fl.rope_theta)
+    if cache is None:
+        q = shard(q, "batch", "seq_shard", None, None, None)
+        out = chunked_attention(q, k, v, q_positions=positions,
+                                kv_positions=positions, fl=fl,
+                                kv_chunk=kv_chunk,
+                                window_runtime=window_runtime)
+    else:
+        ck, cv = cache
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype),
+                                                 cache_slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype),
+                                                 cache_slot, axis=1)
+        out = chunked_attention(q, ck, cv, q_positions=positions,
+                                kv_positions=kv_positions, fl=fl,
+                                kv_chunk=kv_chunk,
+                                window_runtime=window_runtime)
+        cache = (ck, cv)
+    out = out.reshape(B, S, fl.n_heads * fl.head_dim)
+    out = out @ p["wo"]
+    return (out, cache)
+
+
+def cache_kv_positions(pos, T: int, ring: bool):
+    """Global position held by each cache slot after writing step `pos`.
+
+    Linear cache: slot i holds position i (filled iff i <= pos).
+    Ring cache (SWA window == T): slot i holds the newest position p <= pos
+    with p % T == i.
+    """
+    idx = jnp.arange(T)
+    if not ring:
+        return jnp.where(idx <= pos, idx, -1)
+    p = pos - ((pos - idx) % T)
+    return jnp.where(p >= 0, p, -1)
+
+
+# -- MLPs --------------------------------------------------------------------------
+def mlp_specs(d_model: int, d_ff: int, kind: str, dtype):
+    if kind in ("swiglu", "geglu"):
+        return {"wg": spec((d_model, d_ff), dtype),
+                "wu": spec((d_model, d_ff), dtype),
+                "wd": spec((d_ff, d_model), dtype)}
+    return {"wu": spec((d_model, d_ff), dtype),
+            "wd": spec((d_ff, d_model), dtype)}
+
+
+def mlp(p, x, kind: str):
+    if kind == "swiglu":
+        hidden = jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])
+    elif kind == "geglu":
+        hidden = jax.nn.gelu(x @ p["wg"], approximate=True) * (x @ p["wu"])
+    else:
+        hidden = jax.nn.gelu(x @ p["wu"], approximate=True)
+    hidden = shard(hidden, "batch", None, "ff")
+    return hidden @ p["wd"]
+
+
+# -- MoE (mixtral / llama4) ----------------------------------------------------------
+def moe_specs(d_model: int, d_ff: int, n_experts: int, dtype):
+    return {"router": spec((d_model, n_experts), jnp.float32),
+            "wg": spec((n_experts, d_model, d_ff), dtype),
+            "wu": spec((n_experts, d_model, d_ff), dtype),
+            "wd": spec((n_experts, d_ff, d_model), dtype)}
+
+
+def moe_mlp(p, x, n_experts: int, top_k: int, capacity_factor: float = 1.25):
+    """Sort-based capacity dispatch, *local per batch row* (§Perf T2).
+
+    The routing mask is a block-sparse GraphBLAS mask — the paper-technique
+    analogue (DESIGN.md §4); dispatch scatter == BSR tile-list construction.
+
+    Dispatch is vmapped over the batch dim: each row argsorts only its own
+    S·k routing decisions, so the sort/scatter stay *local* to the data
+    shard. (A global argsort over B·S·k tokens is unshardable — GSPMD
+    replicates the dispatch buffers: mixtral train_4k peaked at 106 GB/device
+    at baseline. Local dispatch = per-(row, expert) capacity, standard
+    practice.) Expert FFNs run as one batched einsum — active-param FLOPs
+    only. Over-capacity tokens drop.
+    """
+    B, S, D = x.shape
+    cap = max(1, int(np.ceil(S * capacity_factor * top_k / n_experts)))
+
+    def dispatch_row(xt):                                       # (S, D)
+        logits = xt.astype(jnp.float32) @ p["router"]           # (S, E)
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_p, top_e = jax.lax.top_k(probs, top_k)              # (S, k)
+        top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+        flat_e = top_e.reshape(S * top_k)
+        flat_w = top_p.reshape(S * top_k)
+        order = jnp.argsort(flat_e, stable=True)
+        tok_of = order // top_k
+        e_sorted = flat_e[order]
+        w_sorted = flat_w[order]
+        counts = jnp.bincount(e_sorted, length=n_experts)
+        offsets = jnp.cumsum(counts) - counts
+        pos_in_e = jnp.arange(S * top_k) - offsets[e_sorted]
+        keep = pos_in_e < cap
+        slot = e_sorted * cap + jnp.where(keep, pos_in_e, 0)
+        xe = jnp.zeros((n_experts * cap, D), xt.dtype)
+        xe = xe.at[slot].add(jnp.where(keep[:, None], xt[tok_of], 0))
+        return xe.reshape(n_experts, cap, D), (slot, keep, w_sorted, tok_of)
+
+    def combine_row(ye, meta):                                  # (E, cap, D)
+        slot, keep, w_sorted, tok_of = meta
+        g = ye.reshape(n_experts * cap, D)[slot]                # (S*k, D)
+        g = jnp.where(keep[:, None], g, 0) * w_sorted[:, None].astype(ye.dtype)
+        return jnp.zeros((S, D), ye.dtype).at[tok_of].add(g)
+
+    xe, meta = jax.vmap(dispatch_row)(x)                        # (B, E, cap, D)
+    xe = shard(xe, "batch", "expert", None, None)
+    he = jax.nn.silu(jnp.einsum("becd,edf->becf", xe, p["wg"])) * \
+        jnp.einsum("becd,edf->becf", xe, p["wu"])
+    he = shard(he, "batch", "expert", None, "ff")
+    ye = jnp.einsum("becf,efd->becd", he, p["wd"])              # (B, E, cap, D)
+    return jax.vmap(combine_row)(ye, meta)
+
+
+# -- embeddings -----------------------------------------------------------------------
+def embed_specs(vocab: int, d_model: int, dtype, tied: bool):
+    p = {"tok": spec((vocab, d_model), dtype)}
+    if not tied:
+        p["out"] = spec((d_model, vocab), dtype)
+    return p
+
+
+def embed(p, tokens, d_model: int, scale: bool):
+    h = p["tok"][tokens]
+    if scale:
+        h = h * np.sqrt(d_model).astype(np.float32)
+    return shard(h, "batch", None, "embed")
+
+
+def unembed(p, h, cap: float, tied: bool):
+    w = p["tok"].T if tied else p["out"]
+    logits = h @ w.astype(h.dtype)
+    logits = softcap(logits.astype(jnp.float32), cap)
+    return shard(logits, "batch", None, "vocab")

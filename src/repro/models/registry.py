@@ -1,0 +1,19 @@
+"""Model registry: config -> ModelBundle (family dispatch)."""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.models import rwkv6, transformer, whisper, zamba2
+from repro.models.base import ModelBundle
+
+_FAMILIES = {
+    "dense": transformer.build,
+    "moe": transformer.build,
+    "llava": transformer.build,
+    "rwkv6": rwkv6.build,
+    "zamba2": zamba2.build,
+    "whisper": whisper.build,
+}
+
+
+def get_model(cfg: ModelConfig) -> ModelBundle:
+    return _FAMILIES[cfg.family](cfg)

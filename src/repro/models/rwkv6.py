@@ -1,0 +1,188 @@
+"""RWKV6 "Finch": attention-free LM with data-dependent per-channel decay.
+
+Time-mix: low-rank (LoRA) data-dependent decay w_t = exp(-exp(w0 + lora(x)));
+wkv state recurrence S_t = diag(w_t) S_{t-1} + k_t^T v_t carried by lax.scan
+(constant-size state => long_500k decode is O(1) memory per token).
+Simplification vs. the release code (DESIGN.md): plain per-channel lerp
+token-shift instead of the ddlerp mixing stack; the data-dependent decay —
+the paper's headline feature — is kept exactly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distr.shardctx import shard
+from repro.models import layers as L
+from repro.models.base import (ModelBundle, cross_entropy, dtype_of,
+                               token_specs)
+
+LORA_R = 64
+
+
+def param_specs(cfg: ModelConfig):
+    dt = dtype_of(cfg)
+    D, F, H, hd = cfg.d_model, cfg.d_ff, cfg.ssm_heads, cfg.head_dim
+    block = {
+        "ln1": L.spec((D,), dt), "ln2": L.spec((D,), dt),
+        # time-mix
+        "mu_r": L.spec((D,), dt), "mu_k": L.spec((D,), dt),
+        "mu_v": L.spec((D,), dt), "mu_w": L.spec((D,), dt),
+        "mu_g": L.spec((D,), dt),
+        "wr": L.spec((D, D), dt), "wk": L.spec((D, D), dt),
+        "wv": L.spec((D, D), dt), "wg": L.spec((D, D), dt),
+        "w0": L.spec((D,), jnp.float32),
+        "w_lora_a": L.spec((D, LORA_R), dt), "w_lora_b": L.spec((LORA_R, D), dt),
+        "bonus_u": L.spec((H, hd), jnp.float32),
+        "ln_x": L.spec((D,), dt),
+        "wo": L.spec((D, D), dt),
+        # channel-mix
+        "mu_ck": L.spec((D,), dt), "mu_cr": L.spec((D,), dt),
+        "wck": L.spec((D, F), dt), "wcv": L.spec((F, D), dt),
+        "wcr": L.spec((D, D), dt),
+    }
+    return {
+        "embed": L.embed_specs(cfg.vocab, cfg.d_model, dt, tied=False),
+        "layers": jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((cfg.n_layers,) + s.shape, s.dtype),
+            block),
+        "ln_f": L.spec((D,), dt),
+    }
+
+
+def _lerp(x, x_prev, mu):
+    return x + (x_prev - x) * mu
+
+
+def _wkv_scan(r, k, v, w, u, state):
+    """r,k,v: (B,T,H,hd); w: (B,T,H,hd) decay in (0,1); state: (B,H,hd,hd).
+    y_t = r_t . (S_{t-1} + u (x) k_t v_t);  S_t = diag(w_t) S_{t-1} + k_t (x) v_t.
+    """
+    def step(S, xs):
+        rt, kt, vt, wt = xs                       # (B,H,hd)
+        kv = kt[..., :, None] * vt[..., None, :]  # (B,H,hd,hd)
+        y = jnp.einsum("bhi,bhij->bhj", rt, S + u[None, :, :, None] * kv,
+                       preferred_element_type=jnp.float32)
+        S = wt[..., :, None] * S + kv
+        return S, y
+
+    xs = jax.tree.map(lambda a: a.swapaxes(0, 1), (r, k, v, w))  # (T,B,H,hd)
+    state, ys = jax.lax.scan(step, state, xs)
+    return ys.swapaxes(0, 1), state               # (B,T,H,hd)
+
+
+def _time_mix(cfg, p, x, shift_state, wkv_state):
+    B, T, D = x.shape
+    H, hd = cfg.ssm_heads, cfg.head_dim
+    x_prev = jnp.concatenate([shift_state[:, None, :], x[:, :-1]], axis=1)
+    xr = _lerp(x, x_prev, p["mu_r"])
+    xk = _lerp(x, x_prev, p["mu_k"])
+    xv = _lerp(x, x_prev, p["mu_v"])
+    xw = _lerp(x, x_prev, p["mu_w"])
+    xg = _lerp(x, x_prev, p["mu_g"])
+    r = (xr @ p["wr"]).reshape(B, T, H, hd).astype(jnp.float32)
+    k = (xk @ p["wk"]).reshape(B, T, H, hd).astype(jnp.float32)
+    v = (xv @ p["wv"]).reshape(B, T, H, hd).astype(jnp.float32)
+    g = xg @ p["wg"]
+    # data-dependent decay (the Finch contribution)
+    dd = jnp.tanh(xw.astype(jnp.float32) @ p["w_lora_a"].astype(jnp.float32)) \
+        @ p["w_lora_b"].astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(p["w0"].astype(jnp.float32) + dd))     # (B,T,D)
+    w = w.reshape(B, T, H, hd)
+    y, wkv_state = _wkv_scan(r, k, v, w, p["bonus_u"].astype(jnp.float32),
+                             wkv_state)
+    y = y.reshape(B, T, D).astype(x.dtype)
+    y = L.rmsnorm(y, p["ln_x"]) * jax.nn.silu(g)
+    return y @ p["wo"], x[:, -1, :], wkv_state
+
+
+def _channel_mix(p, x, shift_state):
+    x_prev = jnp.concatenate([shift_state[:, None, :], x[:, :-1]], axis=1)
+    xk = _lerp(x, x_prev, p["mu_ck"])
+    xr = _lerp(x, x_prev, p["mu_cr"])
+    k = jnp.square(jax.nn.relu(xk @ p["wck"]))
+    k = shard(k, "batch", None, "ff")
+    return jax.nn.sigmoid(xr @ p["wcr"]) * (k @ p["wcv"]), x[:, -1, :]
+
+
+def forward(cfg: ModelConfig, params, tokens, states=None,
+            last_only=False):
+    """states: None (train: zero states) or per-layer pytree for decode."""
+    B, T = tokens.shape
+    D, H, hd = cfg.d_model, cfg.ssm_heads, cfg.head_dim
+    h = L.embed(params["embed"], tokens, D, False)
+    if states is None:
+        states = {
+            "tm_shift": jnp.zeros((cfg.n_layers, B, D), h.dtype),
+            "cm_shift": jnp.zeros((cfg.n_layers, B, D), h.dtype),
+            "wkv": jnp.zeros((cfg.n_layers, B, H, hd, hd), jnp.float32),
+        }
+
+    def body(carry, xs):
+        h = carry
+        lp, tm_s, cm_s, wkv_s = xs
+        att, tm_new, wkv_new = _time_mix(cfg, lp, L.rmsnorm(h, lp["ln1"]),
+                                         tm_s, wkv_s)
+        h = h + att
+        ffn, cm_new = _channel_mix(lp, L.rmsnorm(h, lp["ln2"]), cm_s)
+        h = h + ffn
+        h = shard(h, "batch", None, "embed")
+        return h, (tm_new, cm_new, wkv_new)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    h, (tm, cm, wkv) = jax.lax.scan(
+        body, h, (params["layers"], states["tm_shift"], states["cm_shift"],
+                  states["wkv"]),
+        unroll=cfg.n_layers if cfg.scan_unroll else 1)
+    h = L.rmsnorm(h, params["ln_f"])
+    if last_only:
+        h = h[:, -1:]
+    logits = h @ params["embed"]["out"].astype(h.dtype)
+    new_states = {"tm_shift": tm, "cm_shift": cm, "wkv": wkv}
+    return shard(logits.astype(jnp.float32), "batch", None, "vocab"), new_states
+
+
+def loss_fn(cfg, params, batch):
+    logits, _ = forward(cfg, params, batch["tokens"])
+    return cross_entropy(logits, batch["labels"])
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq: int):
+    del seq  # constant-size state: the long_500k story
+    dt = dtype_of(cfg)
+    D, H, hd = cfg.d_model, cfg.ssm_heads, cfg.head_dim
+    return {
+        "tm_shift": jax.ShapeDtypeStruct((cfg.n_layers, batch, D), dt),
+        "cm_shift": jax.ShapeDtypeStruct((cfg.n_layers, batch, D), dt),
+        "wkv": jax.ShapeDtypeStruct((cfg.n_layers, batch, H, hd, hd),
+                                    jnp.float32),
+    }
+
+
+def decode_fn(cfg, params, states, batch, pos):
+    del pos  # recurrence is position-free
+    return forward(cfg, params, batch["tokens"], states=states)
+
+
+def prefill_fn(cfg, params, batch):
+    logits, states = forward(cfg, params, batch["tokens"], last_only=True)
+    return logits, states
+
+
+def build(cfg: ModelConfig) -> ModelBundle:
+    return ModelBundle(
+        cfg=cfg,
+        param_specs=functools.partial(param_specs, cfg),
+        loss_fn=functools.partial(loss_fn, cfg),
+        train_input_specs=lambda s: token_specs(s.global_batch, s.seq_len),
+        prefill_fn=functools.partial(prefill_fn, cfg),
+        decode_fn=functools.partial(decode_fn, cfg),
+        cache_specs=functools.partial(cache_specs, cfg),
+        decode_input_specs=lambda s: {
+            "tokens": jax.ShapeDtypeStruct((s.global_batch, 1), jnp.int32)},
+    )

@@ -1,0 +1,221 @@
+"""Decoder-only transformer: qwen2*, gemma*, mixtral/llama4 (MoE), and the
+llava backbone. Scan-over-layers (compact HLO, fast SPMD compiles) + optional
+remat; gemma2 local/global alternation and softcaps; MoE blocks per config.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distr.shardctx import shard
+from repro.models import layers as L
+from repro.models.base import (ModelBundle, cross_entropy, dtype_of,
+                               token_specs)
+
+
+def _flavor(cfg: ModelConfig, layer_local: bool) -> L.AttnFlavor:
+    window = cfg.sliding_window if (cfg.sliding_window and
+                                    (not cfg.local_global_alternating or
+                                     layer_local)) else 0
+    return L.AttnFlavor(
+        n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+        rope_theta=cfg.rope_theta, qkv_bias=cfg.qkv_bias,
+        attn_softcap=cfg.attn_softcap, sliding_window=window)
+
+
+def _stack(tree, n):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), tree)
+
+
+def param_specs(cfg: ModelConfig):
+    dt = dtype_of(cfg)
+    block = {
+        "ln1": L.spec((cfg.d_model,), dt),
+        "ln2": L.spec((cfg.d_model,), dt),
+        "attn": L.attn_specs(cfg.d_model, _flavor(cfg, True), dt),
+    }
+    if cfg.family == "moe":
+        block["moe"] = L.moe_specs(cfg.d_model, cfg.d_ff, cfg.n_experts, dt)
+    else:
+        block["mlp"] = L.mlp_specs(cfg.d_model, cfg.d_ff, cfg.mlp, dt)
+    p = {
+        "embed": L.embed_specs(cfg.vocab, cfg.d_model, dt, cfg.tie_embeddings),
+        "layers": _stack(block, cfg.n_layers),
+        "ln_f": L.spec((cfg.d_model,), dt),
+    }
+    if cfg.family == "llava":
+        p["vision_proj"] = L.spec((cfg.d_frontend, cfg.d_model), dt)
+    return p
+
+
+def _layer(cfg: ModelConfig, p, h, layer_idx, positions, cache, cache_slot,
+           kv_positions, kv_chunk):
+    # gemma2: even layers sliding-window ("local"), odd layers global.
+    # Implemented as a *runtime* window scalar (§Perf T8) — a lax.cond here
+    # duplicated every cache/attention buffer into both branches.
+    if cfg.local_global_alternating:
+        fl = _flavor(cfg, False)          # window applied at runtime
+        window_rt = jnp.where(layer_idx % 2 == 0, cfg.sliding_window, 0)
+    else:
+        fl = _flavor(cfg, True)
+        window_rt = None
+    attn_out, new_cache = L.attention(
+        p["attn"], L.rmsnorm(h, p["ln1"]), fl,
+        positions=positions, cache=cache, cache_slot=cache_slot,
+        kv_positions=kv_positions, kv_chunk=kv_chunk,
+        window_runtime=window_rt)
+    h = h + attn_out
+    hn = L.rmsnorm(h, p["ln2"])
+    if cfg.family == "moe":
+        ff = L.moe_mlp(p["moe"], hn, cfg.n_experts, cfg.experts_per_token,
+                       cfg.moe_capacity_factor)
+    else:
+        ff = L.mlp(p["mlp"], hn, cfg.mlp)
+    h = h + ff
+    h = shard(h, "batch", None, "embed")
+    return h, new_cache
+
+
+def forward(cfg: ModelConfig, params, h, positions, caches=None,
+            cache_slot=None, kv_positions=None, kv_chunk: int = 0):
+    kv_chunk = kv_chunk or cfg.kv_chunk
+    """h: (B, S, D) embedded input. caches: None or (k, v) stacked (L, ...)."""
+    decode = caches is not None
+
+    def body(carry, xs):
+        if decode:
+            # §Perf T9: stacked caches ride the scan CARRY (while-loop
+            # carries alias across iterations => one cache buffer), not
+            # xs->ys (which keeps input AND output stacks live: 2x cache).
+            h, ck_all, cv_all = carry
+            lp, idx = xs
+            ck = jax.lax.dynamic_index_in_dim(ck_all, idx, keepdims=False)
+            cv = jax.lax.dynamic_index_in_dim(cv_all, idx, keepdims=False)
+            hh, new_cache = _layer(cfg, lp, h, idx, positions, (ck, cv),
+                                   cache_slot, kv_positions, kv_chunk)
+            ck_all = jax.lax.dynamic_update_index_in_dim(
+                ck_all, new_cache[0], idx, 0)
+            cv_all = jax.lax.dynamic_update_index_in_dim(
+                cv_all, new_cache[1], idx, 0)
+            return (hh, ck_all, cv_all), None
+        h = carry
+        lp, idx = xs
+        hh, _ = _layer(cfg, lp, h, idx, positions, None, None, None, kv_chunk)
+        return hh, None
+
+    if cfg.remat and not decode:
+        body = jax.checkpoint(body)
+
+    idxs = jnp.arange(cfg.n_layers)
+    if decode:
+        (h, ck_all, cv_all), _ = jax.lax.scan(
+            body, (h, caches[0], caches[1]), (params["layers"], idxs),
+            unroll=cfg.n_layers if cfg.scan_unroll else 1)
+        new_caches = (ck_all, cv_all)
+    else:
+        h, _ = jax.lax.scan(body, h, (params["layers"], idxs),
+                          unroll=cfg.n_layers if cfg.scan_unroll else 1)
+        new_caches = None
+    h = L.rmsnorm(h, params["ln_f"])
+    return h, new_caches
+
+
+def _embed_batch(cfg, params, batch):
+    h = L.embed(params["embed"], batch["tokens"], cfg.d_model, cfg.embed_scale)
+    if cfg.family == "llava":
+        patches = batch["patches"].astype(h.dtype) @ params["vision_proj"]
+        h = jnp.concatenate([patches, h], axis=1)
+    return h
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    h = _embed_batch(cfg, params, batch)
+    positions = jnp.arange(h.shape[1])
+    h, _ = forward(cfg, params, h, positions)
+    logits = L.unembed(params["embed"], h, cfg.logit_softcap,
+                       cfg.tie_embeddings)
+    labels = batch["labels"]
+    if cfg.family == "llava":   # image positions carry no next-token loss
+        pad = jnp.full((labels.shape[0], cfg.n_image_tokens), -100, labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    return cross_entropy(logits, labels)
+
+
+# -- serving ----------------------------------------------------------------------
+def _ring(cfg: ModelConfig) -> bool:
+    """Ring-buffer (window-capped) cache only for pure-SWA archs: gemma2's
+    alternating global layers need the full-length cache."""
+    return bool(cfg.sliding_window) and not cfg.local_global_alternating
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq: int):
+    dt = dtype_of(cfg)
+    eff = min(seq, cfg.sliding_window) if _ring(cfg) else seq
+    shape = (cfg.n_layers, batch, eff, cfg.n_kv_heads, cfg.head_dim)
+    return (jax.ShapeDtypeStruct(shape, dt), jax.ShapeDtypeStruct(shape, dt))
+
+
+def decode_fn(cfg: ModelConfig, params, caches, batch, pos, kv_chunk=0):
+    kv_chunk = kv_chunk or cfg.kv_chunk
+    """One decode step. batch = {"tokens": (B, 1)}; pos: scalar global
+    position. SWA archs address the cache ring-buffer style (pos % window)."""
+    h = L.embed(params["embed"], batch["tokens"], cfg.d_model, cfg.embed_scale)
+    T = caches[0].shape[2]
+    ring = _ring(cfg)
+    slot = pos % T if ring else pos
+    kv_positions = L.cache_kv_positions(pos, T, ring)
+    positions = jnp.asarray([pos])
+    h, new_caches = forward(cfg, params, h, positions, caches=caches,
+                            cache_slot=slot, kv_positions=kv_positions,
+                            kv_chunk=kv_chunk)
+    logits = L.unembed(params["embed"], h, cfg.logit_softcap,
+                       cfg.tie_embeddings)
+    return logits, new_caches
+
+
+def prefill_fn(cfg: ModelConfig, params, batch, kv_chunk=0):
+    kv_chunk = kv_chunk or cfg.kv_chunk
+    """Prefill = the training forward minus loss; returns last-position
+    logits. (Cache writeback during prefill is fused in serve/serve_step.)"""
+    h = _embed_batch(cfg, params, batch)
+    positions = jnp.arange(h.shape[1])
+    h, _ = forward(cfg, params, h, positions, kv_chunk=kv_chunk)
+    logits = L.unembed(params["embed"], h[:, -1:], cfg.logit_softcap,
+                       cfg.tie_embeddings)
+    return logits, None
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    specs = token_specs(shape.global_batch, shape.seq_len)
+    if cfg.family == "llava":
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (shape.global_batch, cfg.n_image_tokens, cfg.d_frontend),
+            jnp.bfloat16)
+        # text tokens fill the remaining sequence budget
+        specs["tokens"] = jax.ShapeDtypeStruct(
+            (shape.global_batch, shape.seq_len - cfg.n_image_tokens), jnp.int32)
+        specs["labels"] = specs["tokens"]
+    return specs
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    return {"tokens": jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)}
+
+
+def build(cfg: ModelConfig) -> ModelBundle:
+    return ModelBundle(
+        cfg=cfg,
+        param_specs=functools.partial(param_specs, cfg),
+        loss_fn=functools.partial(loss_fn, cfg),
+        train_input_specs=functools.partial(train_input_specs, cfg),
+        prefill_fn=functools.partial(prefill_fn, cfg),
+        decode_fn=functools.partial(decode_fn, cfg),
+        cache_specs=functools.partial(cache_specs, cfg),
+        decode_input_specs=functools.partial(decode_input_specs, cfg),
+    )

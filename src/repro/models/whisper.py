@@ -1,0 +1,236 @@
+"""Whisper-medium backbone: transformer encoder-decoder with cross-attention.
+
+Per the brief the conv/audio frontend is a STUB: `input_specs()` provides
+precomputed frame embeddings (B, n_frames, d_frontend); a linear adapter maps
+them to d_model. Positional encoding is on-the-fly sinusoidal for both stacks
+(stand-in for Whisper's learned decoder table — documented in DESIGN.md).
+Decoder-seq shapes (4k/32k) are structural stand-ins beyond Whisper's 448.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distr.shardctx import shard
+from repro.models import layers as L
+from repro.models.base import (ModelBundle, cross_entropy, dtype_of,
+                               token_specs)
+
+
+def _fl(cfg, causal):
+    return L.AttnFlavor(cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                        causal=causal, use_rope=False)
+
+
+def _sinusoid(positions, d):
+    half = d // 2
+    freqs = jnp.exp(-np.log(10_000.0) * jnp.arange(half, dtype=jnp.float32)
+                    / half)
+    ang = positions[:, None].astype(jnp.float32) * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def param_specs(cfg: ModelConfig):
+    dt = dtype_of(cfg)
+    D = cfg.d_model
+    enc_block = {
+        "ln1": L.spec((D,), dt),
+        "attn": L.attn_specs(D, _fl(cfg, False), dt),
+        "ln2": L.spec((D,), dt),
+        "mlp": L.mlp_specs(D, cfg.d_ff, "gelu", dt),
+    }
+    dec_block = {
+        "ln1": L.spec((D,), dt),
+        "self_attn": L.attn_specs(D, _fl(cfg, True), dt),
+        "lnx": L.spec((D,), dt),
+        "cross_attn": L.attn_specs(D, _fl(cfg, False), dt),
+        "ln2": L.spec((D,), dt),
+        "mlp": L.mlp_specs(D, cfg.d_ff, "gelu", dt),
+    }
+    stack = lambda b, n: jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), b)
+    return {
+        "front_proj": L.spec((cfg.d_frontend, D), dt),
+        "enc_layers": stack(enc_block, cfg.encoder_layers),
+        "enc_ln_f": L.spec((D,), dt),
+        "embed": L.embed_specs(cfg.vocab, D, dt, tied=True),
+        "dec_layers": stack(dec_block, cfg.n_layers),
+        "ln_f": L.spec((D,), dt),
+    }
+
+
+def encode(cfg: ModelConfig, params, frames):
+    """frames: (B, F, d_frontend) stub frontend output -> (B, F, D)."""
+    h = frames.astype(dtype_of(cfg)) @ params["front_proj"]
+    h = h + _sinusoid(jnp.arange(h.shape[1]), cfg.d_model).astype(h.dtype)
+    h = shard(h, "batch", None, "embed")
+    fl = _fl(cfg, False)
+    positions = jnp.arange(h.shape[1])
+
+    def body(carry, lp):
+        hh = carry
+        att, _ = L.attention(lp["attn"], L.rmsnorm(hh, lp["ln1"]), fl,
+                             positions=positions, kv_chunk=cfg.kv_chunk)
+        hh = hh + att
+        hh = hh + L.mlp(lp["mlp"], L.rmsnorm(hh, lp["ln2"]), "gelu")
+        return shard(hh, "batch", None, "embed"), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    h, _ = jax.lax.scan(body, h, params["enc_layers"],
+                        unroll=cfg.encoder_layers if cfg.scan_unroll else 1)
+    return L.rmsnorm(h, params["enc_ln_f"])
+
+
+def _cross_attention(p, x, kv, fl, kv_chunk=1024, q_chunk=4096):
+    """q from decoder x; k,v precomputed (B, F, K, h) from encoder output.
+
+    Queries are chunked (§Perf T10): at prefill_32k the full (S, F_enc)
+    cross-logit tensor is 6.3 GB/layer f32; q chunks of 4096 bound it at
+    ~0.8 GB while keeping the MXU shape.
+    """
+    B, S, _ = x.shape
+    K, h = fl.n_kv_heads, fl.head_dim
+    q = (x @ p["wq"]).reshape(B, S, K, fl.n_heads // K, h)
+    k, v = kv
+    F = k.shape[1]
+
+    def attend(qc):
+        return L.chunked_attention(
+            qc, k, v, q_positions=jnp.zeros(qc.shape[1], jnp.int32),
+            kv_positions=jnp.arange(F), fl=fl, kv_chunk=kv_chunk)
+
+    if S > q_chunk and S % q_chunk == 0:
+        qs = q.reshape(B, S // q_chunk, q_chunk, K, fl.n_heads // K, h)
+        qs = qs.transpose(1, 0, 2, 3, 4, 5)
+        out = jax.lax.map(attend, qs)                      # (nc, B, qc, ...)
+        out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, K,
+                                                      fl.n_heads // K, h)
+    else:
+        out = attend(q)
+    return out.reshape(B, S, fl.n_heads * h) @ p["wo"]
+
+
+def _enc_kv(p, enc_h, fl):
+    B, F, _ = enc_h.shape
+    k = (enc_h @ p["wk"]).reshape(B, F, fl.n_kv_heads, fl.head_dim)
+    v = (enc_h @ p["wv"]).reshape(B, F, fl.n_kv_heads, fl.head_dim)
+    return k, v
+
+
+def decode_stack(cfg, params, tokens, positions, enc_h=None, caches=None,
+                 cache_slot=None, kv_positions=None, last_only=False):
+    """enc_h given (train/prefill) XOR caches given (decode: holds enc kv)."""
+    fl_self, fl_cross = _fl(cfg, True), _fl(cfg, False)
+    h = L.embed(params["embed"], tokens, cfg.d_model, False)
+    h = h + _sinusoid(positions, cfg.d_model).astype(h.dtype)[None, :, :]
+    h = shard(h, "batch", None, "embed")
+    decode = caches is not None
+
+    def body(carry, xs):
+        hh = carry
+        if decode:
+            lp, sk, sv, xk, xv = xs
+            cache = (sk, sv)
+        else:
+            lp = xs
+            cache = None
+        att, new_cache = L.attention(
+            lp["self_attn"], L.rmsnorm(hh, lp["ln1"]), fl_self,
+            positions=positions, cache=cache, cache_slot=cache_slot,
+            kv_positions=kv_positions, kv_chunk=cfg.kv_chunk)
+        hh = hh + att
+        if decode:
+            kv = (xk, xv)
+        else:
+            kv = _enc_kv(lp["cross_attn"], enc_h, fl_cross)
+        hh = hh + _cross_attention(lp["cross_attn"],
+                                   L.rmsnorm(hh, lp["lnx"]), kv, fl_cross,
+                                   kv_chunk=cfg.kv_chunk)
+        hh = hh + L.mlp(lp["mlp"], L.rmsnorm(hh, lp["ln2"]), "gelu")
+        hh = shard(hh, "batch", None, "embed")
+        return hh, new_cache
+
+    if cfg.remat and not decode:
+        body = jax.checkpoint(body)
+    if decode:
+        xs = (params["dec_layers"], caches["self_k"], caches["self_v"],
+              caches["cross_k"], caches["cross_v"])
+        h, new_self = jax.lax.scan(
+            body, h, xs, unroll=cfg.n_layers if cfg.scan_unroll else 1)
+        new_caches = {"self_k": new_self[0], "self_v": new_self[1],
+                      "cross_k": caches["cross_k"],
+                      "cross_v": caches["cross_v"]}
+    else:
+        h, _ = jax.lax.scan(body, h, params["dec_layers"],
+                            unroll=cfg.n_layers if cfg.scan_unroll else 1)
+        new_caches = None
+    h = L.rmsnorm(h, params["ln_f"])
+    if last_only:
+        # §Perf T10b: whisper's vocab (51865) is not 16-divisible, so full
+        # (B, S, V) logits replicate over "model" (13.6 GB at prefill_32k);
+        # prefill only needs the last position.
+        h = h[:, -1:]
+    logits = h @ params["embed"]["tok"].T.astype(h.dtype)
+    return shard(logits.astype(jnp.float32), "batch", None, "vocab"), new_caches
+
+
+def loss_fn(cfg, params, batch):
+    enc_h = encode(cfg, params, batch["frames"])
+    tokens = batch["tokens"]
+    logits, _ = decode_stack(cfg, params, tokens,
+                             jnp.arange(tokens.shape[1]), enc_h=enc_h)
+    return cross_entropy(logits, batch["labels"])
+
+
+def train_input_specs(cfg, shape: ShapeConfig):
+    specs = token_specs(shape.global_batch, shape.seq_len)
+    specs["frames"] = jax.ShapeDtypeStruct(
+        (shape.global_batch, cfg.n_audio_frames, cfg.d_frontend), jnp.bfloat16)
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq: int):
+    dt = dtype_of(cfg)
+    L_, K, h = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "self_k": jax.ShapeDtypeStruct((L_, batch, seq, K, h), dt),
+        "self_v": jax.ShapeDtypeStruct((L_, batch, seq, K, h), dt),
+        "cross_k": jax.ShapeDtypeStruct((L_, batch, cfg.n_audio_frames, K, h), dt),
+        "cross_v": jax.ShapeDtypeStruct((L_, batch, cfg.n_audio_frames, K, h), dt),
+    }
+
+
+def decode_fn(cfg, params, caches, batch, pos):
+    T = caches["self_k"].shape[2]
+    kv_positions = L.cache_kv_positions(pos, T, ring=False)
+    return decode_stack(cfg, params, batch["tokens"], jnp.asarray([pos]),
+                        caches=caches, cache_slot=pos,
+                        kv_positions=kv_positions)
+
+
+def prefill_fn(cfg, params, batch):
+    enc_h = encode(cfg, params, batch["frames"])
+    tokens = batch["tokens"]
+    logits, _ = decode_stack(cfg, params, tokens,
+                             jnp.arange(tokens.shape[1]), enc_h=enc_h,
+                             last_only=True)
+    return logits, None
+
+
+def build(cfg: ModelConfig) -> ModelBundle:
+    return ModelBundle(
+        cfg=cfg,
+        param_specs=functools.partial(param_specs, cfg),
+        loss_fn=functools.partial(loss_fn, cfg),
+        train_input_specs=functools.partial(train_input_specs, cfg),
+        prefill_fn=functools.partial(prefill_fn, cfg),
+        decode_fn=functools.partial(decode_fn, cfg),
+        cache_specs=functools.partial(cache_specs, cfg),
+        decode_input_specs=lambda s: {
+            "tokens": jax.ShapeDtypeStruct((s.global_batch, 1), jnp.int32)},
+    )

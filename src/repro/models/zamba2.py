@@ -1,0 +1,240 @@
+"""Zamba2: Mamba2 (SSD) backbone + a *shared* attention block applied every
+`shared_attn_every` layers (one parameter set, per-site KV caches).
+
+Mamba2 block: in_proj -> (z, x, B, C, dt); causal depthwise conv over
+(x,B,C); per-head scalar decay exp(A*dt); state h (B, H, P, N) scanned over
+time; y = C.h + D*x, gated by silu(z). Constant-size state + a handful of
+shared-attn KV caches => long_500k runs with the caches mesh-sharded.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distr.shardctx import shard
+from repro.models import layers as L
+from repro.models.base import (ModelBundle, cross_entropy, dtype_of,
+                               token_specs)
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = 2 * cfg.d_model
+    H = cfg.ssm_heads
+    P = d_inner // H
+    N = cfg.ssm_state
+    conv_ch = d_inner + 2 * N
+    return d_inner, H, P, N, conv_ch
+
+
+def _sites(cfg: ModelConfig):
+    """Segments of mamba layers, each preceded by the shared attn block."""
+    every = cfg.shared_attn_every
+    n_full, rem = divmod(cfg.n_layers, every)
+    segs = [every] * n_full + ([rem] if rem else [])
+    return segs
+
+
+def mamba_block_specs(cfg: ModelConfig, dt):
+    D = cfg.d_model
+    d_inner, H, P, N, conv_ch = _dims(cfg)
+    return {
+        "ln": L.spec((D,), dt),
+        "in_proj": L.spec((D, 2 * d_inner + 2 * N + H), dt),
+        "conv_w": L.spec((conv_ch, cfg.ssm_conv), dt),
+        "conv_b": L.spec((conv_ch,), dt),
+        "a_log": L.spec((H,), jnp.float32),
+        "d_skip": L.spec((H,), jnp.float32),
+        "dt_bias": L.spec((H,), jnp.float32),
+        "ln_y": L.spec((d_inner,), dt),
+        "out_proj": L.spec((d_inner, D), dt),
+    }
+
+
+def shared_attn_specs(cfg: ModelConfig, dt):
+    fl = L.AttnFlavor(cfg.n_heads, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "ln1": L.spec((cfg.d_model,), dt),
+        "attn": L.attn_specs(cfg.d_model, fl, dt),
+        "ln2": L.spec((cfg.d_model,), dt),
+        "mlp": L.mlp_specs(cfg.d_model, cfg.d_ff, "gelu", dt),
+    }
+
+
+def param_specs(cfg: ModelConfig):
+    dt = dtype_of(cfg)
+    segs = _sites(cfg)
+    blocks = {}
+    for i, seg in enumerate(segs):
+        blocks[f"seg{i}"] = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((seg,) + s.shape, s.dtype),
+            mamba_block_specs(cfg, dt))
+    return {
+        "embed": L.embed_specs(cfg.vocab, cfg.d_model, dt, tied=False),
+        "shared": shared_attn_specs(cfg, dt),
+        "segments": blocks,
+        "ln_f": L.spec((cfg.d_model,), dt),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """x: (B, T, C); depthwise causal conv, kernel K. state: (B, K-1, C)."""
+    K = w.shape[1]
+    if state is None:
+        state = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[:, i] for i in range(K))
+    new_state = xp[:, -(K - 1):, :]
+    return jax.nn.silu(out + b), new_state
+
+
+def _ssd_scan(xh, Bm, Cm, dtv, a, state):
+    """xh: (B,T,H,P); Bm,Cm: (B,T,N); dtv: (B,T,H); a: (H,) < 0.
+    h_t = exp(a dt) h_{t-1} + dt * x_t (x) B_t ;  y_t = h_t . C_t.
+    state: (B,H,P,N)."""
+    def step(h, xs):
+        xt, bt, ct, dt_t = xs                    # (B,H,P) (B,N) (B,N) (B,H)
+        decay = jnp.exp(a[None, :] * dt_t)       # (B,H)
+        upd = (dt_t[..., None, None] * xt[..., :, None]
+               * bt[:, None, None, :])           # (B,H,P,N)
+        h = decay[..., None, None] * h + upd
+        y = jnp.einsum("bhpn,bn->bhp", h, ct,
+                       preferred_element_type=jnp.float32)
+        return h, y
+
+    xs = jax.tree.map(lambda v: v.swapaxes(0, 1), (xh, Bm, Cm, dtv))
+    state, ys = jax.lax.scan(step, state, xs)
+    return ys.swapaxes(0, 1), state              # (B,T,H,P)
+
+
+def mamba_block(cfg, p, h, conv_state=None, ssd_state=None):
+    B, T, D = h.shape
+    d_inner, H, P, N, conv_ch = _dims(cfg)
+    hin = L.rmsnorm(h, p["ln"])
+    proj = hin @ p["in_proj"]                    # (B,T,2di+2N+H)
+    z, xbc, dtv = jnp.split(proj, [d_inner, 2 * d_inner + 2 * N], axis=-1)
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    x, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+    xh = x.reshape(B, T, H, P).astype(jnp.float32)
+    dtv = jax.nn.softplus(dtv.astype(jnp.float32)
+                          + p["dt_bias"][None, None, :])      # (B,T,H)
+    a = -jnp.exp(p["a_log"])
+    if ssd_state is None:
+        ssd_state = jnp.zeros((B, H, P, N), jnp.float32)
+    y, new_ssd = _ssd_scan(xh, Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+                           dtv, a, ssd_state)
+    y = y + p["d_skip"][None, None, :, None] * xh
+    y = y.reshape(B, T, d_inner).astype(h.dtype)
+    y = L.rmsnorm(y, p["ln_y"]) * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    return h + out, new_conv, new_ssd
+
+
+def shared_block(cfg, p, h, positions, cache=None, cache_slot=None,
+                 kv_positions=None):
+    fl = L.AttnFlavor(cfg.n_heads, cfg.n_kv_heads, cfg.head_dim)
+    att, new_cache = L.attention(p["attn"], L.rmsnorm(h, p["ln1"]), fl,
+                                 positions=positions, cache=cache,
+                                 cache_slot=cache_slot,
+                                 kv_positions=kv_positions,
+                                 kv_chunk=cfg.kv_chunk)
+    h = h + att
+    h = h + L.mlp(p["mlp"], L.rmsnorm(h, p["ln2"]), "gelu")
+    return shard(h, "batch", None, "embed"), new_cache
+
+
+def forward(cfg: ModelConfig, params, tokens, positions, states=None,
+            cache_slot=None, kv_positions=None):
+    B, T = tokens.shape
+    d_inner, H, P, N, conv_ch = _dims(cfg)
+    segs = _sites(cfg)
+    h = L.embed(params["embed"], tokens, cfg.d_model, False)
+    decode = states is not None
+    new_states = {"conv": [], "ssd": [], "kv": []} if decode else None
+
+    for i, seg in enumerate(segs):
+        cache = (states["kv"][i] if decode else None)
+        h, new_cache = shared_block(cfg, params["shared"], h, positions,
+                                    cache=cache, cache_slot=cache_slot,
+                                    kv_positions=kv_positions)
+
+        def body(carry, xs):
+            hh = carry
+            if decode:
+                lp, cs, ss = xs
+                hh, nc, ns = mamba_block(cfg, lp, hh, cs, ss)
+                return hh, (nc, ns)
+            hh, _, _ = mamba_block(cfg, xs, hh)
+            return hh, None
+
+        if cfg.remat and not decode:
+            body = jax.checkpoint(body)
+        if decode:
+            h, (ncs, nss) = jax.lax.scan(
+                body, h, (params["segments"][f"seg{i}"],
+                          states["conv"][i], states["ssd"][i]),
+                unroll=seg if cfg.scan_unroll else 1)
+            new_states["conv"].append(ncs)
+            new_states["ssd"].append(nss)
+            new_states["kv"].append(new_cache)
+        else:
+            h, _ = jax.lax.scan(body, h, params["segments"][f"seg{i}"],
+                                unroll=seg if cfg.scan_unroll else 1)
+
+    h = L.rmsnorm(h, params["ln_f"])
+    logits = h @ params["embed"]["out"].astype(h.dtype)
+    return shard(logits.astype(jnp.float32), "batch", None, "vocab"), new_states
+
+
+def loss_fn(cfg, params, batch):
+    tokens = batch["tokens"]
+    logits, _ = forward(cfg, params, tokens, jnp.arange(tokens.shape[1]))
+    return cross_entropy(logits, batch["labels"])
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq: int):
+    dt = dtype_of(cfg)
+    d_inner, H, P, N, conv_ch = _dims(cfg)
+    segs = _sites(cfg)
+    kv = (cfg.n_heads and True)
+    return {
+        "conv": [jax.ShapeDtypeStruct(
+            (seg, batch, cfg.ssm_conv - 1, conv_ch), dt) for seg in segs],
+        "ssd": [jax.ShapeDtypeStruct((seg, batch, H, P, N), jnp.float32)
+                for seg in segs],
+        "kv": [(jax.ShapeDtypeStruct(
+                    (batch, seq, cfg.n_kv_heads, cfg.head_dim), dt),
+                jax.ShapeDtypeStruct(
+                    (batch, seq, cfg.n_kv_heads, cfg.head_dim), dt))
+               for _ in segs],
+    }
+
+
+def decode_fn(cfg, params, states, batch, pos):
+    T = states["kv"][0][0].shape[1]
+    kv_positions = L.cache_kv_positions(pos, T, ring=False)
+    return forward(cfg, params, batch["tokens"], jnp.asarray([pos]),
+                   states=states, cache_slot=pos, kv_positions=kv_positions)
+
+
+def prefill_fn(cfg, params, batch):
+    tokens = batch["tokens"]
+    logits, _ = forward(cfg, params, tokens, jnp.arange(tokens.shape[1]))
+    return logits[:, -1:], None
+
+
+def build(cfg: ModelConfig) -> ModelBundle:
+    return ModelBundle(
+        cfg=cfg,
+        param_specs=functools.partial(param_specs, cfg),
+        loss_fn=functools.partial(loss_fn, cfg),
+        train_input_specs=lambda s: token_specs(s.global_batch, s.seq_len),
+        prefill_fn=functools.partial(prefill_fn, cfg),
+        decode_fn=functools.partial(decode_fn, cfg),
+        cache_specs=functools.partial(cache_specs, cfg),
+        decode_input_specs=lambda s: {
+            "tokens": jax.ShapeDtypeStruct((s.global_batch, 1), jnp.int32)},
+    )

@@ -1,0 +1,5 @@
+from repro.query.executor import Result, execute, explain
+from repro.query.parser import parse
+from repro.query.planner import plan
+
+__all__ = ["Result", "execute", "explain", "parse", "plan"]

@@ -1,0 +1,224 @@
+"""Physical execution: plans -> GraphBLAS ops on the graph's matrices.
+
+The binding state is a frontier matrix B (n, F): column j is the reachable
+set (or walk counts) of source binding j. Each Expand is min..max masked
+semiring vxm hops; node predicates become diagonal masks applied between
+hops. This is the paper's Cypher->linear-algebra translation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ops, semiring as S
+from repro.graph.graph import Graph
+from repro.query import qast as A
+from repro.query.parser import parse
+from repro.query.planner import Plan, plan
+
+
+@dataclasses.dataclass
+class Result:
+    columns: List[str]
+    rows: List[tuple]
+
+    def scalar(self):
+        assert len(self.rows) == 1 and len(self.rows[0]) == 1
+        return self.rows[0][0]
+
+
+# -- predicate evaluation -----------------------------------------------------
+def _operand_vec(graph: Graph, side, n: int):
+    if side[0] == "lit":
+        return np.full(n, side[1], dtype=np.float64), None
+    if side[0] == "id":
+        return np.arange(n, dtype=np.float64), None
+    if side[0] == "prop":
+        col = graph.node_props.get(side[2])
+        if col is None:
+            return np.full(n, np.nan), np.zeros(n, dtype=bool)
+        col = np.asarray(col, dtype=np.float64)
+        return col, ~np.isnan(col)
+    raise TypeError(side)
+
+
+_CMP = {"<": np.less, "<=": np.less_equal, ">": np.greater,
+        ">=": np.greater_equal, "=": np.equal, "<>": np.not_equal}
+
+
+def eval_pred(graph: Graph, node, n: int) -> np.ndarray:
+    if isinstance(node, A.Comparison):
+        lv, lp = _operand_vec(graph, node.lhs, n)
+        rv, rp = _operand_vec(graph, node.rhs, n)
+        with np.errstate(invalid="ignore"):
+            out = _CMP[node.op](lv, rv)
+        for present in (lp, rp):
+            if present is not None:
+                out &= present
+        return out
+    if isinstance(node, A.BoolExpr):
+        parts = [eval_pred(graph, a, n) for a in node.args]
+        if node.op == "AND":
+            return np.logical_and.reduce(parts)
+        if node.op == "OR":
+            return np.logical_or.reduce(parts)
+        if node.op == "NOT":
+            return ~parts[0]
+    if isinstance(node, A.InSeeds):
+        m = np.zeros(n, dtype=bool)
+        m[node.seeds] = True
+        return m
+    raise TypeError(node)
+
+
+def _node_mask(graph: Graph, label, preds, n) -> np.ndarray:
+    m = np.asarray(graph.label_mask(label))
+    for p in preds or []:
+        m = m & eval_pred(graph, p, n)
+    return m
+
+
+# -- expansion ----------------------------------------------------------------
+def _matrices(graph: Graph, rel: Optional[str], direction: str):
+    r = graph.relation(rel)
+    if r is None:
+        raise ValueError(f"no relation {rel!r}")
+    if direction == A.OUT:
+        return [r.A_T]          # pull: next = A^T (x) frontier
+    if direction == A.IN:
+        return [r.A]
+    return [r.A_T, r.A]
+
+
+def _expand(graph: Graph, B: jnp.ndarray, e, sr: S.Semiring,
+            dst_mask: np.ndarray, impl: str) -> jnp.ndarray:
+    mats = _matrices(graph, e.rel, e.direction)
+    reach = jnp.zeros_like(B)
+    frontier = B
+    visited = (B > 0).astype(jnp.float32)
+    for h in range(1, e.max_hops + 1):
+        nxt = None
+        for M in mats:
+            step = ops.mxm(M, frontier, sr,
+                           mask=visited if sr.name == "or_and" else None,
+                           complement=True, impl=impl)
+            nxt = step if nxt is None else S_add(sr, nxt, step)
+        frontier = nxt
+        if sr.name == "or_and":
+            visited = jnp.maximum(visited, (frontier > 0).astype(jnp.float32))
+        if h >= e.min_hops:
+            reach = S_add(sr, reach, frontier)
+    # destination label/property diagonal
+    reach = reach * jnp.asarray(dst_mask, dtype=jnp.float32)[:, None]
+    if sr.name == "or_and":
+        reach = (reach > 0).astype(jnp.float32)
+    return reach
+
+
+def S_add(sr: S.Semiring, a, b):
+    return jnp.maximum(a, b) if sr.name == "or_and" else a + b
+
+
+# -- top level ------------------------------------------------------------------
+def execute(graph: Graph, query, impl: str = "auto") -> Result:
+    q = parse(query) if isinstance(query, str) else query
+    if isinstance(q, A.CreateQuery):
+        raise TypeError("CREATE goes through engine.Database, not execute()")
+    p = plan(q)
+    n = graph.n
+
+    src_mask = _node_mask(graph, p.src_label, p.var_preds.get(p.src_var), n)
+    if p.seeds is not None:
+        seeds = np.asarray(sorted(set(p.seeds)), dtype=np.int64)
+        seeds = seeds[src_mask[seeds]]
+    else:
+        seeds = np.nonzero(src_mask)[0]
+    f = len(seeds)
+    if f == 0:
+        return Result([_colname(r) for r in p.returns], [])
+
+    sr = S.get(p.semiring)
+    B = jnp.zeros((n, f), dtype=jnp.float32).at[jnp.asarray(seeds),
+                                                jnp.arange(f)].set(1.0)
+    var_of_col = {p.src_var: "seed"}
+    for e in p.expands:
+        dst_mask = _node_mask(graph, e.dst_label,
+                              p.var_preds.get(e.dst_var), n)
+        B = _expand(graph, B, e, sr, dst_mask, impl)
+
+    return _project(graph, p, seeds, B)
+
+
+def _colname(r: A.ReturnItem) -> str:
+    if r.alias:
+        return r.alias
+    if r.kind == "count":
+        return f"count({'DISTINCT ' if r.distinct else ''}{r.var})"
+    if r.kind == "prop":
+        return f"{r.var}.{r.prop}"
+    return r.var
+
+
+def _project(graph: Graph, p: Plan, seeds: np.ndarray, B: jnp.ndarray) -> Result:
+    Bn = np.asarray(B)
+    cols = [_colname(r) for r in p.returns]
+    src_var = p.src_var
+    terminal = p.expands[-1].dst_var if p.expands else src_var
+
+    returns_src = any(r.var == src_var and r.kind != "count" for r in p.returns)
+    only_counts = all(r.kind == "count" for r in p.returns)
+
+    rows: List[tuple] = []
+    if only_counts and not returns_src:
+        # global aggregate: one row
+        vals = []
+        for r in p.returns:
+            tot = (Bn > 0).sum() if r.distinct or p.semiring == "or_and" else Bn.sum()
+            vals.append(int(tot))
+        rows = [tuple(vals)]
+    elif only_counts or (returns_src and all(r.kind == "count" or r.var == src_var
+                                             for r in p.returns)):
+        # grouped by seed
+        for j, s in enumerate(seeds):
+            vals = []
+            for r in p.returns:
+                if r.kind == "count":
+                    tot = (Bn[:, j] > 0).sum() if (r.distinct or p.semiring == "or_and") else Bn[:, j].sum()
+                    vals.append(int(tot))
+                elif r.kind == "prop":
+                    vals.append(_prop(graph, r.prop, int(s)))
+                else:
+                    vals.append(int(s))
+            rows.append(tuple(vals))
+    else:
+        # materialize (seed, dst) bindings
+        dst_rows, seed_cols = np.nonzero(Bn > 0)
+        for d, j in zip(dst_rows, seed_cols):
+            vals = []
+            for r in p.returns:
+                node = int(seeds[j]) if r.var == src_var else int(d)
+                if r.kind == "prop":
+                    vals.append(_prop(graph, r.prop, node))
+                else:
+                    vals.append(node)
+            rows.append(tuple(vals))
+        rows.sort()
+    if p.limit is not None:
+        rows = rows[: p.limit]
+    return Result(cols, rows)
+
+
+def _prop(graph: Graph, prop: str, node: int):
+    col = graph.node_props.get(prop)
+    if col is None:
+        return None
+    v = float(np.asarray(col)[node])
+    return None if np.isnan(v) else v
+
+
+def explain(graph: Graph, query) -> str:
+    q = parse(query) if isinstance(query, str) else query
+    return plan(q).explain()

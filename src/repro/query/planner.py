@@ -1,0 +1,109 @@
+"""Logical planning: MatchQuery AST -> algebraic execution plan.
+
+The plan mirrors RedisGraph's ExecutionPlan: a NodeScan (label diagonal or
+seed one-hots) followed by Expand operators (semiring vxm per hop, masked by
+label/property diagonals), ending in Project/Aggregate.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from repro.query import qast as A
+
+
+@dataclasses.dataclass
+class Expand:
+    rel: Optional[str]
+    direction: str
+    min_hops: int
+    max_hops: int
+    dst_var: Optional[str]
+    dst_label: Optional[str]
+
+
+@dataclasses.dataclass
+class Plan:
+    src_var: Optional[str]
+    src_label: Optional[str]
+    seeds: Optional[List[int]]          # explicit seed ids, else label scan
+    var_preds: dict                     # var -> predicate AST list (conjunction)
+    expands: List[Expand]
+    returns: List[A.ReturnItem]
+    limit: Optional[int]
+    semiring: str                       # or_and (distinct) | plus_times (walks)
+
+    def explain(self) -> str:
+        lines = []
+        scan = (f"NodeByIdSeek({self.src_var}, ids={self.seeds})" if self.seeds
+                else f"NodeByLabelScan({self.src_var}:{self.src_label or '*'})")
+        lines.append(scan)
+        for e in self.expands:
+            lines.append(
+                f"ConditionalTraverse([{e.rel or '*'}] {e.direction} "
+                f"*{e.min_hops}..{e.max_hops} -> {e.dst_var}:{e.dst_label or '*'}"
+                f") [semiring={self.semiring}]")
+        for v, preds in self.var_preds.items():
+            if preds:
+                lines.append(f"Filter({v}: {len(preds)} predicate(s))")
+        lines.append(f"Project({[r.kind + ':' + r.var for r in self.returns]}"
+                     f" limit={self.limit})")
+        return "\n".join(lines)
+
+
+def _pred_vars(node) -> set:
+    if isinstance(node, A.Comparison):
+        out = set()
+        for side in (node.lhs, node.rhs):
+            if side[0] in ("prop", "id"):
+                out.add(side[1])
+        return out
+    if isinstance(node, A.BoolExpr):
+        out = set()
+        for a in node.args:
+            out |= _pred_vars(a)
+        return out
+    if isinstance(node, A.InSeeds):
+        return {node.var}
+    raise TypeError(node)
+
+
+def plan(q: A.MatchQuery) -> Plan:
+    if not q.nodes:
+        raise ValueError("empty pattern")
+    src = q.nodes[0]
+    var_preds: dict = {n.var: [] for n in q.nodes if n.var}
+    seeds = None
+
+    for pred in q.where:
+        vars_ = _pred_vars(pred)
+        if len(vars_) != 1:
+            raise NotImplementedError(
+                f"cross-variable predicate over {vars_} not supported")
+        v = next(iter(vars_))
+        if v not in var_preds:
+            raise ValueError(f"unknown variable {v}")
+        # seed selectors on the source variable become NodeByIdSeek
+        if v == src.var and isinstance(pred, A.InSeeds):
+            seeds = (seeds or []) + list(pred.seeds)
+        elif (v == src.var and isinstance(pred, A.Comparison)
+              and pred.op == "=" and pred.lhs[0] == "id" and pred.rhs[0] == "lit"):
+            seeds = (seeds or []) + [int(pred.rhs[1])]
+        else:
+            var_preds[v].append(pred)
+
+    # distinct-vertex reachability (or_and) unless someone counts walks
+    semiring = "or_and"
+    for r in q.returns:
+        if r.kind == "count" and not r.distinct:
+            semiring = "plus_times"
+
+    expands = []
+    for i, e in enumerate(q.edges):
+        dst = q.nodes[i + 1]
+        expands.append(Expand(e.rel, e.direction, e.min_hops, e.max_hops,
+                              dst.var, dst.label))
+    return Plan(src.var, src.label, seeds, var_preds, expands,
+                q.returns, q.limit, semiring)

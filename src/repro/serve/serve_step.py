@@ -1,0 +1,43 @@
+"""Serving steps: prefill + decode drivers used by launch/serve.py, the
+dry-run (decode shapes lower `serve_step`, not `train_step`) and examples."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ModelBundle
+
+
+def make_serve_step(model: ModelBundle):
+    """serve_step = one decode step with a full-size KV cache: the unit the
+    decode_32k / long_500k grid cells lower and roofline."""
+
+    def serve_step(params, cache, batch, pos):
+        logits, cache = model.decode_fn(params, cache, batch, pos)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return serve_step
+
+
+def greedy_generate(model: ModelBundle, params, prompt, max_new: int,
+                    cache_len: int):
+    """CPU-scale generation loop (examples): prefill by teacher-forced decode
+    steps, then greedy decode."""
+    B, S = prompt.shape
+    cache = jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype),
+        model.cache_specs(B, cache_len),
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    step = jax.jit(model.decode_fn)
+    logits = None
+    for pos in range(S):
+        logits, cache = step(params, cache, {"tokens": prompt[:, pos:pos+1]},
+                             pos)
+    out = [jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)]
+    for pos in range(S, S + max_new - 1):
+        logits, cache = step(params, cache, {"tokens": out[-1][:, None]}, pos)
+        out.append(jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32))
+    return jnp.stack(out, axis=1)

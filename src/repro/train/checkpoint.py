@@ -1,0 +1,131 @@
+"""Sharded, atomic, async checkpointing (orbax-free, built in-repo).
+
+Layout:   <dir>/step_<N>/
+            manifest.json        # tree structure, shapes, dtypes, hashes
+            leaf_<i>.npy         # one file per pytree leaf
+          <dir>/LATEST           # atomic pointer (write-tmp + rename)
+
+Fault tolerance: writes go to step_<N>.tmp then a single atomic rename; a
+crash mid-write never corrupts LATEST. The async writer runs in a background
+thread (compute/IO overlap); `wait()` joins before the next save.
+Elastic restore: leaves are loaded host-side and re-sharded onto whatever
+mesh the restarted job has (jax.device_put with the new sharding), so the
+job can resume on a different data-parallel size.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+from typing import Optional
+
+import jax
+import numpy as np
+
+
+def _paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [jax.tree_util.keystr(kp) for kp, _ in flat]
+
+
+def save(tree, directory: str, step: int) -> str:
+    tmp = os.path.join(directory, f"step_{step}.tmp")
+    final = os.path.join(directory, f"step_{step}")
+    os.makedirs(tmp, exist_ok=True)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    manifest = {"step": step, "leaves": []}
+    for i, (kp, leaf) in enumerate(flat):
+        arr = np.asarray(leaf)
+        fn = f"leaf_{i}.npy"
+        np.save(os.path.join(tmp, fn), arr)
+        manifest["leaves"].append({
+            "path": jax.tree_util.keystr(kp), "file": fn,
+            "shape": list(arr.shape), "dtype": str(arr.dtype),
+            "sha1": hashlib.sha1(arr.tobytes()).hexdigest(),
+        })
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    # atomic LATEST pointer
+    ptr_tmp = os.path.join(directory, "LATEST.tmp")
+    with open(ptr_tmp, "w") as f:
+        f.write(str(step))
+    os.replace(ptr_tmp, os.path.join(directory, "LATEST"))
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    p = os.path.join(directory, "LATEST")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return int(f.read().strip())
+
+
+def restore(tree_like, directory: str, step: Optional[int] = None,
+            shardings=None, verify: bool = True):
+    """Restore into the structure of `tree_like` (specs or arrays).
+    `shardings`: optional matching tree of NamedSharding for elastic resume."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {directory}")
+    d = os.path.join(directory, f"step_{step}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat, treedef = jax.tree_util.tree_flatten(tree_like)
+    shard_flat = (jax.tree_util.tree_leaves(shardings)
+                  if shardings is not None else [None] * len(flat))
+    assert len(manifest["leaves"]) == len(flat), "tree structure changed"
+    out = []
+    for meta, spec, shd in zip(manifest["leaves"], flat, shard_flat):
+        arr = np.load(os.path.join(d, meta["file"]))
+        if verify:
+            h = hashlib.sha1(arr.tobytes()).hexdigest()
+            if h != meta["sha1"]:
+                raise IOError(f"checksum mismatch for {meta['path']}")
+        if shd is not None:
+            out.append(jax.device_put(arr, shd))
+        else:
+            out.append(jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out), step
+
+
+class AsyncCheckpointer:
+    """Background-thread writer: training continues while the previous step
+    serializes. Device->host transfer happens on the caller thread (cheap,
+    and correct w.r.t. donated buffers); file IO happens off-thread."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    def save(self, tree, step: int):
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+        self.wait()
+        self._thread = threading.Thread(
+            target=self._write, args=(host_tree, step), daemon=True)
+        self._thread.start()
+
+    def _write(self, host_tree, step):
+        save(host_tree, self.directory, step)
+        self._gc()
+
+    def _gc(self):
+        steps = sorted(
+            int(n.split("_")[1]) for n in os.listdir(self.directory)
+            if n.startswith("step_") and not n.endswith(".tmp"))
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s}"),
+                          ignore_errors=True)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

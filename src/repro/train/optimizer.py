@@ -1,0 +1,168 @@
+"""Optimizers built in-repo (no optax): AdamW and Adafactor (factored second
+moment — required for llama4-maverick, whose Adam state exceeds 256x16 GB),
+plus cosine LR schedule and global-norm clipping. State trees shard exactly
+like their parameters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"          # adamw | adafactor
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    # adafactor
+    decay_rate: float = 0.8
+    factored_min_dim: int = 128
+    # §Perf T7: apply the update lax.map'd over the leading (stacked-layer)
+    # dim of leaves bigger than this, so f32 temporaries are one layer's
+    # worth, not the whole 2 TB stacked tensor (llama4 wg = 15.7 GB/device
+    # f32 otherwise).
+    chunked_update_min_bytes: int = 1 << 30
+
+
+def _chunk_leafwise(fn, opt: OptConfig, p, *args):
+    """Run `fn(p_slice, *arg_slices)` lax.map'd over dim0 for huge leaves."""
+    if (p.ndim >= 3 and p.size * 4 >= opt.chunked_update_min_bytes):
+        return jax.lax.map(lambda xs: fn(*xs), (p, *args))
+    return fn(p, *args)
+
+
+def schedule(opt: OptConfig, step):
+    step = jnp.asarray(step, jnp.float32)
+    warm = opt.lr * step / jnp.maximum(opt.warmup_steps, 1)
+    t = jnp.clip((step - opt.warmup_steps)
+                 / jnp.maximum(opt.total_steps - opt.warmup_steps, 1), 0, 1)
+    cos = opt.lr * (opt.min_lr_frac
+                    + (1 - opt.min_lr_frac) * 0.5 * (1 + jnp.cos(np.pi * t)))
+    return jnp.where(step < opt.warmup_steps, warm, cos)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gn
+
+
+# -- AdamW ----------------------------------------------------------------------
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(opt: OptConfig, params, grads, state):
+    step = state["step"] + 1
+    lr = schedule(opt, step)
+    b1, b2 = opt.b1, opt.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd_inner(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + opt.eps)
+        if p.ndim >= 2:
+            u = u + opt.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m, v
+
+    def upd(p, g, m, v):
+        return _chunk_leafwise(upd_inner, opt, p, g, m, v)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}
+
+
+# -- Adafactor --------------------------------------------------------------------
+def _factored(shape, min_dim):
+    return len(shape) >= 2 and shape[-1] >= min_dim and shape[-2] >= min_dim
+
+
+def adafactor_init(params, opt: OptConfig = OptConfig()):
+    def one(p):
+        if _factored(p.shape, opt.factored_min_dim):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"acc": jax.tree.map(one, params,
+                                is_leaf=lambda x: hasattr(x, "shape")),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(opt: OptConfig, params, grads, state):
+    step = state["step"] + 1
+    lr = schedule(opt, step)
+    beta2 = 1.0 - step.astype(jnp.float32) ** (-opt.decay_rate)
+
+    def upd_inner(p, g, acc):
+        g = g.astype(jnp.float32)
+        g2 = g * g + 1e-30
+        if "vr" in acc:
+            vr = beta2 * acc["vr"] + (1 - beta2) * g2.mean(axis=-1)
+            vc = beta2 * acc["vc"] + (1 - beta2) * g2.mean(axis=-2)
+            denom = jnp.sqrt(
+                vr[..., :, None] * vc[..., None, :]
+                / jnp.maximum(vr.mean(axis=-1, keepdims=True)[..., None], 1e-30))
+            new_acc = {"vr": vr, "vc": vc}
+        else:
+            v = beta2 * acc["v"] + (1 - beta2) * g2
+            denom = jnp.sqrt(v)
+            new_acc = {"v": v}
+        u = g / jnp.maximum(denom, 1e-30)
+        # update clipping (RMS <= 1) per the Adafactor paper
+        rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, rms)
+        if p.ndim >= 2:
+            u = u + opt.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), new_acc
+
+    def upd(p, g, acc):
+        if (p.ndim >= 4 and "vr" in acc
+                and p.size * 4 >= opt.chunked_update_min_bytes):
+            # factored stats factor the *last two* dims; map over dim0 keeps
+            # that structure per layer slice.
+            return jax.lax.map(lambda xs: upd_inner(*xs), (p, g, acc))
+        return upd_inner(p, g, acc)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    accs = state["acc"]
+    flat_a = jax.tree.leaves(accs, is_leaf=lambda x: isinstance(x, dict)
+                             and ("v" in x or "vr" in x))
+    out = [upd(p, g, a) for p, g, a in zip(flat_p, flat_g, flat_a)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_a = jax.tree.unflatten(tdef, [o[1] for o in out])
+    return new_p, {"acc": new_a, "step": step}
+
+
+def init_fn(name: str):
+    return {"adamw": adamw_init, "adafactor": adafactor_init}[name]
+
+
+def update_fn(name: str):
+    return {"adamw": adamw_update, "adafactor": adafactor_update}[name]

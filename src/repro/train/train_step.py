@@ -1,0 +1,108 @@
+"""The jit-able train step: loss -> grad -> (optional compression) -> update.
+
+Supports gradient-accumulation microbatching (activation memory lever) and
+int8 gradient compression with error feedback (distr/compression.py) for
+bandwidth-bound DP meshes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distr import compression
+from repro.train import optimizer as opt_mod
+
+
+def make_train_step(model, opt_cfg: opt_mod.OptConfig, *,
+                    microbatches: int = 1, compress_grads: bool = False,
+                    accum_dtype=jnp.float32, hoist_weight_gather: bool = False):
+    update = opt_mod.update_fn(opt_cfg.name)
+
+    def loss_of(params, batch):
+        return model.loss_fn(params, batch)
+
+    def _tp_only(params):
+        """§Perf T11: pin params replicated over the data group (TP-only) so
+        the FSDP all-gather is hoisted OUT of the microbatch loop — GSPMD
+        emits one all-gather fwd and one reduce-scatter for the scan-summed
+        cotangent, instead of 2 x params-bytes per LAYER per MICROBATCH."""
+        from repro.distr import shardctx, sharding as sh
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        ctx = shardctx.get()
+        if ctx is None:
+            return params
+        mesh = ctx.mesh
+        drop = set(sh.data_axes(mesh))
+
+        def one(kp, p):
+            spec = sh.param_pspec(jax.tree_util.keystr(kp), p.shape, mesh,
+                                  vocab=getattr(model.cfg, "vocab", None))
+            kept = tuple(
+                None if (e in drop or (isinstance(e, tuple)
+                                       and set(e) & drop)) else e
+                for e in spec)
+            return jax.lax.with_sharding_constraint(
+                p, NamedSharding(mesh, P(*kept)))
+
+        flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+        return jax.tree_util.tree_unflatten(
+            treedef, [one(kp, p) for kp, p in flat])
+
+    def train_step(params, opt_state, batch, error_fb=None):
+        if microbatches > 1:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            if hoist_weight_gather:
+                # §Perf T11 variant — MEASURED AND REFUTED at mb=4/256 chips
+                # (EXPERIMENTS.md): the replicated cotangent accumulator +
+                # TP-only weight copies cost more memory (51 GB) than the
+                # per-microbatch re-gathers cost collectives. Kept behind the
+                # flag: napkin math says it wins at mb >= 16 or pod-scale DP.
+                def total_loss(params):
+                    params_use = _tp_only(params)
+
+                    def acc_step(loss_acc, mb):
+                        return loss_acc + loss_of(params_use, mb), None
+
+                    acc_step = jax.checkpoint(acc_step)
+                    loss_sum, _ = jax.lax.scan(
+                        acc_step, jnp.float32(0.0), micro)
+                    return loss_sum / microbatches
+
+                loss, grads = jax.value_and_grad(total_loss)(params)
+            else:
+                def acc_step(carry, mb):
+                    loss_acc, grad_acc = carry
+                    l, g = jax.value_and_grad(loss_of)(params, mb)
+                    return (loss_acc + l,
+                            jax.tree.map(
+                                lambda a, b: a + b.astype(accum_dtype),
+                                grad_acc, g)), None
+
+                zeros = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, accum_dtype), params)
+                (loss, grads), _ = jax.lax.scan(
+                    acc_step, (jnp.float32(0.0), zeros), micro)
+                loss = loss / microbatches
+                grads = jax.tree.map(lambda g: g / microbatches, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_of)(params, batch)
+
+        if compress_grads:
+            grads, error_fb = compression.compress_decompress(grads, error_fb)
+
+        grads, gnorm = opt_mod.clip_by_global_norm(grads, opt_cfg.clip_norm)
+        params, opt_state = update(opt_cfg, params, grads, opt_state)
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "lr": opt_mod.schedule(opt_cfg, opt_state["step"])}
+        if compress_grads:
+            return params, opt_state, metrics, error_fb
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,162 @@
+"""Graph algorithms vs pure-python oracles on random graphs."""
+import heapq
+from collections import deque
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import algorithms as alg
+from repro.graph.graph import GraphBuilder
+
+N = 220
+
+
+def rand_digraph(n=N, m=1400, seed=0, weighted=False):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, size=m)
+    dst = rng.integers(0, n, size=m)
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    w = rng.uniform(0.5, 3.0, size=src.shape[0]).astype(np.float32) if weighted else None
+    return src, dst, w
+
+
+def adj_list(src, dst, n, w=None):
+    out = [[] for _ in range(n)]
+    for i in range(len(src)):
+        out[src[i]].append((int(dst[i]), float(w[i]) if w is not None else 1.0))
+    return out
+
+
+def py_bfs(adj, seed, n):
+    lvl = [float("inf")] * n
+    lvl[seed] = 0
+    q = deque([seed])
+    while q:
+        u = q.popleft()
+        for v, _ in adj[u]:
+            if lvl[v] == float("inf"):
+                lvl[v] = lvl[u] + 1
+                q.append(v)
+    return lvl
+
+
+def py_dijkstra(adj, seed, n):
+    dist = [float("inf")] * n
+    dist[seed] = 0.0
+    h = [(0.0, seed)]
+    while h:
+        d, u = heapq.heappop(h)
+        if d > dist[u]:
+            continue
+        for v, w in adj[u]:
+            nd = d + w
+            if nd < dist[v] - 1e-9:
+                dist[v] = nd
+                heapq.heappush(h, (nd, v))
+    return dist
+
+
+@pytest.fixture(scope="module", params=["bsr", "ell"])
+def graph_fixture(request):
+    src, dst, _ = rand_digraph(seed=1)
+    g = GraphBuilder(N).add_edges("R", src, dst).build(fmt=request.param, block=64)
+    # oracle adjacency from the *deduped* edges the builder kept
+    D = np.asarray(g.relations["R"].A.to_dense())
+    r, c = np.nonzero(D)
+    return g, adj_list(r, c, N)
+
+
+def test_bfs_levels(graph_fixture):
+    g, adj = graph_fixture
+    seeds = [0, 5, 77, 123]
+    got = np.asarray(alg.bfs_levels(g.relations["R"].A_T, seeds, g.n, max_iter=N))
+    for j, s in enumerate(seeds):
+        want = np.array(py_bfs(adj, s, g.n))
+        np.testing.assert_array_equal(got[:, j], want, err_msg=f"seed {s}")
+
+
+@pytest.mark.parametrize("k", [1, 2, 3, 6])
+def test_khop_counts(graph_fixture, k):
+    g, adj = graph_fixture
+    seeds = [3, 50, 199]
+    got = np.asarray(alg.khop_counts(g.relations["R"].A_T, seeds, g.n, k=k))
+    for j, s in enumerate(seeds):
+        lv = py_bfs(adj, s, g.n)
+        want = sum(1 for v in range(g.n) if 1 <= lv[v] <= k)
+        assert got[j] == want, f"seed {s} k {k}"
+
+
+def test_sssp_vs_dijkstra():
+    src, dst, w = rand_digraph(seed=2, weighted=True)
+    g = GraphBuilder(N).add_edges("R", src, dst, w).build(fmt="bsr", block=64)
+    D = np.asarray(g.relations["R"].A.to_dense())
+    r, c = np.nonzero(D)
+    adj = [[] for _ in range(N)]
+    for i in range(len(r)):
+        adj[r[i]].append((int(c[i]), float(D[r[i], c[i]])))
+    seeds = [0, 10, 111]
+    got = np.asarray(alg.sssp(g.relations["R"].A_T, seeds, g.n))
+    for j, s in enumerate(seeds):
+        want = np.array(py_dijkstra(adj, s, g.n))
+        np.testing.assert_allclose(got[:, j], want, rtol=1e-4, atol=1e-4)
+
+
+def test_pagerank_sums_to_one_and_matches_numpy():
+    src, dst, _ = rand_digraph(seed=3)
+    g = GraphBuilder(N).add_edges("R", src, dst).build(fmt="bsr", block=64)
+    rel = g.relations["R"]
+    got = np.asarray(alg.pagerank(rel.A, rel.A_T, g.n, iters=60))
+    assert abs(got.sum() - 1.0) < 1e-4
+    # numpy power iteration oracle
+    D = np.asarray(rel.A.to_dense())
+    deg = D.sum(1)
+    P = np.where(deg[:, None] > 0, D / np.maximum(deg[:, None], 1e-30), 0.0)
+    r = np.full(N, 1.0 / N)
+    for _ in range(60):
+        dmass = r[deg == 0].sum() / N
+        r = (1 - 0.85) / N + 0.85 * (P.T @ r + dmass)
+    np.testing.assert_allclose(got, r, rtol=1e-3, atol=1e-6)
+
+
+def test_wcc_matches_union_find():
+    rng = np.random.default_rng(5)
+    # a few disjoint clusters with random internal edges
+    sizes = [40, 80, 25, 75]
+    offs = np.cumsum([0] + sizes)
+    src_all, dst_all = [], []
+    for i, sz in enumerate(sizes):
+        # random spanning path + extra edges keeps each cluster connected
+        perm = rng.permutation(sz) + offs[i]
+        src_all += list(perm[:-1])
+        dst_all += list(perm[1:])
+        e = rng.integers(0, sz, size=(sz, 2)) + offs[i]
+        src_all += list(e[:, 0])
+        dst_all += list(e[:, 1])
+    n = offs[-1]
+    src, dst = np.array(src_all), np.array(dst_all)
+    keep = src != dst
+    g = GraphBuilder(n).add_edges("R", src[keep], dst[keep]).build(fmt="bsr", block=64)
+    rel = g.relations["R"]
+    labels = np.asarray(alg.wcc(rel.A_T, rel.A, n))
+    for i, sz in enumerate(sizes):
+        comp = labels[offs[i]:offs[i + 1]]
+        assert (comp == comp[0]).all(), f"cluster {i} split"
+    assert len(np.unique(labels)) == len(sizes)
+
+
+def test_triangle_count_vs_bruteforce():
+    rng = np.random.default_rng(6)
+    n = 96
+    e = rng.integers(0, n, size=(600, 2))
+    e = e[e[:, 0] != e[:, 1]]
+    # symmetrize
+    src = np.concatenate([e[:, 0], e[:, 1]])
+    dst = np.concatenate([e[:, 1], e[:, 0]])
+    g = GraphBuilder(n).add_edges("R", src, dst).build(fmt="bsr", block=32)
+    A = g.relations["R"].A
+    got = int(alg.triangle_count(A))
+    D = np.asarray(A.to_dense()) != 0
+    want = int(np.trace((D.astype(np.int64) @ D @ D)) // 6)
+    assert got == want

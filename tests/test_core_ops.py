@@ -1,0 +1,108 @@
+"""Core GraphBLAS ops: BSR/ELL round-trips + semiring matmul vs dense oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import BSR, ELL, ops, semiring as S
+
+RNG = np.random.default_rng(0)
+
+
+def rand_coo(n, m, nnz, seed=0, weighted=True):
+    rng = np.random.default_rng(seed)
+    r = rng.integers(0, n, size=nnz)
+    c = rng.integers(0, m, size=nnz)
+    # dedup
+    key = r * m + c
+    _, idx = np.unique(key, return_index=True)
+    r, c = r[idx], c[idx]
+    v = rng.uniform(0.5, 2.0, size=r.shape[0]) if weighted else np.ones(r.shape[0])
+    return r, c, v
+
+
+def dense_of(r, c, v, shape):
+    A = np.zeros(shape, dtype=np.float32)
+    A[r, c] = v
+    return A
+
+
+ALL_SR = ["plus_times", "or_and", "plus_pair", "min_plus", "max_plus", "plus_first"]
+
+
+@pytest.mark.parametrize("fmt", ["bsr", "ell"])
+def test_roundtrip(fmt):
+    r, c, v = rand_coo(200, 150, 900, seed=1)
+    D = dense_of(r, c, v, (200, 150))
+    M = (BSR if fmt == "bsr" else ELL).from_coo(r, c, v, (200, 150), **({"block": 64} if fmt == "bsr" else {}))
+    np.testing.assert_allclose(np.asarray(M.to_dense()), D, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(M.transpose().to_dense()), D.T, rtol=1e-6)
+    assert M.nnz == len(r)
+
+
+@pytest.mark.parametrize("srname", ALL_SR)
+@pytest.mark.parametrize("fmt", ["bsr", "ell", "dense"])
+def test_mxm_matches_oracle(srname, fmt):
+    sr = S.get(srname)
+    n, m, f = 130, 170, 7
+    r, c, v = rand_coo(n, m, 800, seed=2)
+    D = dense_of(r, c, v, (n, m))
+    X = np.where(RNG.uniform(size=(m, f)) < 0.3,
+                 RNG.uniform(0.5, 2.0, size=(m, f)), 0.0).astype(np.float32)
+    want = S.dense_mxm(S.structural_dense(jnp.asarray(D), sr), jnp.asarray(X), sr)
+    if fmt == "bsr":
+        A = BSR.from_coo(r, c, v, (n, m), block=64)
+    elif fmt == "ell":
+        A = ELL.from_coo(r, c, v, (n, m))
+    else:
+        A = jnp.asarray(D)
+    got = ops.mxm(A, jnp.asarray(X), sr)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_empty_block_rows_covered():
+    # rows 0..63 empty (block 64): padding tiles must still init the output
+    r = np.array([100, 101, 120])
+    c = np.array([3, 50, 90])
+    A = BSR.from_coo(r, c, None, (128, 128), block=64)
+    X = np.ones((128, 4), dtype=np.float32)
+    y = ops.mxm(A, jnp.asarray(X), S.PLUS_TIMES)
+    assert y.shape == (128, 4)
+    np.testing.assert_allclose(np.asarray(y)[:64], 0.0)
+
+
+def test_mask_and_accum():
+    sr = S.PLUS_TIMES
+    A = jnp.asarray(RNG.uniform(size=(8, 8)).astype(np.float32))
+    X = jnp.asarray(RNG.uniform(size=(8, 3)).astype(np.float32))
+    mask = jnp.asarray((RNG.uniform(size=(8, 3)) < 0.5).astype(np.int8))
+    raw = np.asarray(S.dense_mxm(A, X, sr))
+    got = np.asarray(ops.mxm(A, X, sr, mask=mask))
+    np.testing.assert_allclose(got, raw * np.asarray(mask), rtol=1e-6)
+    got_c = np.asarray(ops.mxm(A, X, sr, mask=mask, complement=True))
+    np.testing.assert_allclose(got_c, raw * (1 - np.asarray(mask)), rtol=1e-6)
+    old = jnp.ones((8, 3), dtype=jnp.float32)
+    got_a = np.asarray(ops.mxm(A, X, sr, mask=mask, accum=S.PLUS, C=old))
+    np.testing.assert_allclose(got_a, 1.0 + raw * np.asarray(mask), rtol=1e-6)
+
+
+def test_mxv_vxm_consistency():
+    r, c, v = rand_coo(96, 96, 400, seed=3)
+    A = BSR.from_coo(r, c, v, (96, 96), block=32)
+    D = dense_of(r, c, v, (96, 96))
+    x = RNG.uniform(size=96).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(ops.mxv(A, jnp.asarray(x), S.PLUS_TIMES)),
+                               D @ x, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(ops.vxm(jnp.asarray(x), A, S.PLUS_TIMES)),
+                               x @ D, rtol=1e-4, atol=1e-4)
+
+
+def test_auto_format():
+    # dense-ish blocks -> BSR; scattered hypersparse -> ELL
+    r = np.repeat(np.arange(64), 32)
+    c = np.tile(np.arange(32), 64)
+    assert isinstance(ops.auto_format(r, c, None, (64, 64), block=64), BSR)
+    rng = np.random.default_rng(0)
+    r2 = rng.integers(0, 100_000, size=500)
+    c2 = rng.integers(0, 100_000, size=500)
+    assert isinstance(ops.auto_format(r2, c2, None, (100_000, 100_000)), ELL)

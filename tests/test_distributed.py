@@ -1,0 +1,36 @@
+"""Distributed correctness + dry-run smoke, in subprocesses (so the fake
+device count never leaks into this process's jax)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run(cmd, env_extra=None, timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    if env_extra:
+        env.update(env_extra)
+    return subprocess.run(cmd, cwd=ROOT, env=env, capture_output=True,
+                          text=True, timeout=timeout)
+
+
+def test_distributed_checks():
+    r = run([sys.executable, os.path.join(ROOT, "tests", "distributed_check.py")])
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "ALL DISTRIBUTED CHECKS PASSED" in r.stdout
+
+
+def test_dryrun_cli_smoke(tmp_path):
+    """The real dryrun module end-to-end on a reduced 32-device grid."""
+    r = run([sys.executable, "-m", "repro.launch.dryrun",
+             "--arch", "gemma-2b", "--shape", "decode_32k",
+             "--mesh", "single", "--out", str(tmp_path)],
+            env_extra={"XLA_FLAGS":
+                       "--xla_force_host_platform_device_count=256"})
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "1 ok, 0 errors" in r.stdout

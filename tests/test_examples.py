@@ -1,0 +1,44 @@
+"""The examples are part of the public API surface: run each as a subprocess
+(proves they are genuinely runnable, not just importable)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_example(name, args=(), timeout=420):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, os.path.join(ROOT, "examples", name),
+                        *args],
+                       cwd=ROOT, env=env, capture_output=True, text=True,
+                       timeout=timeout)
+    assert r.returncode == 0, f"{name}: {r.stdout[-1500:]}\n{r.stderr[-1500:]}"
+    return r.stdout
+
+
+def test_quickstart():
+    out = run_example("quickstart.py")
+    assert "2-hop neighborhood of node 0:" in out
+    assert "ConditionalTraverse" in out
+
+
+def test_serve_queries():
+    out = run_example("serve_queries.py", ["--scale", "9", "--queries", "64"])
+    assert "queries/s" in out
+    assert "batches=1" in out
+
+
+def test_graph_analytics():
+    out = run_example("graph_analytics.py")
+    assert "pagerank" in out and "triangles" in out
+    assert "wcc" in out and "sssp" in out
+
+
+def test_train_lm():
+    out = run_example("train_lm.py", ["--steps", "8"])
+    assert "descending" in out

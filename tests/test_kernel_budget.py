@@ -1,0 +1,48 @@
+"""Structural perf checks for the Pallas kernel: VMEM working-set budget and
+MXU alignment of the production tile configuration (reasoned from BlockSpecs,
+per the dry-run-profiling methodology — no TPU needed)."""
+import numpy as np
+
+from repro.kernels import bsr_mxm as K
+
+VMEM_BYTES = 16 * 1024 * 1024     # v5e per-core VMEM
+
+
+def working_set_bytes(block: int, f_tile: int, in_dtype_bytes: int = 4,
+                      bcast_chunk: int = 8):
+    """Live VMEM per grid step: A tile + X tile + Y tile (+ mask tile) plus
+    the tropical path's broadcast chunk."""
+    a = block * block * in_dtype_bytes
+    x = block * f_tile * 4
+    y = block * f_tile * 4
+    m = block * f_tile * 4
+    trop = bcast_chunk * block * f_tile * 4
+    return a + x + y + m + trop
+
+
+def test_default_config_fits_vmem():
+    assert working_set_bytes(128, K.DEFAULT_F_TILE) < VMEM_BYTES // 2
+
+
+def test_large_tiles_fit_with_headroom():
+    # the tuning range the kernel exposes stays inside VMEM
+    for block in (128, 256):
+        for f_tile in (128, 256, 512):
+            ws = working_set_bytes(block, f_tile)
+            assert ws < VMEM_BYTES, (block, f_tile, ws)
+
+
+def test_mxu_alignment_of_production_tiles():
+    # MXU is 128x128: production block sizes must be multiples of 128
+    for block in (128, 256):
+        assert block % 128 == 0
+    assert K.DEFAULT_F_TILE % 128 == 0
+
+
+def test_grid_is_sequential_minor_for_revisits():
+    """The accumulation schedule requires the nnzb axis to iterate minormost
+    (revisited output tiles stay in VMEM): documented invariant check on the
+    grid construction — (F_tiles, nnzb) with nnzb last."""
+    import inspect
+    src = inspect.getsource(K.bsr_mxm)
+    assert "grid = (fp // ft, A.nnzb)" in src

@@ -1,0 +1,132 @@
+"""Property-based tests (hypothesis) on the system's algebraic invariants."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import algorithms as alg
+from repro.core import BSR, ELL, ops, semiring as S
+from repro.graph.graph import GraphBuilder
+from repro.kernels import ops as kops
+from repro.kernels.ref import bsr_mxm_ref
+
+
+def coo(draw_n, draw_m, rng):
+    nnz = int(rng.integers(1, draw_n * 4))
+    r = rng.integers(0, draw_n, size=nnz)
+    c = rng.integers(0, draw_m, size=nnz)
+    key = r * draw_m + c
+    _, i = np.unique(key, return_index=True)
+    return r[i], c[i]
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10**6), n=st.integers(8, 96), m=st.integers(8, 96),
+       f=st.integers(1, 24),
+       srname=st.sampled_from(["plus_times", "or_and", "min_plus",
+                               "plus_pair"]),
+       block=st.sampled_from([8, 16, 32]))
+def test_kernel_random_sweep(seed, n, m, f, srname, block):
+    """Pallas kernel == oracle on random shapes/densities/semirings."""
+    rng = np.random.default_rng(seed)
+    r, c = coo(n, m, rng)
+    v = rng.uniform(0.5, 2.0, size=len(r))
+    A = BSR.from_coo(r, c, v, (n, m), block=block)
+    X = np.where(rng.uniform(size=(m, f)) < 0.4,
+                 rng.uniform(0.5, 2.0, size=(m, f)), 0.0).astype(np.float32)
+    sr = S.get(srname)
+    got = kops.bsr_mxm(A, jnp.asarray(X), sr, interpret=True, f_tile=32)
+    want = bsr_mxm_ref(A, jnp.asarray(X), sr)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10**6), n=st.integers(8, 64))
+def test_or_and_matmul_is_associative_on_reachability(seed, n):
+    """(A (x) B) (x) x == A (x) (B (x) x) over or_and (path composition)."""
+    rng = np.random.default_rng(seed)
+    A = (rng.uniform(size=(n, n)) < 0.1).astype(np.float32)
+    B = (rng.uniform(size=(n, n)) < 0.1).astype(np.float32)
+    x = (rng.uniform(size=(n, 3)) < 0.2).astype(np.float32)
+    AB = np.asarray(ops.mxm(jnp.asarray(A), jnp.asarray(B), S.OR_AND))
+    lhs = np.asarray(ops.mxm(jnp.asarray(AB), jnp.asarray(x), S.OR_AND))
+    Bx = np.asarray(ops.mxm(jnp.asarray(B), jnp.asarray(x), S.OR_AND))
+    rhs = np.asarray(ops.mxm(jnp.asarray(A), jnp.asarray(Bx), S.OR_AND))
+    np.testing.assert_array_equal(lhs, rhs)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10**6))
+def test_plus_times_is_linear(seed):
+    rng = np.random.default_rng(seed)
+    n = 48
+    r, c = coo(n, n, rng)
+    v = rng.uniform(0.5, 2.0, size=len(r))
+    A = BSR.from_coo(r, c, v, (n, n), block=16)
+    x = rng.normal(size=(n, 2)).astype(np.float32)
+    y = rng.normal(size=(n, 2)).astype(np.float32)
+    Axy = np.asarray(ops.mxm(A, jnp.asarray(x + y), S.PLUS_TIMES))
+    Ax = np.asarray(ops.mxm(A, jnp.asarray(x), S.PLUS_TIMES))
+    Ay = np.asarray(ops.mxm(A, jnp.asarray(y), S.PLUS_TIMES))
+    np.testing.assert_allclose(Axy, Ax + Ay, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10**6), k=st.integers(1, 4))
+def test_khop_monotone_in_k_and_edges(seed, k):
+    """k-hop counts are monotone in k AND in edge addition."""
+    rng = np.random.default_rng(seed)
+    n = 64
+    r, c = coo(n, n, rng)
+    keep = r != c
+    r, c = r[keep], c[keep]
+    if len(r) < 2:
+        return
+    g1 = GraphBuilder(n).add_edges("R", r[: len(r) // 2],
+                                   c[: len(r) // 2]).build(block=32)
+    g2 = GraphBuilder(n).add_edges("R", r, c).build(block=32)
+    seeds = [0, 7]
+    k1 = np.asarray(alg.khop_counts(g1.relations["R"].A_T, seeds, n, k=k))
+    k1b = np.asarray(alg.khop_counts(g1.relations["R"].A_T, seeds, n, k=k + 1))
+    k2 = np.asarray(alg.khop_counts(g2.relations["R"].A_T, seeds, n, k=k))
+    assert (k1b >= k1).all()          # monotone in k
+    assert (k2 >= k1).all()           # monotone in edges (superset graph)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10**6))
+def test_formats_agree_on_random_graphs(seed):
+    """BSR, ELL and dense paths compute identical or_and traversals."""
+    rng = np.random.default_rng(seed)
+    n = 72
+    r, c = coo(n, n, rng)
+    X = (rng.uniform(size=(n, 5)) < 0.3).astype(np.float32)
+    bsr = BSR.from_coo(r, c, None, (n, n), block=24)
+    ell = ELL.from_coo(r, c, None, (n, n))
+    dense = bsr.to_dense()
+    outs = [np.asarray(ops.mxm(a, jnp.asarray(X), S.OR_AND))
+            for a in (bsr, ell, dense)]
+    np.testing.assert_array_equal(outs[0], outs[1])
+    np.testing.assert_array_equal(outs[0], outs[2])
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10**6))
+def test_sssp_triangle_inequality(seed):
+    """dist(s, v) <= dist(s, u) + w(u, v) for every edge (u, v)."""
+    rng = np.random.default_rng(seed)
+    n = 48
+    r, c = coo(n, n, rng)
+    keep = r != c
+    r, c = r[keep], c[keep]
+    if len(r) == 0:
+        return
+    w = rng.uniform(0.5, 3.0, size=len(r)).astype(np.float32)
+    g = GraphBuilder(n).add_edges("R", r, c, w).build(fmt="bsr", block=16)
+    dist = np.asarray(alg.sssp(g.relations["R"].A_T, [0], n))[:, 0]
+    D = np.asarray(g.relations["R"].A.to_dense())
+    rr, cc = np.nonzero(D)
+    for u, v in zip(rr, cc):
+        if np.isfinite(dist[u]):
+            assert dist[v] <= dist[u] + D[u, v] + 1e-4
