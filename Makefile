@@ -1,0 +1,18 @@
+# Developer entry points. PYTHONPATH is injected per-target so the repo works
+# without an install step (there is no setup.py; the image bakes in runtime
+# deps — requirements-dev.txt lists the test-only extras).
+
+PY ?= python
+# src for the package, repo root so `benchmarks.*` resolves as a namespace pkg
+export PYTHONPATH := src:.$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test bench-smoke
+
+# tier-1 verification (the command ROADMAP.md pins)
+test:
+	$(PY) -m pytest -x -q
+
+# fast end-to-end benchmark pass: validates the masked plus_pair mxm against
+# the trace(A^3)/6 oracle and prints the CSV row (full suite: benchmarks/run.py)
+bench-smoke:
+	$(PY) benchmarks/run.py triangles

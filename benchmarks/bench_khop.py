@@ -43,22 +43,20 @@ def adj_list(g, rel):
 def bench_graph(name, g, rel, rows):
     rng = np.random.default_rng(0)
     adj = adj_list(g, rel)
-    A_T = g.relations[rel].A_T
-    jit_khop = jax.jit(
-        lambda s, k=0: None)  # placeholder; built per-k below
+    R = g.relations[rel]
     for k in (1, 2, 3, 6):
         n_seeds = 300 if k <= 2 else 10
         seeds = rng.integers(0, g.n, size=n_seeds)
 
         # GraphBLAS batched (the threadpool analog): one frontier matrix
-        fn = jax.jit(lambda s: alg.khop_counts(A_T, s, g.n, k=k))
+        fn = jax.jit(lambda s: alg.khop_counts(R, s, k=k))
         counts = np.asarray(fn(seeds))  # compile + run
         t0 = time.perf_counter()
         counts = np.asarray(fn(seeds))
         dt_batch = time.perf_counter() - t0
 
         # GraphBLAS sequential single requests (paper protocol)
-        one = jax.jit(lambda s: alg.khop_counts(A_T, s, g.n, k=k))
+        one = jax.jit(lambda s: alg.khop_counts(R, s, k=k))
         _ = np.asarray(one(seeds[:1]))
         t0 = time.perf_counter()
         for s in seeds[: min(n_seeds, 30)]:

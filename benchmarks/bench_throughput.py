@@ -13,12 +13,12 @@ from repro.graph.datagen import rmat_graph
 
 def run(rows):
     g = rmat_graph(scale=11, edge_factor=8, seed=5, fmt="bsr", block=128)
-    A_T = g.relations["KNOWS"].A_T
+    R = g.relations["KNOWS"]
     rng = np.random.default_rng(0)
     k = 2
     for width in (1, 8, 64, 256):
         seeds = rng.integers(0, g.n, size=width)
-        fn = jax.jit(lambda s: alg.khop_counts(A_T, s, g.n, k=k))
+        fn = jax.jit(lambda s: alg.khop_counts(R, s, k=k))
         np.asarray(fn(seeds))
         reps = max(1, 256 // width)
         t0 = time.perf_counter()

@@ -19,22 +19,22 @@ g = GraphBuilder(n).add_edges("E", src, dst, w).build(fmt="bsr", block=128)
 rel = g.relations["E"]
 print(f"graph: {n} vertices, {rel.nnz} edges")
 
-pr = np.asarray(alg.pagerank(rel.A, rel.A_T, n, iters=40))
+pr = np.asarray(alg.pagerank(rel, iters=40))
 top = np.argsort(-pr)[:5]
 print(f"pagerank (plus_times): top-5 hubs {top.tolist()}, "
       f"mass {pr[top].sum():.3f}")
 
-dist = np.asarray(alg.sssp(rel.A_T, [0], n))[:, 0]
+dist = np.asarray(alg.sssp(rel, [0]))[:, 0]
 reach = np.isfinite(dist)
 print(f"sssp (min_plus) from 0: reaches {reach.sum()} vertices, "
       f"max dist {dist[reach].max():.2f}")
 
-cc = np.asarray(alg.wcc(rel.A_T, rel.A, n))
+cc = np.asarray(alg.wcc(rel))
 print(f"wcc (min-label): {len(np.unique(cc))} components")
 
 # triangles need a symmetric graph
 s2 = np.concatenate([src, dst])
 d2 = np.concatenate([dst, src])
 gu = GraphBuilder(n).add_edges("E", s2, d2).build(fmt="bsr", block=128)
-t = int(alg.triangle_count(gu.relations["E"].A))
+t = int(alg.triangle_count(gu.relations["E"]))
 print(f"triangles (plus_pair, GraphChallenge): {t}")

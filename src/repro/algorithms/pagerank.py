@@ -1,22 +1,26 @@
-"""PageRank via plus_times vxm (pull form) with dangling-mass correction."""
+"""PageRank via plus_times pulls (transpose descriptor) with dangling-mass
+correction. Takes the graph's adjacency (Graph / Relation / GBMatrix / raw);
+the pull direction comes from the handle's cached transpose."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import ops, semiring as S
+from repro.core import grb, semiring as S
 
 
-def pagerank(A, A_T, n: int, alpha: float = 0.85, iters: int = 50,
-             impl: str = "auto") -> jnp.ndarray:
+def pagerank(A, alpha: float = 0.85, iters: int = 50,
+             rel=None) -> jnp.ndarray:
+    A = grb.matrix(A, rel)
+    n = A.shape[0]
     ones = jnp.ones((n, 1), dtype=jnp.float32)
-    deg = ops.mxm(A, ones, S.PLUS_TIMES, impl=impl)[:, 0]      # out-degree
+    deg = grb.mxm(A, ones, S.PLUS_TIMES)[:, 0]                 # out-degree
     dangling = deg == 0
     inv_deg = jnp.where(dangling, 0.0, 1.0 / jnp.maximum(deg, 1e-30))
 
     def body(_, r):
         push = r * inv_deg
-        pulled = ops.mxm(A_T, push[:, None], S.PLUS_TIMES, impl=impl)[:, 0]
+        pulled = grb.mxv(A, push, S.PLUS_TIMES, grb.TRANSPOSE_A)
         dmass = jnp.sum(jnp.where(dangling, r, 0.0)) / n
         return (1.0 - alpha) / n + alpha * (pulled + dmass)
 

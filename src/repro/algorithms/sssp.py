@@ -2,17 +2,22 @@
 
 Tropical-format caveat (documented in DESIGN.md): edge weights of exactly 0.0
 are indistinguishable from "absent" in tile storage; generators use w >= 0.5.
+
+Takes the graph's adjacency (Graph / Relation / GBMatrix / raw); relaxation
+pulls along in-edges through the handle's cached transpose.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import ops, semiring as S
+from repro.core import grb, semiring as S
 
 
-def sssp(A_T, seeds, n: int, max_iter: int = 0, impl: str = "auto"):
+def sssp(A, seeds, max_iter: int = 0, rel=None):
     """dist (n, F): tropical distance from each seed column."""
+    A = grb.matrix(A, rel)
+    n = A.shape[0]
     seeds = jnp.asarray(seeds)
     f = seeds.shape[0]
     dist = jnp.full((n, f), jnp.inf, dtype=jnp.float32)
@@ -25,7 +30,7 @@ def sssp(A_T, seeds, n: int, max_iter: int = 0, impl: str = "auto"):
 
     def body(state):
         t, dist, _ = state
-        relaxed = ops.mxm(A_T, dist, S.MIN_PLUS, impl=impl)
+        relaxed = grb.mxm(A, dist, S.MIN_PLUS, grb.TRANSPOSE_A)
         new = jnp.minimum(dist, relaxed)
         return t + 1, new, jnp.any(new < dist)
 

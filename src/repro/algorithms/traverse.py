@@ -1,17 +1,22 @@
 """BFS / k-hop over the boolean semiring — the paper's benchmark workload.
 
 `MATCH (a)-[:R*1..k]->(b) WHERE id(a)=seed RETURN count(DISTINCT b)` lowers to
-exactly `khop_counts`: k masked or_and vxm steps with a complemented visited
-mask, batched over seeds in the frontier's F dimension (the threadpool analog:
+exactly `khop_counts`: k masked or_and hops with a complemented visited mask,
+batched over seeds in the frontier's F dimension (the threadpool analog:
 one column == one concurrent query).
+
+Every entry point takes the graph's adjacency (a Graph, Relation, GBMatrix, or
+raw storage) and pulls along out-edges through the handle's cached transpose
+(`desc.transpose_a`) — callers never hand-pass `A_T`, and the execution policy
+is whatever the handle resolved at construction.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import ops, semiring as S
+from repro.core import grb, semiring as S
+from repro.core.grb import Descriptor
 
 
 def seeds_to_frontier(seeds, n: int) -> jnp.ndarray:
@@ -20,26 +25,28 @@ def seeds_to_frontier(seeds, n: int) -> jnp.ndarray:
     return (jax.nn.one_hot(seeds, n, dtype=jnp.float32)).T
 
 
-def bfs_step(A_T, frontier: jnp.ndarray, visited: jnp.ndarray,
-             impl: str = "auto") -> jnp.ndarray:
+def bfs_step(A, frontier: jnp.ndarray, visited: jnp.ndarray) -> jnp.ndarray:
     """next<!visited> = A^T (x)_or_and frontier  — one traversal hop."""
-    return ops.mxm(A_T, frontier, S.OR_AND, mask=visited, complement=True,
-                   impl=impl)
+    d = Descriptor(mask=visited, complement=True, transpose_a=True)
+    return grb.mxm(A, frontier, S.OR_AND, d)
 
 
-def bfs_levels(A_T, seeds, n: int, max_iter: int, impl: str = "auto"):
+def bfs_levels(A, seeds, max_iter: int = 0, rel=None):
     """Levels (n, F): hop distance from each seed column; +inf if unreached."""
+    A = grb.matrix(A, rel)
+    n = A.shape[0]
+    iters = max_iter or n
     frontier = seeds_to_frontier(seeds, n)
     levels = jnp.where(frontier > 0, 0.0, jnp.inf).astype(jnp.float32)
 
     def cond(state):
         t, frontier, _ = state
-        return jnp.logical_and(t < max_iter, jnp.any(frontier > 0))
+        return jnp.logical_and(t < iters, jnp.any(frontier > 0))
 
     def body(state):
         t, frontier, levels = state
         visited = jnp.isfinite(levels).astype(jnp.float32)
-        nxt = bfs_step(A_T, frontier, visited, impl=impl)
+        nxt = bfs_step(A, frontier, visited)
         levels = jnp.where(nxt > 0, t + 1.0, levels)
         return t + 1.0, nxt, levels
 
@@ -48,8 +55,8 @@ def bfs_levels(A_T, seeds, n: int, max_iter: int, impl: str = "auto"):
     return levels
 
 
-def khop_counts(A_T, seeds, n: int, k: int, impl: str = "auto") -> jnp.ndarray:
+def khop_counts(A, seeds, k: int, rel=None) -> jnp.ndarray:
     """TigerGraph k-hop benchmark semantics: |{v : 1 <= dist(seed, v) <= k}|."""
-    levels = bfs_levels(A_T, seeds, n, max_iter=k, impl=impl)
+    levels = bfs_levels(A, seeds, max_iter=k, rel=rel)
     inrange = jnp.logical_and(levels >= 1.0, levels <= float(k))
     return jnp.sum(inrange.astype(jnp.int32), axis=0)

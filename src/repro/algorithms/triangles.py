@@ -3,17 +3,19 @@ listed as RedisGraph future work, implemented here).
 
 Requires a symmetric (undirected) adjacency. The B operand is densified —
 fine at bench scale; a BSR x BSR SpGEMM kernel is the documented scale-out
-path (EXPERIMENTS.md §Perf).
+path (EXPERIMENTS.md §Perf). The structural mask rides in the Descriptor.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core import ops, semiring as S
+from repro.core import grb, semiring as S
+from repro.core.grb import Descriptor
 
 
-def triangle_count(A, impl: str = "auto") -> jnp.ndarray:
-    dense = A.to_dense() if hasattr(A, "to_dense") else A
+def triangle_count(A, rel=None) -> jnp.ndarray:
+    A = grb.matrix(A, rel)
+    dense = A.to_dense()
     mask = (dense != 0).astype(jnp.int8)
-    C = ops.mxm(A, dense, S.PLUS_PAIR, mask=mask, impl=impl)
+    C = grb.mxm(A, dense, S.PLUS_PAIR, Descriptor(mask=mask))
     return (jnp.sum(C) / 6.0).astype(jnp.int32)

@@ -1,23 +1,26 @@
 """Weakly-connected components by min-label propagation over min_plus.
 
 label'_i = min(label_i, min_{j in N(i)} label_j); the min over neighbors is a
-min_plus vxm with unit weights followed by a -1 shift (unit weights because
-0-weights are not storable in tropical tile format).
+min_plus pull with unit weights followed by a -1 shift (unit weights because
+0-weights are not storable in tropical tile format). Both directions come
+from one adjacency handle — the in-neighbor pull uses the cached transpose.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import ops, semiring as S
+from repro.core import grb, semiring as S
 
 
-def wcc(A_T, A, n: int, max_iter: int = 0, impl: str = "auto") -> jnp.ndarray:
+def wcc(A, max_iter: int = 0, rel=None) -> jnp.ndarray:
+    A = grb.matrix(A, rel)
+    n = A.shape[0]
     labels = jnp.arange(n, dtype=jnp.float32)
     iters = max_iter or n
 
-    def step(A_dir, labels):
-        pulled = ops.mxm(A_dir, labels[:, None], S.MIN_PLUS, impl=impl)[:, 0]
+    def step(labels, d):
+        pulled = grb.mxv(A, labels, S.MIN_PLUS, d)
         return jnp.minimum(labels, pulled - 1.0)
 
     def cond(state):
@@ -26,8 +29,8 @@ def wcc(A_T, A, n: int, max_iter: int = 0, impl: str = "auto") -> jnp.ndarray:
 
     def body(state):
         t, labels, _ = state
-        new = step(A_T, labels)     # pull from in-neighbors
-        new = step(A, new)          # and out-neighbors (undirected closure)
+        new = step(labels, grb.TRANSPOSE_A)    # pull from in-neighbors
+        new = step(new, grb.NULL)              # and out-neighbors (undirected)
         return t + 1, new, jnp.any(new < labels)
 
     _, labels, _ = jax.lax.while_loop(cond, body, (0, labels, True))

@@ -1,7 +1,10 @@
 # The paper's primary contribution: GraphBLAS (sparse semiring linear algebra)
 # as the storage + execution substrate of a graph database, TPU-native.
-from repro.core import ops, semiring
+# `grb` is the unified operation surface (Descriptor / GBMatrix / mxm-family);
+# `ops` keeps the legacy kwargs spelling over raw storage.
+from repro.core import grb, ops, semiring
 from repro.core.bsr import BSR
 from repro.core.ell import ELL
+from repro.core.grb import Descriptor, GBMatrix
 
-__all__ = ["ops", "semiring", "BSR", "ELL"]
+__all__ = ["grb", "ops", "semiring", "BSR", "ELL", "Descriptor", "GBMatrix"]

@@ -1,0 +1,369 @@
+"""The unified GraphBLAS operation surface: ``C<M> accum= op(A, B, desc)``.
+
+This module is the single API the rest of the engine programs against — the
+TPU analog of the GraphBLAS C API subset RedisGraph builds on:
+
+  GrB_Descriptor  -> :class:`Descriptor`  (mask, complement, accum, replace,
+                     input-transpose), replacing the mask/complement/accum/
+                     ``A_T``/``impl`` kwargs that used to be re-threaded
+                     through every caller,
+  GrB_Matrix      -> :class:`GBMatrix`    (one handle over dense / BSR / ELL
+                     storage: format-agnostic dispatch, lazy cached transpose,
+                     nvals/shape introspection, execution policy resolved once
+                     at construction),
+  GrB_mxm family  -> module-level :func:`mxm` / :func:`mxv` / :func:`vxm` /
+                     :func:`ewise_add` / :func:`ewise_mult` / :func:`reduce` /
+                     :func:`apply` / :func:`select`.
+
+Algorithms (`repro.algorithms`), the query executor (`repro.query.executor`),
+the batched server (`repro.engine.server`) and the sharded path
+(`repro.distr.graph2d`) all dispatch through here; new storage formats or
+backends plug in behind this surface without touching callers.
+
+Blend (write) semantics, centralized in :func:`finalize`:
+
+  z       = accum(C, result)      if accum given and C given, else result
+  C<M>    = z   inside the mask   (all-true when desc.mask is None)
+  C<!M>   = identity              when C is None or desc.replace
+          = C (old value)         otherwise
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ops as _ops
+from repro.core import semiring as S
+from repro.core.bsr import BSR
+from repro.core.ell import ELL
+
+Array = jnp.ndarray
+Storage = Union[BSR, ELL, Array]
+
+
+# ---------------------------------------------------------------------------
+# Descriptor — GrB_Descriptor analog
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True, eq=False)
+class Descriptor:
+    """Operation modifiers for one GraphBLAS call.
+
+    mask        write mask M (same shape as the output, or a (n,) vector for
+                mxv/vxm); entries where M is zero are *not* written
+    complement  use !M instead of M (GrB_COMP)
+    accum       accumulate monoid: C<M> accum= result instead of C<M> = result
+    replace     clear C entries outside the mask (GrB_REPLACE)
+    transpose_a op reads A^T instead of A (GrB_INP0 + GrB_TRAN); served from
+                the GBMatrix handle's cached transpose, never a runtime flip
+    """
+    mask: Optional[Array] = None
+    complement: bool = False
+    accum: Optional[S.Monoid] = None
+    replace: bool = False
+    transpose_a: bool = False
+
+    def with_(self, **kw) -> "Descriptor":
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def mask_only(self) -> bool:
+        """True when the write is a pure masked overwrite (no accum, no
+        replace) — together with out=None, the kernel-fusable case."""
+        return self.accum is None and not self.replace
+
+
+NULL = Descriptor()
+TRANSPOSE_A = Descriptor(transpose_a=True)
+
+
+def desc(mask: Optional[Array] = None, complement: bool = False,
+         accum: Optional[S.Monoid] = None, replace: bool = False,
+         transpose_a: bool = False) -> Descriptor:
+    """Convenience constructor mirroring GrB_Descriptor_set."""
+    return Descriptor(mask=mask, complement=complement, accum=accum,
+                      replace=replace, transpose_a=transpose_a)
+
+
+def finalize(d: Descriptor, result: Array, out: Optional[Array],
+             identity: float) -> Array:
+    """Blend ``result`` into ``out`` under the descriptor (see module doc)."""
+    if d.accum is not None and out is not None:
+        z = d.accum.op(out, result)
+    else:
+        z = result
+    if d.mask is None:
+        return z
+    m = (d.mask == 0) if d.complement else (d.mask != 0)
+    if out is None or d.replace:
+        outside = jnp.full_like(z, np.float32(identity))
+    else:
+        outside = out
+    return jnp.where(m, z, outside)
+
+
+# ---------------------------------------------------------------------------
+# GBMatrix — GrB_Matrix analog
+# ---------------------------------------------------------------------------
+def _fmt_of(store: Storage) -> str:
+    if isinstance(store, BSR):
+        return "bsr"
+    if isinstance(store, ELL):
+        return "ell"
+    return "dense"
+
+
+def _resolve_impl(requested: str, fmt: str) -> str:
+    """Execution policy, resolved once at handle construction.
+
+    Only the BSR format has two paths (Pallas kernel vs the XLA-native
+    batched-matmul); "auto" picks the kernel exactly when a real TPU backend
+    is present. ELL and dense always lower through XLA.
+    """
+    if fmt != "bsr":
+        return "xla"
+    if requested == "pallas":
+        return "pallas"
+    if requested == "auto" and jax.default_backend() == "tpu":
+        return "pallas"
+    return "xla"
+
+
+class GBMatrix:
+    """One matrix handle over dense / BSR / ELL storage.
+
+    The handle carries everything per-call kwargs used to: the storage format,
+    the resolved execution policy (``impl``), and a lazily-built, cached
+    stored transpose (``A.T``) so callers never hand-pass ``A_T``. Transposes
+    built by the graph loader are linked in via :meth:`link_transpose`.
+
+    Handles are host-side objects; the underlying storage (registered
+    pytrees / jnp arrays) is what flows through jit. Inside traced code,
+    close over the handle — do not pass it as a traced argument.
+    """
+    __slots__ = ("store", "fmt", "impl", "name", "_T")
+
+    def __init__(self, store: Storage, impl: str = "auto", name: str = ""):
+        if isinstance(store, GBMatrix):
+            store = store.store
+        if not isinstance(store, (BSR, ELL)):
+            store = jnp.asarray(store)
+        self.store = store
+        self.fmt = _fmt_of(store)
+        self.impl = _resolve_impl(impl, self.fmt)
+        self.name = name
+        self._T: Optional["GBMatrix"] = None
+
+    # -- construction --------------------------------------------------------
+    @classmethod
+    def wrap(cls, A, impl: Optional[str] = None) -> "GBMatrix":
+        """Adopt an existing handle or wrap raw storage. impl=None keeps an
+        existing handle's resolved policy; an explicit impl re-resolves it."""
+        if isinstance(A, GBMatrix):
+            return A if impl is None else A.with_impl(impl)
+        return cls(A, impl=impl or "auto")
+
+    @classmethod
+    def from_coo(cls, rows, cols, vals, shape, fmt: str = "auto",
+                 block: int = 128, impl: str = "auto",
+                 name: str = "") -> "GBMatrix":
+        if fmt == "bsr":
+            store = BSR.from_coo(rows, cols, vals, shape, block=block)
+        elif fmt == "ell":
+            store = ELL.from_coo(rows, cols, vals, shape)
+        elif fmt == "dense":
+            d = np.zeros(shape, dtype=np.float32)
+            d[np.asarray(rows), np.asarray(cols)] = (
+                1.0 if vals is None else np.asarray(vals, dtype=np.float32))
+            store = jnp.asarray(d)
+        else:
+            store = _ops.auto_format(rows, cols, vals, shape, block=block)
+        return cls(store, impl=impl, name=name)
+
+    @classmethod
+    def from_dense(cls, A, fmt: str = "dense", block: int = 128,
+                   impl: str = "auto", name: str = "") -> "GBMatrix":
+        if fmt == "dense":
+            return cls(jnp.asarray(A), impl=impl, name=name)
+        A = np.asarray(A)
+        r, c = np.nonzero(A)
+        return cls.from_coo(r, c, A[r, c], A.shape, fmt=fmt, block=block,
+                            impl=impl, name=name)
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def shape(self):
+        return self.store.shape
+
+    @property
+    def nvals(self) -> int:
+        """Stored-entry count (GrB_Matrix_nvals)."""
+        if self.fmt == "dense":
+            return int(np.count_nonzero(np.asarray(self.store)))
+        return self.store.nnz
+
+    # -- transpose -----------------------------------------------------------
+    @property
+    def T(self) -> "GBMatrix":
+        """Stored transpose, built once and cached; ``A.T.T is A``."""
+        if self._T is None:
+            if self.fmt == "dense":
+                t: Storage = self.store.T
+            else:
+                t = self.store.transpose()
+            self.link_transpose(GBMatrix(t, impl=self.impl,
+                                         name=self.name + "^T"))
+        return self._T
+
+    def link_transpose(self, other: "GBMatrix") -> "GBMatrix":
+        """Install an explicitly-built transpose (RedisGraph maintains these
+        per relation) so ``.T`` never rebuilds it."""
+        self._T = other
+        other._T = self
+        return self
+
+    # -- policy --------------------------------------------------------------
+    def with_impl(self, impl: str) -> "GBMatrix":
+        """Re-resolve the execution policy, sharing storage and the transpose
+        cache. Returns self when the resolved policy is unchanged."""
+        if _resolve_impl(impl, self.fmt) == self.impl:
+            return self
+        m = GBMatrix(self.store, impl=impl, name=self.name)
+        if self._T is not None:
+            m.link_transpose(GBMatrix(self._T.store, impl=impl,
+                                      name=self._T.name))
+        return m
+
+    # -- conversion ----------------------------------------------------------
+    def to_dense(self) -> Array:
+        if self.fmt == "dense":
+            return self.store
+        return self.store.to_dense()
+
+    # -- ergonomics ----------------------------------------------------------
+    def __getattr__(self, attr: str):
+        # forward storage-specific introspection (indices / mask / blocks /
+        # nnz / to_coo / ...) so the handle is a drop-in for raw storage
+        if attr.startswith("_"):
+            raise AttributeError(attr)
+        return getattr(self.store, attr)
+
+    def __repr__(self) -> str:
+        n, m = self.shape
+        tag = f" {self.name!r}" if self.name else ""
+        return (f"GBMatrix{tag} {n}x{m} fmt={self.fmt} impl={self.impl} "
+                f"nvals={self.nvals}")
+
+
+def matrix(obj, rel: Optional[str] = None,
+           impl: Optional[str] = None) -> GBMatrix:
+    """Adjacency handle from a Graph, Relation, GBMatrix, or raw storage.
+
+    Duck-typed so `repro.core` never imports `repro.graph`: a Graph exposes
+    ``relation()``/``relations``, a Relation exposes ``A``/``name``.
+    impl=None (the default) keeps the handle's construction-time policy;
+    an explicit impl re-resolves it via ``with_impl``.
+    """
+    if hasattr(obj, "relation") and hasattr(obj, "relations"):   # Graph
+        try:
+            r = obj.relation(rel)
+        except KeyError:
+            r = None
+        if r is None:
+            raise ValueError(f"no relation {rel!r} in graph "
+                             f"(have: {sorted(obj.relations)})")
+        obj = r
+    if hasattr(obj, "A") and hasattr(obj, "name"):               # Relation
+        return GBMatrix.wrap(obj.A, impl=impl)
+    return GBMatrix.wrap(obj, impl=impl)
+
+
+# ---------------------------------------------------------------------------
+# uniform op surface — GrB_mxm family
+# ---------------------------------------------------------------------------
+def _dispatch_mxm(A: GBMatrix, B: Array, sr: S.Semiring,
+                  d: Descriptor, fuse_mask: bool):
+    """Format + policy dispatch for one semiring matmul. Returns
+    (raw_result, mask_already_applied)."""
+    if A.fmt == "bsr":
+        if A.impl == "pallas":
+            from repro.kernels import ops as kops   # lazy: kernels import core
+            if fuse_mask:
+                # the kernel folds <M>/<!M> into its epilogue on the last
+                # tile of each block-row — no separate masking pass
+                return kops.bsr_mxm(A.store, B, sr, mask=d.mask,
+                                    complement=d.complement), True
+            return kops.bsr_mxm(A.store, B, sr), False
+        return _ops.bsr_mxm_jnp(A.store, B, sr), False
+    if A.fmt == "ell":
+        return _ops.ell_mxm(A.store, B, sr), False
+    return S.dense_mxm(S.structural_dense(A.store, sr), B, sr), False
+
+
+def mxm(A, B, sr: S.Semiring, d: Descriptor = NULL,
+        out: Optional[Array] = None) -> Array:
+    """C<M> accum= A (x) B over a semiring — the uniform GraphBLAS call.
+
+    A: GBMatrix (or raw BSR/ELL/dense, wrapped on the fly). B: dense (m, f)
+    operand (a frontier matrix; GBMatrix-wrapped dense also accepted).
+    ``out`` is the existing C for accum/blend; None means replace-into-empty.
+    """
+    A = GBMatrix.wrap(A)
+    if d.transpose_a:
+        A = A.T
+        d = d.with_(transpose_a=False)
+    if isinstance(B, GBMatrix):
+        B = B.to_dense()
+    fuse = d.mask is not None and out is None and d.mask_only
+    y, mask_done = _dispatch_mxm(A, B, sr, d, fuse)
+    if mask_done:
+        return y
+    return finalize(d, y, out, sr.identity)
+
+
+def _columnize(v: Optional[Array]) -> Optional[Array]:
+    if v is not None and v.ndim == 1:
+        return v[:, None]
+    return v
+
+
+def mxv(A, x: Array, sr: S.Semiring, d: Descriptor = NULL,
+        out: Optional[Array] = None) -> Array:
+    """y<m> accum= A (x) x — a width-1 frontier."""
+    dm = d.with_(mask=_columnize(d.mask))
+    y = mxm(A, x[:, None], sr, dm, out=_columnize(out))
+    return y[:, 0]
+
+
+def vxm(x: Array, A, sr: S.Semiring, d: Descriptor = NULL,
+        out: Optional[Array] = None) -> Array:
+    """y = x (x) A == A^T (x) x, served from the handle's cached transpose."""
+    return mxv(A, x, sr, d.with_(transpose_a=not d.transpose_a), out=out)
+
+
+def ewise_add(a: Array, b: Array, monoid: S.Monoid,
+              d: Descriptor = NULL, out: Optional[Array] = None) -> Array:
+    return finalize(d, monoid.op(a, b), out, monoid.identity)
+
+
+def ewise_mult(a: Array, b: Array, op: Callable[[Array, Array], Array],
+               d: Descriptor = NULL, out: Optional[Array] = None,
+               identity: float = 0.0) -> Array:
+    return finalize(d, op(a, b), out, identity)
+
+
+def reduce(x: Array, monoid: S.Monoid, axis=None) -> Array:
+    return monoid.reduce(x, axis=axis)
+
+
+def apply(f: Callable[[Array], Array], x: Array, d: Descriptor = NULL,
+          out: Optional[Array] = None, identity: float = 0.0) -> Array:
+    return finalize(d, f(x), out, identity)
+
+
+def select(pred: Callable[[Array], Array], x: Array,
+           identity: float = 0.0) -> Array:
+    return jnp.where(pred(x), x, np.float32(identity))

@@ -38,18 +38,14 @@ Array = jnp.ndarray
 def apply_mask(result: Array, mask: Optional[Array], complement: bool,
                accum: Optional[S.Monoid], old: Optional[Array],
                identity: float) -> Array:
-    """GraphBLAS C<M> (+)= result, replace semantics when old is None."""
-    if mask is not None:
-        m = mask == 0 if complement else mask != 0
-        keep = jnp.where(m, result, np.float32(identity))
-    else:
-        keep = result
-    if accum is not None and old is not None:
-        return accum.op(old, keep)
-    if old is not None and mask is not None:
-        m = mask == 0 if complement else mask != 0
-        return jnp.where(m, keep, old)
-    return keep
+    """GraphBLAS C<M> (+)= result, replace semantics when old is None.
+
+    Legacy kwargs spelling; the canonical semantics live in
+    :func:`repro.core.grb.finalize`, which this delegates to.
+    """
+    from repro.core import grb
+    d = grb.Descriptor(mask=mask, complement=complement, accum=accum)
+    return grb.finalize(d, result, old, identity)
 
 
 # ---------------------------------------------------------------------------
@@ -160,18 +156,19 @@ def ell_mxm(A: ELL, X: Array, sr: S.Semiring, row_chunk: int = 0) -> Array:
 def mxm(A, X: Array, sr: S.Semiring, *, mask: Optional[Array] = None,
         complement: bool = False, accum: Optional[S.Monoid] = None,
         C: Optional[Array] = None, impl: str = "auto") -> Array:
-    """Semiring matmul Y<mask> (accum)= A (x) X. A: BSR | ELL | dense."""
-    if isinstance(A, BSR):
-        if impl == "pallas":
-            from repro.kernels import ops as kops  # lazy: kernels import core
-            y = kops.bsr_mxm(A, X, sr)
-        else:
-            y = bsr_mxm_jnp(A, X, sr)
-    elif isinstance(A, ELL):
-        y = ell_mxm(A, X, sr)
+    """Semiring matmul Y<mask> (accum)= A (x) X. A: BSR | ELL | dense.
+
+    Legacy kwargs spelling of :func:`repro.core.grb.mxm`, kept for callers
+    that hold raw storage. "auto" preserves the historical meaning (the
+    XLA-native path); use a GBMatrix handle to get backend-aware policy.
+    """
+    from repro.core import grb
+    d = grb.Descriptor(mask=mask, complement=complement, accum=accum)
+    if isinstance(A, grb.GBMatrix):
+        handle = A if impl == "auto" else A.with_impl(impl)
     else:
-        y = S.dense_mxm(S.structural_dense(A, sr), X, sr)
-    return apply_mask(y, mask, complement, accum, C, sr.identity)
+        handle = grb.GBMatrix(A, impl="pallas" if impl == "pallas" else "xla")
+    return grb.mxm(handle, X, sr, d, out=C)
 
 
 def mxv(A, x: Array, sr: S.Semiring, **kw) -> Array:
@@ -189,6 +186,9 @@ def vxm(x: Array, A, sr: S.Semiring, *, A_T=None, **kw) -> Array:
 
 
 def _transpose(A):
+    from repro.core import grb
+    if isinstance(A, grb.GBMatrix):
+        return A.T
     if isinstance(A, (BSR, ELL)):
         return A.transpose()
     return A.T

@@ -21,6 +21,42 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+# shard_map moved from jax.experimental to jax core (and its replication-check
+# kwarg was renamed check_rep -> check_vma); resolve whichever this jax ships.
+try:
+    _shard_map = jax.shard_map
+    _SM_CHECK_KW = "check_vma"
+except AttributeError:
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _SM_CHECK_KW = "check_rep"
+
+
+def _smap(body, mesh, in_specs, out_specs):
+    return _shard_map(body, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **{_SM_CHECK_KW: False})
+
+
+def ell_shard_inputs(A, sentinel: bool = False):
+    """Host (indices, mask) arrays for the row-sharded ELL layout.
+
+    Accepts the `grb` surface's handles — a Relation, a GBMatrix, or raw ELL
+    storage. Every kernel in this module pulls (rows of A^T), so a Relation
+    resolves to its stored transpose; pass a GBMatrix (`rel.A` / `rel.A_T`)
+    explicitly to pick a direction yourself. With sentinel=True, padded
+    slots index the dedicated all-zero row (id = shape[1]) instead of
+    carrying the mask.
+    """
+    if hasattr(A, "A") and hasattr(A, "name"):   # Relation -> pull layout
+        A = A.A_T
+    store = getattr(A, "store", A)               # GBMatrix -> storage
+    if not hasattr(store, "indices"):
+        raise TypeError(f"2D sharding needs ELL rows, got {type(store).__name__}")
+    idx = np.asarray(store.indices)
+    msk = np.asarray(store.mask)
+    if sentinel:
+        idx = np.where(msk, idx, store.shape[1]).astype(np.int32)
+    return idx, msk
+
 
 def khop_counts_2d(mesh: Mesh, n: int, k: int, packed: bool = False,
                    sentinel: bool = False):
@@ -91,12 +127,9 @@ def khop_counts_2d(mesh: Mesh, n: int, k: int, packed: bool = False,
 
     fr_spec = P("data", fr_axes if len(fr_axes) > 1 else (fr_axes[0] if fr_axes else None))
     out_spec = P(fr_axes if len(fr_axes) > 1 else (fr_axes[0] if fr_axes else None))
-    f = jax.shard_map(
-        body, mesh=mesh,
-        in_specs=(P("data", None), P("data", None), fr_spec),
-        out_specs=out_spec,
-        check_vma=False)
-    return f
+    return _smap(body, mesh,
+                 in_specs=(P("data", None), P("data", None), fr_spec),
+                 out_specs=out_spec)
 
 
 def pagerank_2d(mesh: Mesh, n: int, iters: int, alpha: float = 0.85,
@@ -135,11 +168,9 @@ def pagerank_2d(mesh: Mesh, n: int, iters: int, alpha: float = 0.85,
             r_l = (1.0 - alpha) / n + alpha * (pulled_l + dmass)
         return r_l
 
-    return jax.shard_map(
-        body, mesh=mesh,
-        in_specs=(P("data", None), P("data", None), P("data")),
-        out_specs=P("data"),
-        check_vma=False)
+    return _smap(body, mesh,
+                 in_specs=(P("data", None), P("data", None), P("data")),
+                 out_specs=P("data"))
 
 
 def sssp_2d(mesh: Mesh, n: int, iters: int):
@@ -163,12 +194,10 @@ def sssp_2d(mesh: Mesh, n: int, iters: int):
         return dist_l
 
     fr = fr_axes if len(fr_axes) > 1 else (fr_axes[0] if fr_axes else None)
-    return jax.shard_map(
-        body, mesh=mesh,
-        in_specs=(P("data", None), P("data", None), P("data", None),
-                  P("data", fr)),
-        out_specs=P("data", fr),
-        check_vma=False)
+    return _smap(body, mesh,
+                 in_specs=(P("data", None), P("data", None), P("data", None),
+                           P("data", fr)),
+                 out_specs=P("data", fr))
 
 
 def input_specs_2d(n: int, max_deg: int, f: int):

@@ -14,7 +14,7 @@ import numpy as np
 
 from repro.graph.graph import Graph, GraphBuilder
 from repro.query import qast as A
-from repro.query.executor import Result, execute, explain
+from repro.query.executor import ExecutionContext, Result, explain
 from repro.query.parser import parse
 
 
@@ -81,7 +81,11 @@ class Database:
         if isinstance(q, A.CreateQuery):
             self._append_aof(name, text)
             return self._apply_create(name, q)
-        return execute(self._graph(name).freeze(), q, impl=impl)
+        return self.context(name, impl=impl).run(q)
+
+    def context(self, name: str, impl: str = "auto") -> ExecutionContext:
+        """Public execution surface over the named graph's frozen build."""
+        return ExecutionContext(self._graph(name).freeze(), impl=impl)
 
     def explain(self, name: str, text: str) -> str:
         return explain(self._graph(name).freeze(), text)

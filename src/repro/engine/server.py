@@ -7,6 +7,11 @@ seeds) and executes each group as ONE batched frontier traversal — the F
 dimension of the frontier matrix is the threadpool width.  Incompatible
 queries fall back to solo execution (a width-1 batch).
 
+The scheduler drives the executor's public `ExecutionContext` surface
+(node_mask / seed_frontier / expand / project) — the same primitives the
+solo path composes, so batched and solo answers are definitionally the same
+algebra.
+
 This is the serving driver used by examples/serve_queries.py and the
 throughput benchmark (the paper's "reads scale easily" claim).
 """
@@ -18,16 +23,12 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.core import semiring as S
 from repro.graph.graph import Graph
 from repro.query import qast as A
-from repro.query.executor import Result, _node_mask, _project, execute
+from repro.query.executor import ExecutionContext, Result
 from repro.query.parser import parse
 from repro.query.planner import Plan, plan
-
-import jax.numpy as jnp
-
-from repro.core import ops, semiring as S
-from repro.query.executor import _expand
 
 
 @dataclasses.dataclass
@@ -53,7 +54,7 @@ class QueryServer:
     def __init__(self, graph: Graph, impl: str = "auto",
                  max_batch: int = 512):
         self.graph = graph
-        self.impl = impl
+        self.ctx = ExecutionContext(graph, impl=impl)
         self.max_batch = max_batch
         self._queue: List[Submitted] = []
         self._next_id = 0
@@ -83,7 +84,7 @@ class QueryServer:
                 self._run_batch(chunk, out)
         for s in solo:
             t0 = time.perf_counter()
-            res = execute(self.graph, _requery(s.plan), impl=self.impl)
+            res = self.ctx.run(_requery(s.plan))
             s.latency_s = time.perf_counter() - t0
             out[s.qid] = res
             self.stats["solo"] += 1
@@ -93,25 +94,21 @@ class QueryServer:
 
     def _run_batch(self, members: List[Submitted], out: Dict[int, Result]):
         """One batched frontier traversal answers every member's query."""
-        g = self.graph
-        n = g.n
+        ctx = self.ctx
         p0 = members[0].plan
         t0 = time.perf_counter()
 
         seed_lists = [sorted(set(m.plan.seeds)) for m in members]
         flat = np.concatenate([np.asarray(s, np.int64) for s in seed_lists])
-        src_mask = _node_mask(g, p0.src_label, p0.var_preds.get(p0.src_var), n)
+        src_mask = ctx.node_mask(p0.src_label, p0.var_preds.get(p0.src_var))
         keep = src_mask[flat]
 
         sr = S.get(p0.semiring)
         f = len(flat)
-        B = jnp.zeros((n, f), dtype=jnp.float32)
-        cols = jnp.arange(f)
-        B = B.at[jnp.asarray(np.where(keep, flat, 0)), cols].set(
-            jnp.asarray(keep.astype(np.float32)))
+        B = ctx.seed_frontier(flat, keep=keep)
         for e in p0.expands:
-            dst_mask = _node_mask(g, e.dst_label, p0.var_preds.get(e.dst_var), n)
-            B = _expand(g, B, e, sr, dst_mask, self.impl)
+            dst_mask = ctx.node_mask(e.dst_label, p0.var_preds.get(e.dst_var))
+            B = ctx.expand(B, e, sr, dst_mask)
         B = np.asarray(B)
 
         dt = time.perf_counter() - t0
@@ -121,7 +118,7 @@ class QueryServer:
             sub = B[:, off:off + w]
             kept = np.asarray(seeds)[keep[off:off + w]]
             subk = sub[:, keep[off:off + w]]
-            m.result = _project(g, m.plan, kept, jnp.asarray(subk))
+            m.result = ctx.project(m.plan, kept, subk)
             m.latency_s = dt
             out[m.qid] = m.result
             off += w

@@ -6,8 +6,11 @@
   * explicit transposes maintained per relation (RedisGraph does the same) so
     vxm pulls never transpose at query time.
 
-Matrices live in BSR (MXU path) or ELL (hypersparse gather path); the format
-is chosen per relation by `core.ops.auto_format` unless forced.
+Each relation holds a single `grb.GBMatrix` handle: storage lives in BSR
+(MXU path) or ELL (hypersparse gather path) — chosen per relation by
+`core.ops.auto_format` unless forced — and the explicitly-built transpose is
+linked into the handle's cache, so `rel.A.T` (and the `rel.A_T` shorthand)
+is always the stored transpose, never a runtime flip.
 """
 from __future__ import annotations
 
@@ -17,15 +20,19 @@ from typing import Dict, Optional
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import BSR, ELL, ops
+from repro.core import BSR, ELL, grb, ops
 
 
 @dataclasses.dataclass
 class Relation:
     name: str
-    A: object          # BSR | ELL — row i -> out-neighbors
-    A_T: object        # transpose, for pull-style vxm
+    A: grb.GBMatrix    # row i -> out-neighbors; A.T is the linked transpose
     nnz: int
+
+    @property
+    def A_T(self) -> grb.GBMatrix:
+        """Stored transpose, for pull-style vxm (cached on the handle)."""
+        return self.A.T
 
 
 @dataclasses.dataclass
@@ -78,7 +85,8 @@ class GraphBuilder:
         self._edges.setdefault(rel, []).append((src, dst, w))
         return self
 
-    def build(self, fmt: str = "auto", block: int = 128) -> Graph:
+    def build(self, fmt: str = "auto", block: int = 128,
+              impl: str = "auto") -> Graph:
         relations = {}
         all_src, all_dst = [], []
         for rel, chunks in self._edges.items():
@@ -87,9 +95,7 @@ class GraphBuilder:
             w = np.concatenate([c[2] for c in chunks])
             src, dst, w = _dedup(src, dst, w, self.n)
             relations[rel] = Relation(
-                rel,
-                _make(src, dst, w, self.n, fmt, block),
-                _make(dst, src, w, self.n, fmt, block),
+                rel, _make_handle(rel, src, dst, w, self.n, fmt, block, impl),
                 nnz=len(src))
             all_src.append(src)
             all_dst.append(dst)
@@ -98,8 +104,8 @@ class GraphBuilder:
             s = np.concatenate(all_src)
             d = np.concatenate(all_dst)
             s, d, w = _dedup(s, d, np.ones_like(s, np.float32), self.n)
-            adj = Relation("", _make(s, d, w, self.n, fmt, block),
-                           _make(d, s, w, self.n, fmt, block), nnz=len(s))
+            adj = Relation("", _make_handle("", s, d, w, self.n, fmt, block,
+                                            impl), nnz=len(s))
         return Graph(
             n=self.n,
             relations=relations,
@@ -120,3 +126,11 @@ def _make(src, dst, w, n, fmt, block):
     if fmt == "ell":
         return ELL.from_coo(src, dst, w, (n, n))
     return ops.auto_format(src, dst, w, (n, n), block=block)
+
+
+def _make_handle(name, src, dst, w, n, fmt, block, impl) -> grb.GBMatrix:
+    """Build forward + transpose storage and link them into one handle."""
+    A = grb.GBMatrix(_make(src, dst, w, n, fmt, block), impl=impl, name=name)
+    A.link_transpose(grb.GBMatrix(_make(dst, src, w, n, fmt, block),
+                                  impl=impl, name=name + "^T"))
+    return A

@@ -43,6 +43,11 @@ from repro.core.bsr import BSR
 
 DEFAULT_F_TILE = 128
 
+# jax renamed TPUCompilerParams -> CompilerParams across releases; resolve
+# whichever this jax ships so the kernel builds on both sides of the rename.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")
+
 
 def _kernel(brow_ref, bcol_ref, first_ref, last_ref, valid_ref,  # scalar prefetch
             blocks_ref, x_ref, mask_ref, y_ref, *,
@@ -147,7 +152,7 @@ def bsr_mxm(A: BSR, X: jnp.ndarray, sr: S.Semiring, *,
         ),
         out_shape=jax.ShapeDtypeStruct((nbr * b, fp), jnp.float32),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
     )(A.block_rows, A.block_cols, A.first, A.last, A.valid,
       A.blocks, Xp, Mp)

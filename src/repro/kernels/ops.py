@@ -19,10 +19,12 @@ def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def bsr_mxm(A: BSR, X: jnp.ndarray, sr: S.Semiring, *,
+def bsr_mxm(A, X: jnp.ndarray, sr: S.Semiring, *,
             mask: jnp.ndarray | None = None, complement: bool = False,
             f_tile: int = _bsr.DEFAULT_F_TILE,
             interpret: bool | None = None) -> jnp.ndarray:
+    if not isinstance(A, BSR):            # GBMatrix handle -> raw storage
+        A = A.store
     if interpret is None:
         interpret = _interpret_default()
     return _bsr.bsr_mxm(A, X, sr, mask=mask, complement=complement,

@@ -1,5 +1,6 @@
-from repro.query.executor import Result, execute, explain
+from repro.query.executor import ExecutionContext, Result, execute, explain
 from repro.query.parser import parse
 from repro.query.planner import plan
 
-__all__ = ["Result", "execute", "explain", "parse", "plan"]
+__all__ = ["ExecutionContext", "Result", "execute", "explain", "parse",
+           "plan"]

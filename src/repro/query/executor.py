@@ -2,18 +2,26 @@
 
 The binding state is a frontier matrix B (n, F): column j is the reachable
 set (or walk counts) of source binding j. Each Expand is min..max masked
-semiring vxm hops; node predicates become diagonal masks applied between
+semiring hops through the `repro.core.grb` surface (mask/complement/transpose
+ride in a Descriptor); node predicates become diagonal masks applied between
 hops. This is the paper's Cypher->linear-algebra translation.
+
+`ExecutionContext` is the public execution surface: `node_mask`, `expand`,
+and `project` are the three primitives a scheduler composes — the batched
+server (`repro.engine.server`) drives them directly to answer many
+pattern-compatible queries with one frontier traversal. `execute()` is the
+solo driver over the same context.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ops, semiring as S
+from repro.core import grb, semiring as S
+from repro.core.grb import Descriptor
 from repro.graph.graph import Graph
 from repro.query import qast as A
 from repro.query.parser import parse
@@ -74,82 +82,174 @@ def eval_pred(graph: Graph, node, n: int) -> np.ndarray:
     raise TypeError(node)
 
 
-def _node_mask(graph: Graph, label, preds, n) -> np.ndarray:
-    m = np.asarray(graph.label_mask(label))
-    for p in preds or []:
-        m = m & eval_pred(graph, p, n)
-    return m
+# -- public execution surface -------------------------------------------------
+class ExecutionContext:
+    """Execution primitives over one frozen Graph.
+
+    node_mask  label + predicate scan -> bool (n,) diagonal
+    expand     one variable-length traversal step on a frontier matrix
+    project    frontier matrix -> Result rows per the plan's RETURN clause
+    run        parse/plan/execute a full read query
+
+    The adjacency handles come from the graph's relations; `impl` re-resolves
+    their execution policy once per context (not per call).
+    """
+
+    def __init__(self, graph: Graph, impl: str = "auto"):
+        self.graph = graph
+        self.impl = impl
+        self._mats: Dict[str, grb.GBMatrix] = {}
+
+    # -- primitives ----------------------------------------------------------
+    def matrix(self, rel: Optional[str]) -> grb.GBMatrix:
+        """Relation adjacency handle under this context's execution policy."""
+        try:
+            r = self.graph.relation(rel)
+        except KeyError:
+            r = None
+        if r is None:
+            raise ValueError(f"no relation {rel!r} "
+                             f"(have: {sorted(self.graph.relations)})")
+        m = self._mats.get(r.name)
+        if m is None:
+            m = self._mats[r.name] = r.A.with_impl(self.impl)
+        return m
+
+    def node_mask(self, label, preds=None) -> np.ndarray:
+        """bool (n,): vertices carrying `label` and passing all predicates."""
+        n = self.graph.n
+        m = np.asarray(self.graph.label_mask(label))
+        for p in preds or []:
+            m = m & eval_pred(self.graph, p, n)
+        return m
+
+    def seed_frontier(self, seeds, keep=None) -> jnp.ndarray:
+        """One-hot (n, F) frontier from seed ids; columns where keep is False
+        stay empty (filtered seeds still occupy their result column)."""
+        seeds = np.asarray(seeds, dtype=np.int64)
+        f = len(seeds)
+        if keep is None:
+            keep = np.ones(f, dtype=bool)
+        B = jnp.zeros((self.graph.n, f), dtype=jnp.float32)
+        return B.at[jnp.asarray(np.where(keep, seeds, 0)),
+                    jnp.arange(f)].set(jnp.asarray(keep.astype(np.float32)))
+
+    def expand(self, B: jnp.ndarray, e, sr: S.Semiring,
+               dst_mask: np.ndarray) -> jnp.ndarray:
+        """min..max-hop traversal of B along e.rel in e.direction."""
+        M = self.matrix(e.rel)
+        transposes = {A.OUT: (True,), A.IN: (False,),
+                      A.BOTH: (True, False)}[e.direction]
+        structural = sr.name == "or_and"
+        reach = jnp.zeros_like(B)
+        frontier = B
+        visited = (B > 0).astype(jnp.float32)
+        for h in range(1, e.max_hops + 1):
+            nxt = None
+            for t in transposes:
+                d = Descriptor(mask=visited if structural else None,
+                               complement=True, transpose_a=t)
+                step = grb.mxm(M, frontier, sr, d)
+                nxt = step if nxt is None else _sr_add(sr, nxt, step)
+            frontier = nxt
+            if structural:
+                visited = jnp.maximum(visited,
+                                      (frontier > 0).astype(jnp.float32))
+            if h >= e.min_hops:
+                reach = _sr_add(sr, reach, frontier)
+        # destination label/property diagonal
+        reach = reach * jnp.asarray(dst_mask, dtype=jnp.float32)[:, None]
+        if structural:
+            reach = (reach > 0).astype(jnp.float32)
+        return reach
+
+    def project(self, p: Plan, seeds: np.ndarray, B: jnp.ndarray) -> Result:
+        """Materialize RETURN rows from the final frontier matrix."""
+        Bn = np.asarray(B)
+        cols = [_colname(r) for r in p.returns]
+        src_var = p.src_var
+        graph = self.graph
+
+        returns_src = any(r.var == src_var and r.kind != "count"
+                          for r in p.returns)
+        only_counts = all(r.kind == "count" for r in p.returns)
+
+        rows: List[tuple] = []
+        if only_counts and not returns_src:
+            # global aggregate: one row
+            vals = []
+            for r in p.returns:
+                tot = ((Bn > 0).sum()
+                       if r.distinct or p.semiring == "or_and" else Bn.sum())
+                vals.append(int(tot))
+            rows = [tuple(vals)]
+        elif only_counts or (returns_src
+                             and all(r.kind == "count" or r.var == src_var
+                                     for r in p.returns)):
+            # grouped by seed
+            for j, s in enumerate(seeds):
+                vals = []
+                for r in p.returns:
+                    if r.kind == "count":
+                        tot = ((Bn[:, j] > 0).sum()
+                               if (r.distinct or p.semiring == "or_and")
+                               else Bn[:, j].sum())
+                        vals.append(int(tot))
+                    elif r.kind == "prop":
+                        vals.append(_prop(graph, r.prop, int(s)))
+                    else:
+                        vals.append(int(s))
+                rows.append(tuple(vals))
+        else:
+            # materialize (seed, dst) bindings
+            dst_rows, seed_cols = np.nonzero(Bn > 0)
+            for d, j in zip(dst_rows, seed_cols):
+                vals = []
+                for r in p.returns:
+                    node = int(seeds[j]) if r.var == src_var else int(d)
+                    if r.kind == "prop":
+                        vals.append(_prop(graph, r.prop, node))
+                    else:
+                        vals.append(node)
+                rows.append(tuple(vals))
+            rows.sort()
+        if p.limit is not None:
+            rows = rows[: p.limit]
+        return Result(cols, rows)
+
+    # -- solo driver ---------------------------------------------------------
+    def run(self, query) -> Result:
+        q = parse(query) if isinstance(query, str) else query
+        if isinstance(q, A.CreateQuery):
+            raise TypeError("CREATE goes through engine.Database, not a read "
+                            "ExecutionContext")
+        p = plan(q)
+
+        src_mask = self.node_mask(p.src_label, p.var_preds.get(p.src_var))
+        if p.seeds is not None:
+            seeds = np.asarray(sorted(set(p.seeds)), dtype=np.int64)
+            seeds = seeds[src_mask[seeds]]
+        else:
+            seeds = np.nonzero(src_mask)[0]
+        if len(seeds) == 0:
+            return Result([_colname(r) for r in p.returns], [])
+
+        sr = S.get(p.semiring)
+        B = self.seed_frontier(seeds)
+        for e in p.expands:
+            dst_mask = self.node_mask(e.dst_label, p.var_preds.get(e.dst_var))
+            B = self.expand(B, e, sr, dst_mask)
+
+        return self.project(p, seeds, B)
 
 
-# -- expansion ----------------------------------------------------------------
-def _matrices(graph: Graph, rel: Optional[str], direction: str):
-    r = graph.relation(rel)
-    if r is None:
-        raise ValueError(f"no relation {rel!r}")
-    if direction == A.OUT:
-        return [r.A_T]          # pull: next = A^T (x) frontier
-    if direction == A.IN:
-        return [r.A]
-    return [r.A_T, r.A]
-
-
-def _expand(graph: Graph, B: jnp.ndarray, e, sr: S.Semiring,
-            dst_mask: np.ndarray, impl: str) -> jnp.ndarray:
-    mats = _matrices(graph, e.rel, e.direction)
-    reach = jnp.zeros_like(B)
-    frontier = B
-    visited = (B > 0).astype(jnp.float32)
-    for h in range(1, e.max_hops + 1):
-        nxt = None
-        for M in mats:
-            step = ops.mxm(M, frontier, sr,
-                           mask=visited if sr.name == "or_and" else None,
-                           complement=True, impl=impl)
-            nxt = step if nxt is None else S_add(sr, nxt, step)
-        frontier = nxt
-        if sr.name == "or_and":
-            visited = jnp.maximum(visited, (frontier > 0).astype(jnp.float32))
-        if h >= e.min_hops:
-            reach = S_add(sr, reach, frontier)
-    # destination label/property diagonal
-    reach = reach * jnp.asarray(dst_mask, dtype=jnp.float32)[:, None]
-    if sr.name == "or_and":
-        reach = (reach > 0).astype(jnp.float32)
-    return reach
-
-
-def S_add(sr: S.Semiring, a, b):
+def _sr_add(sr: S.Semiring, a, b):
     return jnp.maximum(a, b) if sr.name == "or_and" else a + b
 
 
-# -- top level ------------------------------------------------------------------
+# -- top level ----------------------------------------------------------------
 def execute(graph: Graph, query, impl: str = "auto") -> Result:
-    q = parse(query) if isinstance(query, str) else query
-    if isinstance(q, A.CreateQuery):
-        raise TypeError("CREATE goes through engine.Database, not execute()")
-    p = plan(q)
-    n = graph.n
-
-    src_mask = _node_mask(graph, p.src_label, p.var_preds.get(p.src_var), n)
-    if p.seeds is not None:
-        seeds = np.asarray(sorted(set(p.seeds)), dtype=np.int64)
-        seeds = seeds[src_mask[seeds]]
-    else:
-        seeds = np.nonzero(src_mask)[0]
-    f = len(seeds)
-    if f == 0:
-        return Result([_colname(r) for r in p.returns], [])
-
-    sr = S.get(p.semiring)
-    B = jnp.zeros((n, f), dtype=jnp.float32).at[jnp.asarray(seeds),
-                                                jnp.arange(f)].set(1.0)
-    var_of_col = {p.src_var: "seed"}
-    for e in p.expands:
-        dst_mask = _node_mask(graph, e.dst_label,
-                              p.var_preds.get(e.dst_var), n)
-        B = _expand(graph, B, e, sr, dst_mask, impl)
-
-    return _project(graph, p, seeds, B)
+    return ExecutionContext(graph, impl=impl).run(query)
 
 
 def _colname(r: A.ReturnItem) -> str:
@@ -160,55 +260,6 @@ def _colname(r: A.ReturnItem) -> str:
     if r.kind == "prop":
         return f"{r.var}.{r.prop}"
     return r.var
-
-
-def _project(graph: Graph, p: Plan, seeds: np.ndarray, B: jnp.ndarray) -> Result:
-    Bn = np.asarray(B)
-    cols = [_colname(r) for r in p.returns]
-    src_var = p.src_var
-    terminal = p.expands[-1].dst_var if p.expands else src_var
-
-    returns_src = any(r.var == src_var and r.kind != "count" for r in p.returns)
-    only_counts = all(r.kind == "count" for r in p.returns)
-
-    rows: List[tuple] = []
-    if only_counts and not returns_src:
-        # global aggregate: one row
-        vals = []
-        for r in p.returns:
-            tot = (Bn > 0).sum() if r.distinct or p.semiring == "or_and" else Bn.sum()
-            vals.append(int(tot))
-        rows = [tuple(vals)]
-    elif only_counts or (returns_src and all(r.kind == "count" or r.var == src_var
-                                             for r in p.returns)):
-        # grouped by seed
-        for j, s in enumerate(seeds):
-            vals = []
-            for r in p.returns:
-                if r.kind == "count":
-                    tot = (Bn[:, j] > 0).sum() if (r.distinct or p.semiring == "or_and") else Bn[:, j].sum()
-                    vals.append(int(tot))
-                elif r.kind == "prop":
-                    vals.append(_prop(graph, r.prop, int(s)))
-                else:
-                    vals.append(int(s))
-            rows.append(tuple(vals))
-    else:
-        # materialize (seed, dst) bindings
-        dst_rows, seed_cols = np.nonzero(Bn > 0)
-        for d, j in zip(dst_rows, seed_cols):
-            vals = []
-            for r in p.returns:
-                node = int(seeds[j]) if r.var == src_var else int(d)
-                if r.kind == "prop":
-                    vals.append(_prop(graph, r.prop, node))
-                else:
-                    vals.append(node)
-            rows.append(tuple(vals))
-        rows.sort()
-    if p.limit is not None:
-        rows = rows[: p.limit]
-    return Result(cols, rows)
 
 
 def _prop(graph: Graph, prop: str, node: int):

@@ -9,7 +9,7 @@ import numpy as np
 
 from repro.graph.graph import Graph
 from repro.query import qast as A
-from repro.query.executor import Result, _colname, _node_mask, _prop
+from repro.query.executor import ExecutionContext, Result, _colname, _prop
 from repro.query.parser import parse
 from repro.query.planner import plan
 
@@ -50,11 +50,11 @@ def _bfs_range(adj, seeds: set, minh: int, maxh: int, allowed_dst) -> set:
 def execute_ref(graph: Graph, query) -> Result:
     q = parse(query) if isinstance(query, str) else query
     p = plan(q)
-    n = graph.n
     if p.semiring != "or_and":
         raise NotImplementedError("reference covers distinct semantics only")
 
-    src_mask = _node_mask(graph, p.src_label, p.var_preds.get(p.src_var), n)
+    ctx = ExecutionContext(graph)
+    src_mask = ctx.node_mask(p.src_label, p.var_preds.get(p.src_var))
     if p.seeds is not None:
         seeds = [s for s in sorted(set(p.seeds)) if src_mask[s]]
     else:
@@ -65,8 +65,8 @@ def execute_ref(graph: Graph, query) -> Result:
         cur = {int(s)}
         for e in p.expands:
             adj = _adj(graph, e.rel, e.direction)
-            dst_mask = _node_mask(graph, e.dst_label,
-                                  p.var_preds.get(e.dst_var), n)
+            dst_mask = ctx.node_mask(e.dst_label,
+                                     p.var_preds.get(e.dst_var))
             cur = _bfs_range(adj, cur, e.min_hops, e.max_hops, dst_mask)
         per_seed.append(cur)
 

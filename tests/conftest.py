@@ -1,0 +1,18 @@
+"""Shared test plumbing: the `tpu_only` marker.
+
+Pallas kernels run in interpret mode on CPU (correctness), but tests marked
+`tpu_only` exercise the compiled Mosaic path and would error, not fail, on
+hosts without TPU support — so they are skipped up front.
+"""
+import jax
+import pytest
+
+
+def pytest_collection_modifyitems(config, items):
+    if jax.default_backend() == "tpu":
+        return
+    skip = pytest.mark.skip(
+        reason="tpu_only: requires a TPU backend (compiled Pallas path)")
+    for item in items:
+        if "tpu_only" in item.keywords:
+            item.add_marker(skip)

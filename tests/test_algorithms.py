@@ -71,7 +71,7 @@ def graph_fixture(request):
 def test_bfs_levels(graph_fixture):
     g, adj = graph_fixture
     seeds = [0, 5, 77, 123]
-    got = np.asarray(alg.bfs_levels(g.relations["R"].A_T, seeds, g.n, max_iter=N))
+    got = np.asarray(alg.bfs_levels(g.relations["R"], seeds, max_iter=N))
     for j, s in enumerate(seeds):
         want = np.array(py_bfs(adj, s, g.n))
         np.testing.assert_array_equal(got[:, j], want, err_msg=f"seed {s}")
@@ -81,7 +81,7 @@ def test_bfs_levels(graph_fixture):
 def test_khop_counts(graph_fixture, k):
     g, adj = graph_fixture
     seeds = [3, 50, 199]
-    got = np.asarray(alg.khop_counts(g.relations["R"].A_T, seeds, g.n, k=k))
+    got = np.asarray(alg.khop_counts(g.relations["R"], seeds, k=k))
     for j, s in enumerate(seeds):
         lv = py_bfs(adj, s, g.n)
         want = sum(1 for v in range(g.n) if 1 <= lv[v] <= k)
@@ -97,7 +97,7 @@ def test_sssp_vs_dijkstra():
     for i in range(len(r)):
         adj[r[i]].append((int(c[i]), float(D[r[i], c[i]])))
     seeds = [0, 10, 111]
-    got = np.asarray(alg.sssp(g.relations["R"].A_T, seeds, g.n))
+    got = np.asarray(alg.sssp(g.relations["R"], seeds))
     for j, s in enumerate(seeds):
         want = np.array(py_dijkstra(adj, s, g.n))
         np.testing.assert_allclose(got[:, j], want, rtol=1e-4, atol=1e-4)
@@ -107,7 +107,7 @@ def test_pagerank_sums_to_one_and_matches_numpy():
     src, dst, _ = rand_digraph(seed=3)
     g = GraphBuilder(N).add_edges("R", src, dst).build(fmt="bsr", block=64)
     rel = g.relations["R"]
-    got = np.asarray(alg.pagerank(rel.A, rel.A_T, g.n, iters=60))
+    got = np.asarray(alg.pagerank(rel, iters=60))
     assert abs(got.sum() - 1.0) < 1e-4
     # numpy power iteration oracle
     D = np.asarray(rel.A.to_dense())
@@ -139,7 +139,7 @@ def test_wcc_matches_union_find():
     keep = src != dst
     g = GraphBuilder(n).add_edges("R", src[keep], dst[keep]).build(fmt="bsr", block=64)
     rel = g.relations["R"]
-    labels = np.asarray(alg.wcc(rel.A_T, rel.A, n))
+    labels = np.asarray(alg.wcc(rel))
     for i, sz in enumerate(sizes):
         comp = labels[offs[i]:offs[i + 1]]
         assert (comp == comp[0]).all(), f"cluster {i} split"

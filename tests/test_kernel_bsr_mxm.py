@@ -79,6 +79,16 @@ def test_kernel_masked(complement):
                                    rtol=1e-5, atol=1e-5, err_msg=srname)
 
 
+@pytest.mark.tpu_only
+def test_kernel_compiled_mosaic():
+    """The non-interpret (compiled) kernel path — only meaningful on TPU."""
+    A, X = make_case(256, 256, 128, 3000, block=128, seed=42)
+    got = kops.bsr_mxm(A, X, S.PLUS_TIMES, interpret=False)
+    want = bsr_mxm_ref(A, X, S.PLUS_TIMES)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
 def test_kernel_empty_rows_and_padding():
     # rows in [0, 32) and [64, 96) empty; nnzb padding exercised
     r = np.array([40, 41, 42, 99])
