@@ -6,11 +6,16 @@ PY ?= python
 # src for the package, repo root so `benchmarks.*` resolves as a namespace pkg
 export PYTHONPATH := src:.$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke
+.PHONY: test test-fast bench-smoke
 
 # tier-1 verification (the command ROADMAP.md pins)
 test:
 	$(PY) -m pytest -x -q
+
+# inner-loop pass: everything except the hypothesis property sweeps and the
+# TPU-only compiled-kernel tests (markers registered in pytest.ini)
+test-fast:
+	$(PY) -m pytest -x -q -m "not hypothesis and not tpu_only"
 
 # fast end-to-end benchmark pass: validates the masked plus_pair mxm against
 # the trace(A^3)/6 oracle and prints the CSV row (full suite: benchmarks/run.py)

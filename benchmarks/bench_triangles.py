@@ -1,30 +1,74 @@
-"""GraphChallenge triangle counting (the paper's named future-work item):
-masked plus_pair mxm; validated against the trace(A^3)/6 oracle."""
+"""GraphChallenge triangle counting (the paper's named future-work item).
+
+Times BOTH mxm formulations per scale so the `impl="auto"` policy can later
+consume the crossover:
+
+  dense   — C<A> = A (x) A_dense: masked plus_pair mxm against a densified
+            B operand (the pre-SpGEMM formulation),
+  spgemm  — C<A> = A (x) A via the BSR x BSR SpGEMM kernel (sparse output,
+            block-wise mask).
+
+Both are validated against the trace(A^3)/6 oracle; the summary row names
+the first scale where SpGEMM wins (the dense-vs-SpGEMM crossover).
+"""
 from __future__ import annotations
 
 import time
 
-import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.algorithms import triangle_count
+from repro.core import grb, semiring as S
+from repro.core.grb import Descriptor
 from repro.graph.datagen import rmat_edges
 from repro.graph.graph import GraphBuilder
 
+SCALES = (7, 8, 9, 10)
+EDGE_FACTOR = 8
 
-def run(rows):
-    src, dst, n = rmat_edges(scale=10, edge_factor=8, seed=7)
+
+def _undirected_rmat(scale: int, seed: int = 7):
+    src, dst, n = rmat_edges(scale=scale, edge_factor=EDGE_FACTOR, seed=seed)
     keep = src != dst
     src, dst = src[keep], dst[keep]
     s = np.concatenate([src, dst])
     d = np.concatenate([dst, src])
-    g = GraphBuilder(n).add_edges("R", s, d).build(fmt="bsr", block=128)
-    A = g.relations["R"].A
+    return GraphBuilder(n).add_edges("R", s, d).build(fmt="bsr", block=128)
+
+
+def _count_dense(A: grb.GBMatrix) -> int:
+    """The pre-SpGEMM formulation: densified B operand, dense masked C."""
+    dense = A.to_dense()
+    mask = (dense != 0).astype(jnp.int8)
+    C = grb.mxm(A, dense, S.PLUS_PAIR, Descriptor(mask=mask))
+    return int(jnp.sum(C) / 6)
+
+
+def _time(fn):
+    fn()                                  # warmup: exclude trace/compile time
     t0 = time.perf_counter()
-    got = int(triangle_count(A))
-    dt = time.perf_counter() - t0
-    D = np.asarray(A.to_dense()) != 0
-    want = int(np.trace(D.astype(np.int64) @ D @ D) // 6)
-    assert got == want, (got, want)
-    rows.append(("triangles_rmat_s10", dt * 1e6, f"count={got}"))
+    got = fn()
+    return got, (time.perf_counter() - t0) * 1e6
+
+
+def run(rows):
+    crossover = None
+    for scale in SCALES:
+        g = _undirected_rmat(scale)
+        A = g.relations["R"].A
+        got_d, us_d = _time(lambda: _count_dense(A))
+        got_s, us_s = _time(lambda: int(triangle_count(A)))
+        D = np.asarray(A.to_dense()) != 0
+        want = int(np.trace(D.astype(np.int64) @ D @ D) // 6)
+        assert got_d == want, ("dense", scale, got_d, want)
+        assert got_s == want, ("spgemm", scale, got_s, want)
+        rows.append((f"triangles_dense_s{scale}", us_d, f"count={want}"))
+        rows.append((f"triangles_spgemm_s{scale}", us_s,
+                     f"count={want} speedup={us_d / max(us_s, 1e-9):.2f}x"))
+        if crossover is None and us_s < us_d:
+            crossover = scale
+    rows.append(("triangles_crossover", 0.0,
+                 f"spgemm_wins_from_scale={crossover}"
+                 if crossover is not None else "spgemm_wins_from_scale=none"))
     return rows

@@ -1,9 +1,12 @@
 """Triangle counting — C<A> = A (x)_plus_pair A, sum(C)/6 (GraphChallenge;
 listed as RedisGraph future work, implemented here).
 
-Requires a symmetric (undirected) adjacency. The B operand is densified —
-fine at bench scale; a BSR x BSR SpGEMM kernel is the documented scale-out
-path (EXPERIMENTS.md §Perf). The structural mask rides in the Descriptor.
+Requires a symmetric (undirected) adjacency. Both operands stay sparse: for
+BSR-backed handles `grb.mxm` routes through the two-phase BSR x BSR SpGEMM
+kernel with the structural mask <A> applied block-wise during accumulation,
+so C never materializes as a dense product (dense/ELL handles still take the
+dense pipeline inside `grb.mxm`). `benchmarks/bench_triangles.py` reports
+the dense-vs-SpGEMM crossover.
 """
 from __future__ import annotations
 
@@ -15,7 +18,5 @@ from repro.core.grb import Descriptor
 
 def triangle_count(A, rel=None) -> jnp.ndarray:
     A = grb.matrix(A, rel)
-    dense = A.to_dense()
-    mask = (dense != 0).astype(jnp.int8)
-    C = grb.mxm(A, dense, S.PLUS_PAIR, Descriptor(mask=mask))
-    return (jnp.sum(C) / 6.0).astype(jnp.int32)
+    C = grb.mxm(A, A, S.PLUS_PAIR, Descriptor(mask=A))
+    return (grb.reduce(C, S.PLUS) / 6.0).astype(jnp.int32)

@@ -16,7 +16,7 @@ Kernel-steering invariants (relied on by kernels/bsr_mxm.py):
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -72,6 +72,69 @@ class BSR:
 
     # -- construction --------------------------------------------------------
     @staticmethod
+    def _assemble(blocks, b_r, b_c, shape, block: int, nnz: int,
+                  dtype=jnp.float32, pad_to: int = 8) -> "BSR":
+        """Build a BSR from a host-side list of *valid* tiles with unique,
+        unsorted (block_row, block_col) coordinates, establishing every
+        kernel-steering invariant (padding rows, sort order, first/last
+        flags, row_ptr, grid padding)."""
+        n, m = shape
+        nbr, nbc = -(-n // block), -(-m // block)
+
+        # ensure every block-row has >= 1 tile: add invalid padding tiles
+        present = np.zeros(nbr, dtype=bool)
+        present[b_r] = True
+        missing = np.nonzero(~present)[0].astype(np.int32)
+
+        nv = len(b_r)
+        tot = nv + len(missing)
+        allb = np.zeros((tot, block, block), dtype=np.float32)
+        allb[:nv] = blocks
+        a_r = np.empty(tot, dtype=np.int32)
+        a_c = np.empty(tot, dtype=np.int32)
+        valid = np.empty(tot, dtype=np.int32)
+        a_r[:nv] = b_r
+        a_c[:nv] = b_c
+        valid[:nv] = 1
+        a_r[nv:] = missing
+        a_c[nv:] = 0
+        valid[nv:] = 0
+
+        # sort with padding tiles interleaved
+        order = np.argsort(a_r * nbc + a_c, kind="stable")
+        allb, a_r, a_c, valid = allb[order], a_r[order], a_c[order], valid[order]
+
+        first = np.zeros(tot, dtype=np.int32)
+        last = np.zeros(tot, dtype=np.int32)
+        first[0] = 1
+        first[1:] = (a_r[1:] != a_r[:-1]).astype(np.int32)
+        last[:-1] = first[1:]
+        last[-1] = 1
+
+        row_ptr = np.zeros(nbr + 1, dtype=np.int32)
+        np.add.at(row_ptr, a_r + 1, 1)
+        row_ptr = np.cumsum(row_ptr).astype(np.int32)
+
+        # pad nnzb to a grid-friendly multiple; pads repeat the final tile
+        pad = (-tot) % pad_to
+        if pad:
+            allb = np.concatenate([allb, np.zeros((pad, block, block), np.float32)])
+            a_r = np.concatenate([a_r, np.full(pad, a_r[-1], np.int32)])
+            a_c = np.concatenate([a_c, np.full(pad, a_c[-1], np.int32)])
+            valid = np.concatenate([valid, np.zeros(pad, np.int32)])
+            first = np.concatenate([first, np.zeros(pad, np.int32)])
+            last = np.concatenate([last, np.zeros(pad, np.int32)])
+
+        return BSR(
+            shape=(n, m), block=block,
+            blocks=jnp.asarray(allb, dtype=dtype),
+            block_rows=jnp.asarray(a_r), block_cols=jnp.asarray(a_c),
+            first=jnp.asarray(first), last=jnp.asarray(last),
+            valid=jnp.asarray(valid), row_ptr=jnp.asarray(row_ptr),
+            nnz=nnz,
+        )
+
+    @staticmethod
     def from_coo(rows, cols, vals, shape, block: int = 128,
                  dtype=jnp.float32, pad_to: int = 8) -> "BSR":
         rows = np.asarray(rows, dtype=np.int64)
@@ -80,7 +143,7 @@ class BSR:
             vals = np.ones(rows.shape[0], dtype=np.float64)
         vals = np.asarray(vals, dtype=np.float64)
         n, m = shape
-        nbr, nbc = -(-n // block), -(-m // block)
+        nbc = -(-m // block)
         brow, bcol = rows // block, cols // block
         key = brow * nbc + bcol
         order = np.argsort(key, kind="stable")
@@ -89,63 +152,35 @@ class BSR:
         starts = np.append(starts, rows.shape[0])
         ubrow, ubcol = (ukey // nbc).astype(np.int32), (ukey % nbc).astype(np.int32)
 
-        # ensure every block-row has >= 1 tile: add invalid padding tiles
-        present = np.zeros(nbr, dtype=bool)
-        present[ubrow] = True
-        missing = np.nonzero(~present)[0].astype(np.int32)
-
-        tot = len(ukey) + len(missing)
-        blocks = np.zeros((tot, block, block), dtype=np.float32)
-        b_r = np.empty(tot, dtype=np.int32)
-        b_c = np.empty(tot, dtype=np.int32)
-        valid = np.empty(tot, dtype=np.int32)
-
+        blocks = np.zeros((len(ukey), block, block), dtype=np.float32)
         for i in range(len(ukey)):
             s, e = starts[i], starts[i + 1]
             lr = (rows[s:e] - ubrow[i] * block).astype(np.int64)
             lc = (cols[s:e] - ubcol[i] * block).astype(np.int64)
             np.add.at(blocks[i], (lr, lc), 0.0)  # touch
             blocks[i][lr, lc] = vals[s:e]
-        b_r[: len(ukey)] = ubrow
-        b_c[: len(ukey)] = ubcol
-        valid[: len(ukey)] = 1
-        b_r[len(ukey):] = missing
-        b_c[len(ukey):] = 0
-        valid[len(ukey):] = 0
 
-        # re-sort with padding tiles interleaved
-        order = np.argsort(b_r * nbc + b_c, kind="stable")
-        blocks, b_r, b_c, valid = blocks[order], b_r[order], b_c[order], valid[order]
+        return BSR._assemble(blocks, ubrow, ubcol, (n, m), block,
+                             nnz=int(rows.shape[0]), dtype=dtype,
+                             pad_to=pad_to)
 
-        first = np.zeros(tot, dtype=np.int32)
-        last = np.zeros(tot, dtype=np.int32)
-        first[0] = 1
-        first[1:] = (b_r[1:] != b_r[:-1]).astype(np.int32)
-        last[:-1] = first[1:]
-        last[-1] = 1
-
-        row_ptr = np.zeros(nbr + 1, dtype=np.int32)
-        np.add.at(row_ptr, b_r + 1, 1)
-        row_ptr = np.cumsum(row_ptr).astype(np.int32)
-
-        # pad nnzb to a grid-friendly multiple; pads repeat the final tile
-        pad = (-tot) % pad_to
-        if pad:
-            blocks = np.concatenate([blocks, np.zeros((pad, block, block), np.float32)])
-            b_r = np.concatenate([b_r, np.full(pad, b_r[-1], np.int32)])
-            b_c = np.concatenate([b_c, np.full(pad, b_c[-1], np.int32)])
-            valid = np.concatenate([valid, np.zeros(pad, np.int32)])
-            first = np.concatenate([first, np.zeros(pad, np.int32)])
-            last = np.concatenate([last, np.zeros(pad, np.int32)])
-
-        return BSR(
-            shape=(n, m), block=block,
-            blocks=jnp.asarray(blocks, dtype=dtype),
-            block_rows=jnp.asarray(b_r), block_cols=jnp.asarray(b_c),
-            first=jnp.asarray(first), last=jnp.asarray(last),
-            valid=jnp.asarray(valid), row_ptr=jnp.asarray(row_ptr),
-            nnz=int(rows.shape[0]),
-        )
+    @staticmethod
+    def from_blocks(block_rows, block_cols, blocks, shape, block: int,
+                    dtype=jnp.float32, pad_to: int = 8,
+                    prune: bool = True) -> "BSR":
+        """Assemble a BSR from computed tile payloads (the SpGEMM numeric
+        phase). All-zero tiles — masked-out or numerically cancelled output
+        blocks — are pruned so `nvals`/`fill_ratio` report stored structure,
+        not kernel artifacts; `nnz` counts the surviving nonzero entries."""
+        blocks = np.asarray(blocks, dtype=np.float32)
+        b_r = np.asarray(block_rows, dtype=np.int32)
+        b_c = np.asarray(block_cols, dtype=np.int32)
+        if prune and len(b_r):
+            keep = (blocks != 0).any(axis=(1, 2))
+            blocks, b_r, b_c = blocks[keep], b_r[keep], b_c[keep]
+        nnz = int(np.count_nonzero(blocks))
+        return BSR._assemble(blocks, b_r, b_c, shape, block, nnz=nnz,
+                             dtype=dtype, pad_to=pad_to)
 
     @staticmethod
     def from_dense(A, block: int = 128, dtype=jnp.float32) -> "BSR":
@@ -173,6 +208,13 @@ class BSR:
         dense = np.asarray(self.to_dense()).T
         return BSR.from_dense(dense, block=self.block, dtype=self.blocks.dtype)
 
+    def valid_tiles(self):
+        """Host-side (indices, block_rows, block_cols) of the valid tiles."""
+        va = np.asarray(self.valid).astype(bool)
+        idx = np.nonzero(va)[0].astype(np.int32)
+        return (idx, np.asarray(self.block_rows)[idx],
+                np.asarray(self.block_cols)[idx])
+
     def to_coo(self):
         """Host-side COO extraction (snapshot/persistence path)."""
         b = self.block
@@ -192,3 +234,195 @@ class BSR:
             return (np.zeros(0, np.int64),) * 2 + (np.zeros(0, np.float32),)
         return (np.concatenate(rows), np.concatenate(cols),
                 np.concatenate(vals))
+
+
+# ---------------------------------------------------------------------------
+# SpGEMM: C<M> = A (x) B with BOTH operands block-sparse
+# ---------------------------------------------------------------------------
+# Semiring modes the SpGEMM numeric phase supports (every MXU-dot mode; the
+# tropical bcast modes fall back to the dense pipeline in grb.mxm).
+SPGEMM_MODES = ("dot", "dot_pair", "dot_indicator", "dot_first")
+
+
+@dataclasses.dataclass
+class SpGEMMPlan:
+    """Output of the *symbolic* phase: the block-level multiply schedule.
+
+    One task t multiplies A tile ``a_sel[t]`` by B tile ``b_sel[t]`` and
+    accumulates into output tile ``c_sel[t]``; tasks are sorted by c_sel so
+    each output tile is a contiguous run (``first``/``last`` bound it, the
+    Pallas revisit schedule relies on it). ``valid=0`` marks grid padding.
+    With a non-complemented mask the schedule is already restricted to the
+    mask's block pattern; ``mask_sel[j]`` is the mask tile backing output
+    tile j (-1 = absent, i.e. an all-zero mask tile).
+    """
+    a_sel: np.ndarray     # (T,) i32 index into A.blocks
+    b_sel: np.ndarray     # (T,) i32 index into B.blocks
+    c_sel: np.ndarray     # (T,) i32 index into the output tile list
+    first: np.ndarray     # (T,) i32 1 iff first task of its output tile
+    last: np.ndarray      # (T,) i32 1 iff last task of its output tile
+    valid: np.ndarray     # (T,) i32 0 for padding tasks
+    c_rows: np.ndarray    # (nc,) i32 block-row per output tile
+    c_cols: np.ndarray    # (nc,) i32 block-col per output tile
+    mask_sel: Optional[np.ndarray]  # (nc,) i32 mask tile per output tile / -1
+
+    @property
+    def ntasks(self) -> int:
+        return int(self.a_sel.shape[0])
+
+    @property
+    def nc(self) -> int:
+        return int(self.c_rows.shape[0])
+
+
+def _ragged_ranges(offsets: np.ndarray, lens: np.ndarray) -> np.ndarray:
+    """concat(range(offsets[i], offsets[i]+lens[i]) for i) vectorized."""
+    total = int(lens.sum())
+    if total == 0:
+        return np.zeros(0, dtype=np.int64)
+    ends = np.cumsum(lens)
+    task_start = np.repeat(ends - lens, lens)
+    return np.arange(total, dtype=np.int64) - task_start + np.repeat(offsets, lens)
+
+
+def spgemm_symbolic(A: "BSR", B: "BSR", mask: Optional["BSR"] = None,
+                    complement: bool = False, pad_to: int = 8) -> SpGEMMPlan:
+    """Block-level pattern of C = A (x) B, optionally restricted to <M>.
+
+    Host-side numpy over tile coordinate lists (the analog of SuiteSparse's
+    symbolic pass over column patterns): pair every valid A tile (i, l) with
+    every valid B tile (l, j), group tasks by output tile (i, j). A
+    non-complemented structural mask prunes output tiles — and therefore
+    whole task groups — *before* any numeric work; a complemented mask
+    cannot prune (absent mask tiles are kept entries), so it only annotates.
+    """
+    ia, bra, bca = A.valid_tiles()
+    ib, brb, bcb = B.valid_tiles()
+    nbc_out = B.nbcols
+
+    # group B tiles by block-row (the inner dimension)
+    order = np.argsort(brb, kind="stable")
+    ib, brb, bcb = ib[order], brb[order], bcb[order]
+    nbk = B.nbrows
+    cnt = np.bincount(brb, minlength=nbk)
+    ptr = np.concatenate([[0], np.cumsum(cnt)])
+
+    # one task per (A tile, matching B tile) pair
+    lens = cnt[bca]
+    a_rep = np.repeat(np.arange(len(ia), dtype=np.int64), lens)
+    pos = _ragged_ranges(ptr[bca], lens)
+    a_sel = ia[a_rep]
+    b_sel = ib[pos]
+    ckey = bra[a_rep].astype(np.int64) * nbc_out + bcb[pos]
+
+    mkeys = midx = None
+    if mask is not None:
+        im, brm, bcm = mask.valid_tiles()
+        mkeys = brm.astype(np.int64) * nbc_out + bcm
+        morder = np.argsort(mkeys)
+        mkeys, midx = mkeys[morder], im[morder]
+        if not complement:
+            # structural mask prunes the schedule block-wise, up front
+            keep = np.isin(ckey, mkeys)
+            a_sel, b_sel, ckey = a_sel[keep], b_sel[keep], ckey[keep]
+
+    # sort tasks by output tile -> contiguous accumulation runs
+    order = np.argsort(ckey, kind="stable")
+    a_sel, b_sel, ckey = a_sel[order], b_sel[order], ckey[order]
+    ukey, c_sel = np.unique(ckey, return_inverse=True)
+    c_rows = (ukey // nbc_out).astype(np.int32)
+    c_cols = (ukey % nbc_out).astype(np.int32)
+
+    ntask = len(ckey)
+    first = np.zeros(ntask, dtype=np.int32)
+    last = np.zeros(ntask, dtype=np.int32)
+    if ntask:
+        first[0] = 1
+        first[1:] = (ckey[1:] != ckey[:-1]).astype(np.int32)
+        last[:-1] = first[1:]
+        last[-1] = 1
+    valid = np.ones(ntask, dtype=np.int32)
+
+    mask_sel = None
+    if mask is not None:
+        # mask tile index per output tile (-1: no stored mask tile there)
+        if len(mkeys):
+            j = np.clip(np.searchsorted(mkeys, ukey), 0, len(mkeys) - 1)
+            mask_sel = np.where(mkeys[j] == ukey, midx[j], -1).astype(np.int32)
+        else:
+            mask_sel = np.full(len(ukey), -1, dtype=np.int32)
+
+    # pad the task list to a grid-friendly multiple (repeat the last task
+    # with valid=0 so index maps stay in range and no tile re-inits)
+    pad = (-ntask) % pad_to if ntask else 0
+    if pad:
+        a_sel = np.concatenate([a_sel, np.full(pad, a_sel[-1])])
+        b_sel = np.concatenate([b_sel, np.full(pad, b_sel[-1])])
+        c_sel = np.concatenate([c_sel, np.full(pad, c_sel[-1])])
+        first = np.concatenate([first, np.zeros(pad, np.int32)])
+        last = np.concatenate([last, np.zeros(pad, np.int32)])
+        valid = np.concatenate([valid, np.zeros(pad, np.int32)])
+
+    return SpGEMMPlan(a_sel=a_sel.astype(np.int32), b_sel=b_sel.astype(np.int32),
+                      c_sel=c_sel.astype(np.int32), first=first, last=last,
+                      valid=valid, c_rows=c_rows, c_cols=c_cols,
+                      mask_sel=mask_sel)
+
+
+def spgemm(A: "BSR", B: "BSR", sr, mask: Optional["BSR"] = None,
+           complement: bool = False, impl: str = "xla",
+           interpret: Optional[bool] = None) -> "BSR":
+    """Two-phase sparse-times-sparse mxm: C<M> = A (x) B, C stays BSR.
+
+    Symbolic phase (host) plans the block schedule and applies a structural
+    mask block-wise; numeric phase (device) runs it through the Pallas
+    SpGEMM kernel (``impl="pallas"``) or the XLA gather/segment-sum
+    reference (``impl="xla"``), folding the mask's *element* pattern into
+    the last task of each output tile. All-zero output tiles are pruned.
+    """
+    if A.shape[1] != B.shape[0]:
+        raise ValueError(f"spgemm inner dims: {A.shape} x {B.shape}")
+    if mask is not None and mask.shape != (A.shape[0], B.shape[1]):
+        raise ValueError(f"spgemm mask shape {mask.shape} != output "
+                         f"{(A.shape[0], B.shape[1])}")
+    if sr.mode not in SPGEMM_MODES:
+        raise NotImplementedError(
+            f"spgemm does not support mode {sr.mode!r} (semiring {sr.name})")
+    if A.block != B.block:
+        B = BSR.from_coo(*B.to_coo(), B.shape, block=A.block)
+    if mask is not None and mask.block != A.block:
+        mask = BSR.from_coo(*mask.to_coo(), mask.shape, block=A.block)
+
+    shape = (A.shape[0], B.shape[1])
+    plan = spgemm_symbolic(A, B, mask=mask, complement=complement)
+    if plan.ntasks == 0:
+        return BSR.from_blocks(plan.c_rows, plan.c_cols,
+                               np.zeros((0, A.block, A.block), np.float32),
+                               shape, A.block)
+
+    from repro.kernels import bsr_spgemm as _k   # lazy: kernels import core
+    mask_blocks = None
+    if mask is not None:
+        sel = jnp.asarray(np.clip(plan.mask_sel, 0, None))
+        present = jnp.asarray((plan.mask_sel >= 0).astype(np.float32))
+        mask_blocks = (mask.blocks.astype(jnp.float32)[sel]
+                       * present[:, None, None])
+    cblocks = _k.spgemm_blocks(A.blocks, B.blocks, plan, sr,
+                               mask_blocks=mask_blocks, complement=complement,
+                               impl=impl, interpret=interpret)
+    return BSR.from_blocks(plan.c_rows, plan.c_cols, np.asarray(cblocks),
+                           shape, A.block)
+
+
+def bsr_union(A: "BSR", B: "BSR") -> "BSR":
+    """Structural (boolean) union of two same-shape BSR patterns — the
+    GrB_eWiseAdd(or) analog the multi-hop reachability matrices need."""
+    if A.shape != B.shape:
+        raise ValueError(f"bsr_union shapes: {A.shape} vs {B.shape}")
+    ra, ca, _ = A.to_coo()
+    rb, cb, _ = B.to_coo()
+    r = np.concatenate([ra, rb]).astype(np.int64)
+    c = np.concatenate([ca, cb]).astype(np.int64)
+    key = r * A.shape[1] + c
+    _, idx = np.unique(key, return_index=True)
+    return BSR.from_coo(r[idx], c[idx], None, A.shape, block=A.block)

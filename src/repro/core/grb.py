@@ -38,7 +38,7 @@ import numpy as np
 
 from repro.core import ops as _ops
 from repro.core import semiring as S
-from repro.core.bsr import BSR
+from repro.core.bsr import BSR, SPGEMM_MODES as _SPGEMM_MODES
 from repro.core.ell import ELL
 
 Array = jnp.ndarray
@@ -53,14 +53,16 @@ class Descriptor:
     """Operation modifiers for one GraphBLAS call.
 
     mask        write mask M (same shape as the output, or a (n,) vector for
-                mxv/vxm); entries where M is zero are *not* written
+                mxv/vxm); entries where M is zero are *not* written. May be
+                a dense array or a sparse GBMatrix/BSR handle — the SpGEMM
+                path applies sparse masks block-wise (docs/API.md §SpGEMM)
     complement  use !M instead of M (GrB_COMP)
     accum       accumulate monoid: C<M> accum= result instead of C<M> = result
     replace     clear C entries outside the mask (GrB_REPLACE)
     transpose_a op reads A^T instead of A (GrB_INP0 + GrB_TRAN); served from
                 the GBMatrix handle's cached transpose, never a runtime flip
     """
-    mask: Optional[Array] = None
+    mask: Optional[Union[Array, "GBMatrix", BSR]] = None
     complement: bool = False
     accum: Optional[S.Monoid] = None
     replace: bool = False
@@ -303,20 +305,61 @@ def _dispatch_mxm(A: GBMatrix, B: Array, sr: S.Semiring,
     return S.dense_mxm(S.structural_dense(A.store, sr), B, sr), False
 
 
+def _mask_storage(mask) -> Optional[Storage]:
+    """Unwrap a descriptor mask that may be a GBMatrix handle."""
+    if isinstance(mask, GBMatrix):
+        return mask.store
+    return mask
+
+
+def _mask_as_bsr(mask, block: int) -> Optional[BSR]:
+    """Structural BSR view of a descriptor mask for the SpGEMM path."""
+    mask = _mask_storage(mask)
+    if mask is None or isinstance(mask, BSR):
+        return mask
+    if isinstance(mask, ELL):
+        mask = mask.to_dense()
+    return BSR.from_dense(np.asarray(mask), block=block)
+
+
+def _mxm_spgemm(A: GBMatrix, B: GBMatrix, sr: S.Semiring,
+                d: Descriptor) -> GBMatrix:
+    """Sparse-times-sparse dispatch: C<M> = A (x) B with C staying BSR.
+
+    The structural mask is applied block-wise during accumulation planning
+    (non-complemented masks prune whole output tiles symbolically) and
+    element-wise in the kernel epilogue — never on a dense product.
+    """
+    from repro.core.bsr import spgemm
+    mask = _mask_as_bsr(d.mask, A.store.block)
+    C = spgemm(A.store, B.store, sr, mask=mask, complement=d.complement,
+               impl=A.impl)
+    name = f"({A.name}x{B.name})" if (A.name or B.name) else ""
+    return GBMatrix(C, impl=A.impl, name=name)
+
+
 def mxm(A, B, sr: S.Semiring, d: Descriptor = NULL,
-        out: Optional[Array] = None) -> Array:
+        out: Optional[Array] = None):
     """C<M> accum= A (x) B over a semiring — the uniform GraphBLAS call.
 
-    A: GBMatrix (or raw BSR/ELL/dense, wrapped on the fly). B: dense (m, f)
-    operand (a frontier matrix; GBMatrix-wrapped dense also accepted).
-    ``out`` is the existing C for accum/blend; None means replace-into-empty.
+    A: GBMatrix (or raw BSR/ELL/dense, wrapped on the fly). B: either a
+    dense (m, f) frontier matrix (returns a dense C) or a *sparse* GBMatrix
+    (BSR x BSR routes through the SpGEMM kernel and returns a BSR-backed
+    GBMatrix — see docs/API.md §SpGEMM for the dispatch rule). ``out`` is
+    the existing C for accum/blend; None means replace-into-empty.
     """
     A = GBMatrix.wrap(A)
     if d.transpose_a:
         A = A.T
         d = d.with_(transpose_a=False)
+    if (isinstance(B, GBMatrix) and A.fmt == "bsr" and B.fmt == "bsr"
+            and out is None and sr.mode in _SPGEMM_MODES):
+        return _mxm_spgemm(A, B, sr, d)
     if isinstance(B, GBMatrix):
         B = B.to_dense()
+    if isinstance(d.mask, GBMatrix) or isinstance(d.mask, (BSR, ELL)):
+        m = _mask_storage(d.mask)
+        d = d.with_(mask=m if isinstance(m, jnp.ndarray) else m.to_dense())
     fuse = d.mask is not None and out is None and d.mask_only
     y, mask_done = _dispatch_mxm(A, B, sr, d, fuse)
     if mask_done:
@@ -324,8 +367,10 @@ def mxm(A, B, sr: S.Semiring, d: Descriptor = NULL,
     return finalize(d, y, out, sr.identity)
 
 
-def _columnize(v: Optional[Array]) -> Optional[Array]:
-    if v is not None and v.ndim == 1:
+def _columnize(v) -> Optional[Array]:
+    # sparse GBMatrix/BSR masks have no ndim and pass through to mxm's
+    # mask conversion untouched; (n,) vectors become width-1 columns
+    if v is not None and getattr(v, "ndim", None) == 1:
         return v[:, None]
     return v
 
@@ -355,7 +400,16 @@ def ewise_mult(a: Array, b: Array, op: Callable[[Array, Array], Array],
     return finalize(d, op(a, b), out, identity)
 
 
-def reduce(x: Array, monoid: S.Monoid, axis=None) -> Array:
+def reduce(x, monoid: S.Monoid, axis=None) -> Array:
+    """Monoid reduction; sparse GBMatrix handles reduce over stored blocks
+    without densifying (plus/or over full extent), else via to_dense()."""
+    if isinstance(x, GBMatrix):
+        if x.fmt == "bsr" and axis is None and monoid.name in ("plus", "or"):
+            s = x.store
+            v = s.blocks.astype(jnp.float32) * s.valid.astype(
+                jnp.float32)[:, None, None]
+            return jnp.max(v) if monoid.name == "or" else jnp.sum(v)
+        x = x.to_dense()
     return monoid.reduce(x, axis=axis)
 
 

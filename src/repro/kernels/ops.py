@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import semiring as S
 from repro.core.bsr import BSR
@@ -29,3 +30,20 @@ def bsr_mxm(A, X: jnp.ndarray, sr: S.Semiring, *,
         interpret = _interpret_default()
     return _bsr.bsr_mxm(A, X, sr, mask=mask, complement=complement,
                         f_tile=f_tile, interpret=interpret)
+
+
+def bsr_spgemm(A, B, sr: S.Semiring, *, mask=None, complement: bool = False,
+               interpret: bool | None = None) -> BSR:
+    """BSR x BSR -> BSR through the Pallas SpGEMM kernel (symbolic phase on
+    host, numeric phase on device; interpret mode off-TPU)."""
+    from repro.core.bsr import spgemm
+    A = A.store if not isinstance(A, BSR) else A
+    B = B.store if not isinstance(B, BSR) else B
+    if mask is not None and not isinstance(mask, BSR):
+        mask = getattr(mask, "store", mask)       # GBMatrix handle -> storage
+        if not isinstance(mask, BSR):             # dense array -> structural BSR
+            mask = BSR.from_dense(np.asarray(mask), block=A.block)
+    if interpret is None:
+        interpret = _interpret_default()
+    return spgemm(A, B, sr, mask=mask, complement=complement,
+                  impl="pallas", interpret=interpret)

@@ -95,10 +95,17 @@ class ExecutionContext:
     their execution policy once per context (not per call).
     """
 
-    def __init__(self, graph: Graph, impl: str = "auto"):
+    # multi-hop SpGEMM fast path is only planned for adjacencies up to this
+    # many vertices (hop-matrix fill grows with hop count)
+    SPGEMM_EXPAND_MAX_N = 16384
+
+    def __init__(self, graph: Graph, impl: str = "auto",
+                 spgemm_expand: bool = True):
         self.graph = graph
         self.impl = impl
+        self.spgemm_expand = spgemm_expand
         self._mats: Dict[str, grb.GBMatrix] = {}
+        self._hops: Dict[tuple, grb.GBMatrix] = {}
 
     # -- primitives ----------------------------------------------------------
     def matrix(self, rel: Optional[str]) -> grb.GBMatrix:
@@ -134,6 +141,35 @@ class ExecutionContext:
         return B.at[jnp.asarray(np.where(keep, seeds, 0)),
                     jnp.arange(f)].set(jnp.asarray(keep.astype(np.float32)))
 
+    def _hop_matrix(self, rel, transpose: bool,
+                    max_hops: int) -> grb.GBMatrix:
+        """Union of walk matrices OR_{h=1..max} Mt^h over or_and, built once
+        per (relation, direction, max_hops) via masked BSR x BSR SpGEMM and
+        cached — one sparse handle that answers a whole multi-hop pattern."""
+        key = (rel, transpose, max_hops)
+        P = self._hops.get(key)
+        if P is None:
+            from repro.core.bsr import bsr_union, spgemm
+            M = self.matrix(rel)
+            Mt = (M.T if transpose else M).store
+            acc = walk = Mt
+            for _ in range(max_hops - 1):
+                walk = spgemm(walk, Mt, S.OR_AND, impl=M.impl)
+                acc = bsr_union(acc, walk)
+            P = self._hops[key] = grb.GBMatrix(acc, impl=self.impl,
+                                               name=f"{rel}^1..{max_hops}")
+        return P
+
+    def _expand_spgemm_ok(self, e, sr: S.Semiring, transposes) -> bool:
+        """The hop-matrix rewrite is exact only for structural reachability
+        starting at hop 1 in a single direction (walk-union == first-reach
+        union once the seed columns are masked back out)."""
+        return (self.spgemm_expand and sr.name == "or_and"
+                and e.min_hops == 1 and e.max_hops > 1
+                and len(transposes) == 1
+                and self.matrix(e.rel).fmt == "bsr"
+                and self.graph.n <= self.SPGEMM_EXPAND_MAX_N)
+
     def expand(self, B: jnp.ndarray, e, sr: S.Semiring,
                dst_mask: np.ndarray) -> jnp.ndarray:
         """min..max-hop traversal of B along e.rel in e.direction."""
@@ -141,6 +177,16 @@ class ExecutionContext:
         transposes = {A.OUT: (True,), A.IN: (False,),
                       A.BOTH: (True, False)}[e.direction]
         structural = sr.name == "or_and"
+        if self._expand_spgemm_ok(e, sr, transposes):
+            # one masked mxm against the precomputed 1..max hop matrix
+            # replaces max_hops sequential hops; <!seeds> removes the
+            # closed-walk returns the loop's visited mask would have blocked
+            P = self._hop_matrix(e.rel, transposes[0], e.max_hops)
+            seeds0 = (B > 0).astype(jnp.float32)
+            reach = grb.mxm(P, B, sr,
+                            Descriptor(mask=seeds0, complement=True))
+            reach = reach * jnp.asarray(dst_mask, dtype=jnp.float32)[:, None]
+            return (reach > 0).astype(jnp.float32)
         reach = jnp.zeros_like(B)
         frontier = B
         visited = (B > 0).astype(jnp.float32)

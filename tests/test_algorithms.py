@@ -160,3 +160,57 @@ def test_triangle_count_vs_bruteforce():
     D = np.asarray(A.to_dense()) != 0
     want = int(np.trace((D.astype(np.int64) @ D @ D)) // 6)
     assert got == want
+
+
+# -- triangle goldens: known graphs + pure-NumPy counter ----------------------
+def _tri_numpy(src, dst, n) -> int:
+    """Independent counter: trace(A^3)/6 on a dense bool adjacency."""
+    D = np.zeros((n, n), dtype=np.int64)
+    D[src, dst] = 1
+    D[dst, src] = 1
+    np.fill_diagonal(D, 0)
+    return int(np.trace(D @ D @ D) // 6)
+
+
+def _sym_graph(src, dst, n, fmt, block=32):
+    s = np.concatenate([src, dst])
+    d = np.concatenate([dst, src])
+    return GraphBuilder(n).add_edges("R", s, d).build(fmt=fmt, block=block)
+
+
+PETERSEN_EDGES = [(0, 1), (1, 2), (2, 3), (3, 4), (4, 0),       # outer C5
+                  (5, 7), (7, 9), (9, 6), (6, 8), (8, 5),       # inner star
+                  (0, 5), (1, 6), (2, 7), (3, 8), (4, 9)]       # spokes
+
+GOLDEN_GRAPHS = {
+    # complete graph K4: C(4,3) = 4 triangles
+    "K4": ([(i, j) for i in range(4) for j in range(i + 1, 4)], 4, 4),
+    # 5-cycle: girth 5, no triangles
+    "C5": ([(i, (i + 1) % 5) for i in range(5)], 5, 0),
+    # Petersen graph: girth 5, no triangles
+    "petersen": (PETERSEN_EDGES, 10, 0),
+    # complete bipartite K33: bipartite graphs are triangle-free
+    "K33": ([(i, 3 + j) for i in range(3) for j in range(3)], 6, 0),
+}
+
+
+@pytest.mark.parametrize("name", sorted(GOLDEN_GRAPHS))
+@pytest.mark.parametrize("fmt", ["bsr", "dense"])
+def test_triangle_count_golden(name, fmt):
+    edges, n, want = GOLDEN_GRAPHS[name]
+    src = np.array([e[0] for e in edges])
+    dst = np.array([e[1] for e in edges])
+    assert _tri_numpy(src, dst, n) == want          # the golden is golden
+    g = _sym_graph(src, dst, n, fmt, block=8)
+    assert int(alg.triangle_count(g.relations["R"].A)) == want
+
+
+@pytest.mark.parametrize("fmt", ["bsr", "dense"])
+def test_triangle_count_rmat_golden(fmt):
+    from repro.graph.datagen import rmat_edges
+    src, dst, n = rmat_edges(scale=7, edge_factor=6, seed=123)
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    g = _sym_graph(src, dst, n, fmt, block=32)
+    assert int(alg.triangle_count(g.relations["R"].A)) == \
+        _tri_numpy(src, dst, n)

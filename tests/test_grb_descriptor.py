@@ -156,3 +156,76 @@ def test_descriptor_with_():
     d2 = d.with_(transpose_a=True)
     assert d2.complement and d2.transpose_a and not d.transpose_a
     assert grb.NULL.mask_only
+
+
+# -- GBMatrix x GBMatrix (SpGEMM path) vs the same dense oracle ---------------
+F2 = 48  # sparse B operand width
+
+
+def _sparse_case(seed=17):
+    rng = np.random.default_rng(seed)
+    r, c, v, D, _, _, _ = _case(seed=seed)
+    rb = rng.integers(0, M, size=500)
+    cb = rng.integers(0, F2, size=500)
+    key = rb * F2 + cb
+    _, i = np.unique(key, return_index=True)
+    rb, cb = rb[i], cb[i]
+    vb = rng.uniform(0.5, 2.0, size=len(rb)).astype(np.float32)
+    DB = np.zeros((M, F2), np.float32)
+    DB[rb, cb] = vb
+    mask = (rng.uniform(size=(N, F2)) < 0.5).astype(np.int8)
+    C = rng.uniform(0.5, 1.5, size=(N, F2)).astype(np.float32)
+    A = grb.GBMatrix(BSR.from_coo(r, c, v, (N, M), block=32))
+    B = grb.GBMatrix(BSR.from_coo(rb, cb, vb, (M, F2), block=32))
+    return A, B, D, DB, mask, C
+
+
+@pytest.mark.spgemm
+@pytest.mark.parametrize("srname", ["plus_times", "plus_pair"])
+@pytest.mark.parametrize("mask_mode", ["none", "mask", "comp"])
+@pytest.mark.parametrize("accum", ["none", "plus"])
+@pytest.mark.parametrize("replace", [False, True])
+@pytest.mark.parametrize("with_c", [False, True])
+def test_sparse_sparse_blend_combinations(srname, mask_mode, accum, replace,
+                                          with_c):
+    """mask x complement x accum x replace x existing-C on GBMatrix x
+    GBMatrix operands. out=None keeps C sparse (SpGEMM, mask folded
+    block-wise); an existing C blends through the dense finalize — both must
+    match the documented rule the dense oracle implements."""
+    sr = S.get(srname)
+    A, B, D, DB, mask, C = _sparse_case(seed=19)
+    raw = np.asarray(S.dense_mxm(jnp.asarray(D), jnp.asarray(DB), sr))
+    m = None if mask_mode == "none" else mask
+    d = Descriptor(mask=None if m is None else jnp.asarray(m),
+                   complement=mask_mode == "comp",
+                   accum=_ACCUM[accum], replace=replace)
+    out = jnp.asarray(C) if with_c else None
+    got = grb.mxm(A, B, sr, d, out=out)
+    if isinstance(got, grb.GBMatrix):
+        assert not with_c                 # sparse result only when C absent
+        assert got.fmt == "bsr"
+        got = got.to_dense()
+    want = _oracle(raw, C if with_c else None, m, mask_mode == "comp",
+                   _ACCUM_NP[accum], replace, sr.identity)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-5,
+                               err_msg=f"{srname}/{mask_mode}/accum={accum}/"
+                                       f"replace={replace}/C={with_c}")
+
+
+@pytest.mark.spgemm
+def test_sparse_sparse_gbmatrix_mask():
+    """The mask itself may be a sparse GBMatrix handle (triangle counting's
+    C<A> = A (x) A) on both the sparse and dense pipelines."""
+    A, B, D, DB, _, _ = _sparse_case(seed=23)
+    raw = np.asarray(S.dense_mxm(jnp.asarray(D), jnp.asarray(DB),
+                                 S.PLUS_PAIR))
+    mask_h = grb.GBMatrix(BSR.from_dense((raw > 1).astype(np.float32),
+                                         block=32))
+    got = grb.mxm(A, B, S.PLUS_PAIR, Descriptor(mask=mask_h))
+    want = np.where(raw > 1, raw, 0.0)
+    np.testing.assert_allclose(np.asarray(got.to_dense()), want, rtol=1e-5)
+    # same handle-mask through the dense pipeline (dense A)
+    Ad = grb.GBMatrix(jnp.asarray(D))
+    got_d = grb.mxm(Ad, jnp.asarray(DB), S.PLUS_PAIR,
+                    Descriptor(mask=mask_h))
+    np.testing.assert_allclose(np.asarray(got_d), want, rtol=1e-5)

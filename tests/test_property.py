@@ -7,6 +7,8 @@ pytest.importorskip("hypothesis", reason="hypothesis not installed "
                     "(see requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
+pytestmark = pytest.mark.hypothesis   # excluded by `make test-fast`
+
 from repro import algorithms as alg
 from repro.core import BSR, ELL, ops, semiring as S
 from repro.graph.graph import GraphBuilder

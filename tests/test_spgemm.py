@@ -1,0 +1,295 @@
+"""BSR x BSR SpGEMM conformance suite vs the dense oracle.
+
+Two layers, both marked `spgemm`:
+
+  * a deterministic parametrized sweep (shapes incl. n not divisible by the
+    block, densities, block sizes, plus_times/plus_pair, masked/unmasked/
+    complemented, XLA and Pallas-interpret numeric phases) that always runs;
+  * hypothesis-generated COO graphs over the same oracle, guarded with the
+    `importorskip` convention from test_property.py (the guard is per-test
+    here so the deterministic sweep still runs without hypothesis).
+
+Also pins the structural contract: explicit zero blocks (masked-out or
+numerically cancelled tiles) are pruned on construction so `nvals` and
+`fill_ratio` report stored structure.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import BSR, grb, semiring as S
+from repro.core.bsr import bsr_union, spgemm, spgemm_symbolic
+from repro.core.grb import Descriptor
+from repro.kernels import ops as kops
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+pytestmark = pytest.mark.spgemm
+
+
+# -- helpers -----------------------------------------------------------------
+def rand_bsr(n, m, nnz, block, seed, weighted=True):
+    rng = np.random.default_rng(seed)
+    r = rng.integers(0, n, size=max(nnz, 1))
+    c = rng.integers(0, m, size=max(nnz, 1))
+    key = r * m + c
+    _, i = np.unique(key, return_index=True)
+    r, c = r[i], c[i]
+    v = (rng.uniform(0.5, 2.0, size=len(r)).astype(np.float32)
+         if weighted else None)
+    return BSR.from_coo(r, c, v, (n, m), block=block)
+
+
+def dense_oracle(DA, DB, sr, mask=None, complement=False):
+    """Independent NumPy SpGEMM oracle: dense semiring matmul + mask."""
+    raw = np.asarray(S.dense_mxm(jnp.asarray(DA), jnp.asarray(DB), sr))
+    if mask is None:
+        return raw
+    keep = (mask == 0) if complement else (mask != 0)
+    return np.where(keep, raw, np.float32(sr.identity))
+
+
+def check_case(A, B, sr, mask=None, complement=False, impl="xla"):
+    C = spgemm(A, B, sr, mask=mask, complement=complement, impl=impl,
+               interpret=True)
+    DM = None if mask is None else np.asarray(mask.to_dense())
+    want = dense_oracle(np.asarray(A.to_dense()), np.asarray(B.to_dense()),
+                        sr, mask=DM, complement=complement)
+    np.testing.assert_allclose(np.asarray(C.to_dense()), want,
+                               rtol=1e-5, atol=1e-5)
+    assert C.nnz == int(np.count_nonzero(want))
+    return C
+
+
+# -- deterministic oracle sweep ----------------------------------------------
+SHAPES = [
+    (96, 96, 96, 32),      # block-aligned square
+    (130, 70, 50, 32),     # nothing divisible by the block
+    (64, 128, 96, 16),     # rectangular chain
+    (37, 53, 41, 16),      # small odd everything
+    (100, 100, 100, 48),   # block larger than needed, non-divisible
+]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("srname", ["plus_times", "plus_pair"])
+@pytest.mark.parametrize("mask_mode", ["none", "mask", "comp"])
+def test_spgemm_oracle(shape, srname, mask_mode):
+    n, k, m, block = shape
+    sr = S.get(srname)
+    A = rand_bsr(n, k, n * k // 16, block, seed=n + k)
+    B = rand_bsr(k, m, k * m // 16, block, seed=k + m + 1)
+    mask = (None if mask_mode == "none"
+            else rand_bsr(n, m, n * m // 8, block, seed=5))
+    check_case(A, B, sr, mask=mask, complement=mask_mode == "comp")
+
+
+@pytest.mark.parametrize("srname", ["plus_times", "plus_pair", "or_and",
+                                    "plus_first"])
+@pytest.mark.parametrize("mask_mode", ["none", "mask", "comp"])
+def test_spgemm_pallas_kernel_matches_oracle(srname, mask_mode):
+    """The Pallas numeric phase (interpret mode on CPU) == dense oracle."""
+    sr = S.get(srname)
+    A = rand_bsr(96, 80, 700, 32, seed=11)
+    B = rand_bsr(80, 64, 600, 32, seed=12)
+    mask = None if mask_mode == "none" else rand_bsr(96, 64, 900, 32, seed=13)
+    check_case(A, B, sr, mask=mask, complement=mask_mode == "comp",
+               impl="pallas")
+
+
+def test_spgemm_density_sweep():
+    """From near-empty to near-dense operands, same oracle."""
+    n = 64
+    for nnz in (1, 8, 64, 512, 2048, n * n):
+        A = rand_bsr(n, n, nnz, 16, seed=nnz)
+        B = rand_bsr(n, n, nnz, 16, seed=nnz + 1)
+        check_case(A, B, S.PLUS_TIMES)
+
+
+def test_spgemm_kernel_wrapper():
+    """kernels.ops.bsr_spgemm is the kernel-path public entry."""
+    A = rand_bsr(64, 64, 400, 32, seed=3)
+    C = kops.bsr_spgemm(A, A, S.PLUS_PAIR, mask=A)
+    want = dense_oracle(np.asarray(A.to_dense()), np.asarray(A.to_dense()),
+                        S.PLUS_PAIR, mask=np.asarray(A.to_dense()))
+    np.testing.assert_allclose(np.asarray(C.to_dense()), want, rtol=1e-5)
+
+
+def test_spgemm_block_size_mismatch_rebuilds():
+    A = rand_bsr(64, 64, 300, 32, seed=21)
+    B = rand_bsr(64, 64, 300, 16, seed=22)
+    check_case(A, B, S.PLUS_TIMES)
+
+
+def test_spgemm_empty_product():
+    """Disjoint patterns: the symbolic phase finds zero tasks."""
+    A = BSR.from_coo([0], [0], None, (64, 64), block=32)
+    B = BSR.from_coo([63], [63], None, (64, 64), block=32)
+    C = spgemm(A, B, S.PLUS_TIMES)
+    assert C.nnz == 0
+    assert float(np.asarray(C.to_dense()).sum()) == 0.0
+
+
+def test_spgemm_inner_dim_mismatch_raises():
+    A = rand_bsr(32, 48, 50, 16, seed=1)
+    B = rand_bsr(32, 32, 50, 16, seed=2)
+    with pytest.raises(ValueError):
+        spgemm(A, B, S.PLUS_TIMES)
+
+
+def test_spgemm_tropical_mode_unsupported():
+    A = rand_bsr(32, 32, 50, 16, seed=1)
+    with pytest.raises(NotImplementedError):
+        spgemm(A, A, S.MIN_PLUS)
+
+
+# -- symbolic-phase structure -------------------------------------------------
+def test_symbolic_schedule_invariants():
+    A = rand_bsr(96, 96, 800, 32, seed=31)
+    plan = spgemm_symbolic(A, A)
+    c = plan.c_sel[plan.valid == 1]
+    assert (np.diff(c) >= 0).all()                  # grouped by output tile
+    assert plan.first.sum() == plan.nc              # one init per tile
+    assert plan.last.sum() == plan.nc               # one epilogue per tile
+    assert plan.ntasks % 8 == 0                     # grid padding applied
+
+
+def test_symbolic_mask_prunes_blockwise():
+    """A non-complemented mask must shrink the schedule, not just the output."""
+    A = rand_bsr(128, 128, 1000, 32, seed=41)
+    tiny = BSR.from_coo([0], [0], None, (128, 128), block=32)
+    full = spgemm_symbolic(A, A)
+    masked = spgemm_symbolic(A, A, mask=tiny)
+    assert masked.nc < full.nc
+    assert masked.ntasks < full.ntasks
+    comp = spgemm_symbolic(A, A, mask=tiny, complement=True)
+    assert comp.nc == full.nc                       # complement cannot prune
+
+
+# -- explicit-zero pruning: nvals / fill_ratio contract ------------------------
+def test_masked_out_blocks_are_pruned():
+    """A mask that zeroes an entire output tile must not leave an explicit
+    zero block behind — nvals/fill_ratio report stored structure."""
+    A = rand_bsr(64, 64, 900, 16, seed=51)
+    mask = BSR.from_coo([0], [0], None, (64, 64), block=16)  # single entry
+    C = spgemm(A, A, S.PLUS_PAIR, mask=mask)
+    want = dense_oracle(np.asarray(A.to_dense()), np.asarray(A.to_dense()),
+                        S.PLUS_PAIR, mask=np.asarray(mask.to_dense()))
+    nz = int(np.count_nonzero(want))
+    assert C.nnz == nz and nz <= 1
+    # at most the one stored tile survives (plus per-row padding tiles)
+    assert int(np.asarray(C.valid).sum()) == (1 if nz else 0)
+    cap = int(np.asarray(C.valid).sum()) * C.block * C.block
+    assert C.fill_ratio == (nz / cap if cap else 0.0)
+
+
+def test_cancellation_zeros_not_counted():
+    """plus_times cancellation (+1 * 1 + -1 * 1) produces an explicit zero
+    entry; nvals must count nonzeros, and an all-cancelled tile is pruned."""
+    # A row [1, -1], B column [1, 1]^T -> C[0,0] = 0 exactly
+    A = BSR.from_coo([0, 0], [0, 1], [1.0, -1.0], (16, 16), block=16)
+    B = BSR.from_coo([0, 1], [0, 0], [1.0, 1.0], (16, 16), block=16)
+    C = spgemm(A, B, S.PLUS_TIMES)
+    assert C.nnz == 0
+    assert int(np.asarray(C.valid).sum()) == 0      # tile fully pruned
+    g = grb.GBMatrix(C)
+    assert g.nvals == 0
+
+
+def test_from_blocks_prunes_and_counts():
+    blocks = np.zeros((3, 8, 8), np.float32)
+    blocks[0, 1, 2] = 4.0
+    blocks[2, 0, 0] = 1.0
+    blocks[2, 7, 7] = 2.0
+    C = BSR.from_blocks([0, 1, 2], [0, 1, 2], blocks, (24, 24), block=8)
+    assert C.nnz == 3
+    assert int(np.asarray(C.valid).sum()) == 2      # block 1 was all-zero
+    D = np.zeros((24, 24), np.float32)
+    D[1, 2] = 4.0
+    D[16, 16] = 1.0
+    D[23, 23] = 2.0
+    np.testing.assert_array_equal(np.asarray(C.to_dense()), D)
+
+
+# -- grb dispatch --------------------------------------------------------------
+def test_grb_mxm_sparse_dispatch_returns_gbmatrix():
+    A = grb.GBMatrix(rand_bsr(96, 96, 700, 32, seed=61))
+    C = grb.mxm(A, A, S.PLUS_PAIR, Descriptor(mask=A))
+    assert isinstance(C, grb.GBMatrix) and C.fmt == "bsr"
+    D = np.asarray(A.to_dense())
+    want = dense_oracle(D, D, S.PLUS_PAIR, mask=D)
+    np.testing.assert_allclose(np.asarray(C.to_dense()), want, rtol=1e-5)
+    assert C.nvals == int(np.count_nonzero(want))
+    # sparse reduce without densifying
+    tot = float(grb.reduce(C, S.PLUS))
+    assert abs(tot - want.sum()) < 1e-3
+
+
+def test_grb_mxm_dense_mask_on_sparse_path():
+    """A dense descriptor mask is converted block-wise for the sparse path."""
+    A = grb.GBMatrix(rand_bsr(64, 64, 500, 32, seed=62))
+    rng = np.random.default_rng(0)
+    mask = (rng.uniform(size=(64, 64)) < 0.3).astype(np.float32)
+    C = grb.mxm(A, A, S.PLUS_TIMES, Descriptor(mask=jnp.asarray(mask)))
+    D = np.asarray(A.to_dense())
+    want = dense_oracle(D, D, S.PLUS_TIMES, mask=mask)
+    np.testing.assert_allclose(np.asarray(C.to_dense()), want,
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_grb_mxm_tropical_falls_back_to_dense():
+    A = grb.GBMatrix(rand_bsr(64, 64, 500, 32, seed=63))
+    y = grb.mxm(A, A, S.MIN_PLUS)
+    assert not isinstance(y, grb.GBMatrix)          # dense fallback result
+    D = np.asarray(A.to_dense())
+    want = np.asarray(S.dense_mxm(S.structural_dense(jnp.asarray(D),
+                                                     S.MIN_PLUS),
+                                  jnp.asarray(D), S.MIN_PLUS))
+    np.testing.assert_allclose(np.asarray(y), want, rtol=1e-5)
+
+
+def test_bsr_union():
+    A = rand_bsr(64, 64, 200, 16, seed=71, weighted=False)
+    B = rand_bsr(64, 64, 200, 16, seed=72, weighted=False)
+    U = bsr_union(A, B)
+    DU = (np.asarray(A.to_dense()) != 0) | (np.asarray(B.to_dense()) != 0)
+    np.testing.assert_array_equal(np.asarray(U.to_dense()) != 0, DU)
+    assert U.nnz == int(DU.sum())
+
+
+# -- hypothesis property sweep -------------------------------------------------
+if HAVE_HYPOTHESIS:
+
+    @pytest.mark.hypothesis
+    @settings(max_examples=30, deadline=None)
+    @given(seed=st.integers(0, 10**6), n=st.integers(8, 96),
+           k=st.integers(8, 96), m=st.integers(8, 96),
+           density=st.floats(0.005, 0.2),
+           srname=st.sampled_from(["plus_times", "plus_pair"]),
+           mask_mode=st.sampled_from(["none", "mask", "comp"]),
+           block=st.sampled_from([8, 16, 32, 48]))
+    def test_spgemm_random_sweep(seed, n, k, m, density, srname, mask_mode,
+                                 block):
+        """Hypothesis-generated COO graphs (incl. n not divisible by the
+        block): BSR x BSR == dense oracle, masked and unmasked."""
+        rng = np.random.default_rng(seed)
+        sr = S.get(srname)
+        A = rand_bsr(n, k, int(n * k * density) + 1, block, seed=seed)
+        B = rand_bsr(k, m, int(k * m * density) + 1, block, seed=seed + 1)
+        mask = (None if mask_mode == "none"
+                else rand_bsr(n, m, int(n * m * density * 2) + 1, block,
+                              seed=seed + 2))
+        impl = "pallas" if rng.uniform() < 0.5 else "xla"
+        check_case(A, B, sr, mask=mask, complement=mask_mode == "comp",
+                   impl=impl)
+
+else:
+
+    @pytest.mark.hypothesis
+    def test_spgemm_random_sweep():
+        pytest.importorskip("hypothesis", reason="hypothesis not installed "
+                            "(see requirements-dev.txt)")
