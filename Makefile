@@ -6,16 +6,21 @@ PY ?= python
 # src for the package, repo root so `benchmarks.*` resolves as a namespace pkg
 export PYTHONPATH := src:.$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast bench-smoke
+.PHONY: test test-fast test-ewise bench-smoke
 
 # tier-1 verification (the command ROADMAP.md pins)
 test:
 	$(PY) -m pytest -x -q
 
 # inner-loop pass: everything except the hypothesis property sweeps and the
-# TPU-only compiled-kernel tests (markers registered in pytest.ini)
+# TPU-only compiled-kernel tests (markers registered in pytest.ini). Picks
+# up the ewise suite (element-wise family + k-truss) via its marker.
 test-fast:
 	$(PY) -m pytest -x -q -m "not hypothesis and not tpu_only"
+
+# just the sparse element-wise family + k-truss conformance suite
+test-ewise:
+	$(PY) -m pytest -x -q -m "ewise and not hypothesis"
 
 # fast end-to-end benchmark pass: validates the masked plus_pair mxm against
 # the trace(A^3)/6 oracle and prints the CSV row (full suite: benchmarks/run.py)

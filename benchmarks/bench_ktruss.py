@@ -1,0 +1,60 @@
+"""k-truss: sparse (masked SpGEMM + sparse select) vs dense formulation.
+
+Shares the RMAT symmetrization and warmup-timing helpers with
+bench_triangles.py so the two crossover reports measure identically.
+Races the two routes `algorithms.ktruss` can take per RMAT scale:
+
+  sparse — BSR-backed handle: support<A> via the BSR x BSR SpGEMM kernel,
+           block-sparse select, zero densifications (the Graphulo shape),
+  dense  — the same recurrence on a dense-backed handle (dense masked
+           plus_pair matmul + dense structural select).
+
+Both are validated against an independent NumPy peeling oracle; the summary
+row names the first scale where the sparse route wins, mirroring
+bench_triangles.py (whose measured crossover feeds grb's impl="auto"
+policy).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.bench_triangles import _time, _undirected_rmat
+from repro.algorithms import ktruss
+from repro.core import grb
+
+SCALES = (7, 8, 9)
+K = 4
+
+
+def _ktruss_oracle(D: np.ndarray, k: int) -> np.ndarray:
+    """Independent NumPy peeling loop (support recount each round)."""
+    A = (np.asarray(D) != 0).astype(np.int64)
+    np.fill_diagonal(A, 0)
+    while True:
+        sup = (A @ A) * A
+        A2 = ((sup >= k - 2) & (A != 0)).astype(np.int64)
+        if (A2 == A).all():
+            return A2
+        A = A2
+
+
+def run(rows):
+    crossover = None
+    for scale in SCALES:
+        g = _undirected_rmat(scale)
+        A = g.relations["R"].A
+        dense_h = grb.GBMatrix(A.to_dense())
+        got_s, us_s = _time(lambda: ktruss(A, K).nvals)
+        got_d, us_d = _time(lambda: ktruss(dense_h, K).nvals)
+        want = int(_ktruss_oracle(np.asarray(A.to_dense()), K).sum())
+        assert got_s == want, ("sparse", scale, got_s, want)
+        assert got_d == want, ("dense", scale, got_d, want)
+        rows.append((f"ktruss{K}_dense_s{scale}", us_d, f"edges={want}"))
+        rows.append((f"ktruss{K}_sparse_s{scale}", us_s,
+                     f"edges={want} speedup={us_d / max(us_s, 1e-9):.2f}x"))
+        if crossover is None and us_s < us_d:
+            crossover = scale
+    rows.append(("ktruss_crossover", 0.0,
+                 f"sparse_wins_from_scale={crossover}"
+                 if crossover is not None else "sparse_wins_from_scale=none"))
+    return rows

@@ -4,6 +4,7 @@
   throughput  — paper §II (threadpool/read-scaling claim)
   kernels     — format-selection crossover (BSR/ELL/dense)
   triangles   — GraphChallenge (paper future-work item)
+  ktruss      — Graphulo k-truss, sparse (masked SpGEMM) vs dense
 
 Prints ``name,us_per_call,derived`` CSV. Roofline terms come from the
 dry-run artifacts: ``python -m benchmarks.roofline``.
@@ -14,8 +15,8 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import bench_khop, bench_kernels, bench_throughput, \
-        bench_triangles
+    from benchmarks import bench_khop, bench_kernels, bench_ktruss, \
+        bench_throughput, bench_triangles
     rows: list = []
     only = sys.argv[1] if len(sys.argv) > 1 else None
     suites = {
@@ -23,6 +24,7 @@ def main() -> None:
         "throughput": bench_throughput.run,
         "kernels": bench_kernels.run,
         "triangles": bench_triangles.run,
+        "ktruss": bench_ktruss.run,
     }
     print("name,us_per_call,derived")
     for name, fn in suites.items():

@@ -1,8 +1,9 @@
 from repro.algorithms.traverse import bfs_levels, khop_counts
+from repro.algorithms.ktruss import ktruss
 from repro.algorithms.pagerank import pagerank
 from repro.algorithms.sssp import sssp
 from repro.algorithms.wcc import wcc
 from repro.algorithms.triangles import triangle_count
 
-__all__ = ["bfs_levels", "khop_counts", "pagerank", "sssp", "wcc",
+__all__ = ["bfs_levels", "khop_counts", "ktruss", "pagerank", "sssp", "wcc",
            "triangle_count"]

@@ -1,0 +1,79 @@
+"""k-truss — the Graphulo formulation on the masked SpGEMM kernel.
+
+The k-truss of an undirected graph is the maximal subgraph in which every
+edge closes at least k-2 triangles. Graphulo (PAPERS.md) reduces one
+peeling round to two sparse primitives the `grb` surface now has:
+
+  support<A> = A (x)_plus_pair A     # masked SpGEMM: common-neighbor count
+                                     # computed ONLY on A's stored edges
+  A'         = select(support >= k-2)
+
+iterated to fixpoint (the pattern shrinks monotonically, so it terminates).
+On a BSR-backed handle every step stays sparse: the support matrix comes
+out of the two-phase BSR x BSR SpGEMM with the structural mask <A> pruning
+output tiles symbolically, and the select prunes emptied tiles on
+reassembly — no ``to_dense()`` anywhere on the hot path (pinned by a
+densification-counter test). Dense handles run the same recurrence through
+the dense pipeline; ELL handles are reblocked to BSR (COO relabeling, still
+sparse) first. `benchmarks/bench_ktruss.py` races the two formulations.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core import grb, semiring as S
+from repro.core.bsr import BSR, as_bsr
+from repro.core.grb import Descriptor, GBMatrix
+
+
+def ktruss(A, k: int, rel: Optional[str] = None,
+           max_iter: Optional[int] = None) -> GBMatrix:
+    """Edges of the k-truss, values = final triangle support per edge.
+
+    A: Graph / Relation / GBMatrix / raw storage of a symmetric adjacency.
+    Self-loops are dropped up front (they would inflate support counts with
+    diagonal walk terms). Returns a GBMatrix whose stored pattern is the
+    truss's edge set and whose values are each surviving edge's support
+    (common-neighbor count within the truss). k <= 2 returns the input
+    unchanged (every edge is trivially in a 2-truss).
+    """
+    A = grb.matrix(A, rel)
+    n, m = A.shape
+    if n != m:
+        raise ValueError(f"ktruss needs a square adjacency, got {A.shape}")
+    if k <= 2:
+        return A
+    if A.fmt == "ell":          # sparse-to-sparse reblock, no densification
+        A = GBMatrix(as_bsr(A.store, 128),
+                     impl="auto" if A.auto else A.impl)
+    # self-loops would add spurious diagonal walk terms (A[i,i] * A[i,j]) to
+    # the plus_pair product, inflating support; drop them up front (a
+    # host-side COO filter on the sparse path — no densification)
+    if A.fmt == "bsr":
+        r, c, v = A.store.to_coo()
+        loops = r == c
+        if loops.any():
+            A = GBMatrix(BSR.from_coo(r[~loops], c[~loops], v[~loops],
+                                      A.shape, block=A.store.block),
+                         impl="auto" if A.auto else A.impl)
+    else:
+        A = GBMatrix(A.store * (1.0 - jnp.eye(n, dtype=jnp.float32)))
+    need = float(k - 2)
+    rounds = 0
+    while True:
+        # plus_pair counts common neighbors; the mask <A> restricts both the
+        # symbolic schedule and the element pattern to current edges
+        C = grb.mxm(A, A, S.PLUS_PAIR, Descriptor(mask=A))
+        if not isinstance(C, GBMatrix):
+            C = GBMatrix(C)     # dense pipeline returns a raw array
+        T = grb.select(lambda s: s >= need, C)
+        if not isinstance(T, GBMatrix):
+            T = GBMatrix(T)
+        rounds += 1
+        if T.nvals == A.nvals or T.nvals == 0:
+            return T
+        if max_iter is not None and rounds >= max_iter:
+            return T
+        A = T

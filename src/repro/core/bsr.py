@@ -23,6 +23,21 @@ import jax.numpy as jnp
 import numpy as np
 
 
+# ---------------------------------------------------------------------------
+# densification accounting
+# ---------------------------------------------------------------------------
+# Every BSR -> dense materialization bumps this counter. The sparse
+# algorithm paths (SpGEMM triangle counting, k-truss) promise *zero*
+# densifications on their hot loops; tests snapshot the counter around a run
+# and assert the delta (tests/test_ktruss.py). Host-side only — not traced.
+_densify_calls = [0]
+
+
+def densify_calls() -> int:
+    """Total BSR.to_dense() materializations so far (monotonic)."""
+    return _densify_calls[0]
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class BSR:
@@ -80,6 +95,13 @@ class BSR:
         flags, row_ptr, grid padding)."""
         n, m = shape
         nbr, nbc = -(-n // block), -(-m // block)
+        if nbr == 0:          # zero-row shapes (an empty extract): no tiles
+            z32 = jnp.zeros(0, dtype=jnp.int32)
+            return BSR(shape=(n, m), block=block,
+                       blocks=jnp.zeros((0, block, block), dtype=dtype),
+                       block_rows=z32, block_cols=z32, first=z32, last=z32,
+                       valid=z32, row_ptr=jnp.zeros(1, dtype=jnp.int32),
+                       nnz=nnz)
 
         # ensure every block-row has >= 1 tile: add invalid padding tiles
         present = np.zeros(nbr, dtype=bool)
@@ -189,6 +211,7 @@ class BSR:
         return BSR.from_coo(r, c, A[r, c], A.shape, block=block, dtype=dtype)
 
     def to_dense(self) -> jnp.ndarray:
+        _densify_calls[0] += 1
         n, m = self.shape
         block = self.block
         nbr, nbc = self.nbrows, self.nbcols
@@ -426,3 +449,191 @@ def bsr_union(A: "BSR", B: "BSR") -> "BSR":
     key = r * A.shape[1] + c
     _, idx = np.unique(key, return_index=True)
     return BSR.from_coo(r[idx], c[idx], None, A.shape, block=A.block)
+
+
+# ---------------------------------------------------------------------------
+# element-wise family: block-aligned sparse ops (GrB_eWiseAdd / eWiseMult /
+# GrB_apply / GxB_select), never materializing a dense operand
+# ---------------------------------------------------------------------------
+# Stored == nonzero (the repo-wide structural convention); an absent entry
+# renders as 0 when densified. All ops therefore work on the *valid* tile
+# lists: one host-side coordinate plan (union / intersection of block keys,
+# the element-wise analog of the SpGEMM symbolic phase) plus one vectorized
+# gather over tile payloads. Results go through BSR.from_blocks, so tiles
+# that end up all-zero (a select that empties a tile, a cancelled add) are
+# pruned and nvals/fill_ratio stay truthful.
+
+def reblock(A: "BSR", block: int) -> "BSR":
+    """Rebuild at a different tile size (sparse: COO round-trip, no dense)."""
+    if A.block == block:
+        return A
+    return BSR.from_coo(*A.to_coo(), A.shape, block=block)
+
+
+def as_bsr(store, block: int) -> "BSR":
+    """Coerce sparse storage — a BSR at any tile size, or anything exposing
+    ``to_coo`` (ELL) — to a BSR at the given block size. Sparse-to-sparse:
+    goes through the COO entry list, never a dense intermediate."""
+    if isinstance(store, BSR):
+        return reblock(store, block)
+    return BSR.from_coo(*store.to_coo(), store.shape, block=block)
+
+
+def _check_same_shape(A: "BSR", B: "BSR", opname: str) -> None:
+    if A.shape != B.shape:
+        raise ValueError(f"{opname} shapes: {A.shape} vs {B.shape}")
+
+
+def _tile_keys(brows: np.ndarray, bcols: np.ndarray, nbc: int) -> np.ndarray:
+    return brows.astype(np.int64) * nbc + bcols.astype(np.int64)
+
+
+def _key_select(wanted: np.ndarray, keys: np.ndarray,
+                idx: np.ndarray) -> np.ndarray:
+    """For each key in ``wanted``, the tile index in ``idx`` holding it, or
+    -1 when no stored tile has that key. ``keys`` need not be sorted."""
+    out = np.full(len(wanted), -1, dtype=np.int32)
+    if len(keys) == 0 or len(wanted) == 0:
+        return out
+    order = np.argsort(keys)
+    keys, idx = keys[order], idx[order]
+    j = np.clip(np.searchsorted(keys, wanted), 0, len(keys) - 1)
+    hit = keys[j] == wanted
+    out[hit] = idx[j[hit]]
+    return out
+
+
+def _gather_tiles(blocks: np.ndarray, sel: np.ndarray,
+                  block: int) -> np.ndarray:
+    """Stack the selected tiles; sel == -1 yields an all-zero tile."""
+    if len(sel) == 0:
+        return np.zeros((0, block, block), dtype=np.float32)
+    out = blocks[np.clip(sel, 0, None)].astype(np.float32, copy=True)
+    out *= (sel >= 0).astype(np.float32)[:, None, None]
+    return out
+
+
+def ewise_add(A: "BSR", B: "BSR", op) -> "BSR":
+    """C = A (+) B — GraphBLAS *union* semantics over stored entries.
+
+    Pattern(C) = pattern(A) | pattern(B). Where both sides store an entry
+    the value is op(a, b); where only one side does, the stored value passes
+    through *unchanged* — the absent side is never fed to op, so
+    non-zero-preserving monoids (min, max with negatives) stay correct.
+    Block-aligned: one gathered tile pair per union tile.
+    """
+    _check_same_shape(A, B, "bsr.ewise_add")
+    B = reblock(B, A.block)
+    ia, ra, ca = A.valid_tiles()
+    ib, rb, cb = B.valid_tiles()
+    nbc = A.nbcols
+    ka = _tile_keys(ra, ca, nbc)
+    kb = _tile_keys(rb, cb, nbc)
+    keys = np.union1d(ka, kb)
+    Ta = _gather_tiles(np.asarray(A.blocks, dtype=np.float32),
+                       _key_select(keys, ka, ia), A.block)
+    Tb = _gather_tiles(np.asarray(B.blocks, dtype=np.float32),
+                       _key_select(keys, kb, ib), A.block)
+    both = (Ta != 0) & (Tb != 0)
+    # where only one side is stored the other tile holds 0, so Ta + Tb is
+    # exactly "the stored value" there (and 0 where neither side stores)
+    res = np.where(both, np.asarray(op(Ta, Tb), dtype=np.float32), Ta + Tb)
+    return BSR.from_blocks((keys // nbc).astype(np.int32),
+                           (keys % nbc).astype(np.int32),
+                           res, A.shape, A.block)
+
+
+def ewise_mult(A: "BSR", B: "BSR", op) -> "BSR":
+    """C = A (.*) B — GraphBLAS *intersection* semantics over stored entries.
+
+    Pattern(C) = pattern(A) & pattern(B); values op(a, b) on the
+    intersection. Only tiles valid in BOTH operands are even gathered — the
+    structural intersection prunes whole blocks before any element work.
+    """
+    _check_same_shape(A, B, "bsr.ewise_mult")
+    B = reblock(B, A.block)
+    ia, ra, ca = A.valid_tiles()
+    ib, rb, cb = B.valid_tiles()
+    nbc = A.nbcols
+    ka = _tile_keys(ra, ca, nbc)
+    kb = _tile_keys(rb, cb, nbc)
+    keys = np.intersect1d(ka, kb)
+    Ta = _gather_tiles(np.asarray(A.blocks, dtype=np.float32),
+                       _key_select(keys, ka, ia), A.block)
+    Tb = _gather_tiles(np.asarray(B.blocks, dtype=np.float32),
+                       _key_select(keys, kb, ib), A.block)
+    both = (Ta != 0) & (Tb != 0)
+    res = np.where(both, np.asarray(op(Ta, Tb), dtype=np.float32),
+                   np.float32(0.0))
+    return BSR.from_blocks((keys // nbc).astype(np.int32),
+                           (keys % nbc).astype(np.int32),
+                           res, A.shape, A.block)
+
+
+def apply_stored(A: "BSR", f) -> "BSR":
+    """GrB_apply over stored entries only: C[i,j] = f(A[i,j]) where stored.
+
+    f runs on the valid tile payloads; zero lanes inside a stored tile are
+    *absent* entries and stay zero regardless of f(0) — structural
+    semantics, not a dense map."""
+    ia, ra, ca = A.valid_tiles()
+    blk = np.asarray(A.blocks, dtype=np.float32)[ia]
+    res = np.where(blk != 0, np.asarray(f(blk), dtype=np.float32),
+                   np.float32(0.0))
+    return BSR.from_blocks(ra, ca, res, A.shape, A.block)
+
+
+def select_stored(A: "BSR", pred) -> "BSR":
+    """GxB_select: keep stored entries where pred(value); drop the rest.
+    Tiles the predicate empties entirely are pruned (from_blocks)."""
+    ia, ra, ca = A.valid_tiles()
+    blk = np.asarray(A.blocks, dtype=np.float32)[ia]
+    keep = (blk != 0) & np.asarray(pred(blk), dtype=bool)
+    res = np.where(keep, blk, np.float32(0.0))
+    return BSR.from_blocks(ra, ca, res, A.shape, A.block)
+
+
+def mask_keep(A: "BSR", M: "BSR", complement: bool = False) -> "BSR":
+    """A restricted to M's stored element pattern (<M>), or to its absent
+    pattern (<!M>) — the sparse building block of the descriptor blend.
+    Non-complemented masks drop A tiles with no mask tile without gathering
+    them; complemented masks keep those tiles whole."""
+    _check_same_shape(A, M, "bsr.mask_keep")
+    M = reblock(M, A.block)
+    ia, ra, ca = A.valid_tiles()
+    im, rm, cm = M.valid_tiles()
+    nbc = A.nbcols
+    sel_m = _key_select(_tile_keys(ra, ca, nbc), _tile_keys(rm, cm, nbc), im)
+    if not complement:
+        keep_tile = sel_m >= 0          # block-level prune, SpGEMM-style
+        ia, ra, ca, sel_m = ia[keep_tile], ra[keep_tile], ca[keep_tile], \
+            sel_m[keep_tile]
+    blk = np.asarray(A.blocks, dtype=np.float32)[ia] if len(ia) else \
+        np.zeros((0, A.block, A.block), np.float32)
+    Mt = _gather_tiles(np.asarray(M.blocks, dtype=np.float32), sel_m, A.block)
+    keep = (Mt == 0) if complement else (Mt != 0)
+    res = np.where(keep, blk, np.float32(0.0))
+    return BSR.from_blocks(ra, ca, res, A.shape, A.block)
+
+
+def extract_ranges(A: "BSR", r0: int, r1: int, c0: int, c1: int) -> "BSR":
+    """Block-aligned GrB_extract fast path: A[r0:r1, c0:c1] with r0/c0 on
+    tile boundaries — pure tile-list surgery, no element movement."""
+    if r0 % A.block or c0 % A.block:
+        raise ValueError("extract_ranges needs block-aligned starts "
+                         f"(got {r0}, {c0} for block {A.block})")
+    b = A.block
+    br0, bc0 = r0 // b, c0 // b
+    br1, bc1 = -(-r1 // b), -(-c1 // b)
+    ia, ra, ca = A.valid_tiles()
+    keep = (ra >= br0) & (ra < br1) & (ca >= bc0) & (ca < bc1)
+    ia, ra, ca = ia[keep], ra[keep] - br0, ca[keep] - bc0
+    blk = np.asarray(A.blocks, dtype=np.float32)[ia] if len(ia) else \
+        np.zeros((0, b, b), np.float32)
+    out_n, out_m = r1 - r0, c1 - c0
+    if len(ia):
+        # crop boundary tiles that extend past the slice end
+        rows_ok = (ra[:, None] * b + np.arange(b)[None, :]) < out_n
+        cols_ok = (ca[:, None] * b + np.arange(b)[None, :]) < out_m
+        blk = blk * rows_ok[:, :, None] * cols_ok[:, None, :]
+    return BSR.from_blocks(ra, ca, blk, (out_n, out_m), b)

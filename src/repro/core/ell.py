@@ -68,6 +68,16 @@ class ELL:
                    nnz=int(rows.shape[0]))
 
     @staticmethod
+    def from_entries(keys, vals, shape, pad_deg_to: int = 8) -> "ELL":
+        """Build from flat row-major entry keys (``row * ncols + col``) —
+        the spelling the COO set algebra (repro.core.coo) hands back from
+        the sparse element-wise / assign / extract paths."""
+        w = max(shape[1], 1)
+        keys = np.asarray(keys, dtype=np.int64)
+        return ELL.from_coo(keys // w, keys % w, vals, shape,
+                            pad_deg_to=pad_deg_to)
+
+    @staticmethod
     def from_dense(A, pad_deg_to: int = 8) -> "ELL":
         A = np.asarray(A)
         r, c = np.nonzero(A)

@@ -13,7 +13,14 @@ TPU analog of the GraphBLAS C API subset RedisGraph builds on:
                      at construction),
   GrB_mxm family  -> module-level :func:`mxm` / :func:`mxv` / :func:`vxm` /
                      :func:`ewise_add` / :func:`ewise_mult` / :func:`reduce` /
-                     :func:`apply` / :func:`select`.
+                     :func:`apply` / :func:`select` / :func:`assign` /
+                     :func:`extract`.
+
+The mxm family takes dense frontiers or sparse GBMatrix operands (BSR x BSR
+routes through SpGEMM); the element-wise family is *format-aware*: sparse
+operands run block-aligned (BSR, core.bsr) or COO set-algebra (ELL,
+core.coo) paths with GraphBLAS union/intersection entry semantics and stay
+sparse end to end — no silent densification (docs/API.md §eWise).
 
 Algorithms (`repro.algorithms`), the query executor (`repro.query.executor`),
 the batched server (`repro.engine.server`) and the sharded path
@@ -36,6 +43,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import bsr as _bsr
+from repro.core import coo as _coo
 from repro.core import ops as _ops
 from repro.core import semiring as S
 from repro.core.bsr import BSR, SPGEMM_MODES as _SPGEMM_MODES
@@ -118,19 +127,43 @@ def _fmt_of(store: Storage) -> str:
     return "dense"
 
 
-def _resolve_impl(requested: str, fmt: str) -> str:
+# -- impl="auto" crossover policy --------------------------------------------
+# Measured by benchmarks/bench_triangles.py (RMAT edge_factor 8, block 128,
+# XLA-CPU reference host): the sparse-kernel formulation loses below RMAT
+# scale 9 and wins from it — 1.1x at s9 (512 rows = 4 block-rows,
+# stored-tile fill 0.022), 1.6x at s10 (8 block-rows, fill 0.012). Below
+# AUTO_MIN_GRID block-rows, or with stored tiles mostly full, one batched
+# XLA matmul amortizes better than per-tile kernel scheduling; a B operand
+# narrower than AUTO_MIN_WIDTH columns cannot fill an MXU pass either way.
+AUTO_MIN_GRID = 4     # block-rows/-cols below this: one dense matmul wins
+AUTO_MAX_FILL = 0.25  # stored-tile fill above this: effectively dense
+AUTO_MIN_WIDTH = 8    # B frontier narrower than this: XLA (auto handles only)
+
+
+def _kernel_pays_off(store: BSR) -> bool:
+    """Fill-ratio/grid-size side of the measured crossover (width is only
+    known per call and is checked in _dispatch_mxm)."""
+    return (min(store.nbrows, store.nbcols) >= AUTO_MIN_GRID
+            and store.fill_ratio <= AUTO_MAX_FILL)
+
+
+def _resolve_impl(requested: str, fmt: str, store: Optional[BSR] = None) -> str:
     """Execution policy, resolved once at handle construction.
 
     Only the BSR format has two paths (Pallas kernel vs the XLA-native
-    batched-matmul); "auto" picks the kernel exactly when a real TPU backend
-    is present. ELL and dense always lower through XLA.
+    batched-matmul); explicit "pallas"/"xla" force one. "auto" picks the
+    kernel when a real TPU backend is present AND the measured
+    dense-vs-sparse crossover says the per-tile schedule beats one batched
+    matmul for this operand (see _kernel_pays_off). ELL and dense always
+    lower through XLA.
     """
     if fmt != "bsr":
         return "xla"
     if requested == "pallas":
         return "pallas"
     if requested == "auto" and jax.default_backend() == "tpu":
-        return "pallas"
+        if store is None or _kernel_pays_off(store):
+            return "pallas"
     return "xla"
 
 
@@ -146,7 +179,7 @@ class GBMatrix:
     pytrees / jnp arrays) is what flows through jit. Inside traced code,
     close over the handle — do not pass it as a traced argument.
     """
-    __slots__ = ("store", "fmt", "impl", "name", "_T")
+    __slots__ = ("store", "fmt", "impl", "auto", "name", "_T")
 
     def __init__(self, store: Storage, impl: str = "auto", name: str = ""):
         if isinstance(store, GBMatrix):
@@ -155,7 +188,12 @@ class GBMatrix:
             store = jnp.asarray(store)
         self.store = store
         self.fmt = _fmt_of(store)
-        self.impl = _resolve_impl(impl, self.fmt)
+        # auto marks a policy the crossover heuristics may refine per call
+        # (operand width); an explicit "pallas"/"xla" request is never
+        # second-guessed.
+        self.auto = impl == "auto"
+        self.impl = _resolve_impl(impl, self.fmt,
+                                  store if isinstance(store, BSR) else None)
         self.name = name
         self._T: Optional["GBMatrix"] = None
 
@@ -216,7 +254,11 @@ class GBMatrix:
                 t: Storage = self.store.T
             else:
                 t = self.store.transpose()
-            self.link_transpose(GBMatrix(t, impl=self.impl,
+            # an auto policy stays auto: re-resolve against the transposed
+            # store and keep the per-call crossover heuristics active
+            self.link_transpose(GBMatrix(t,
+                                         impl="auto" if self.auto
+                                         else self.impl,
                                          name=self.name + "^T"))
         return self._T
 
@@ -231,7 +273,9 @@ class GBMatrix:
     def with_impl(self, impl: str) -> "GBMatrix":
         """Re-resolve the execution policy, sharing storage and the transpose
         cache. Returns self when the resolved policy is unchanged."""
-        if _resolve_impl(impl, self.fmt) == self.impl:
+        store = self.store if self.fmt == "bsr" else None
+        if (_resolve_impl(impl, self.fmt, store) == self.impl
+                and (impl == "auto") == self.auto):
             return self
         m = GBMatrix(self.store, impl=impl, name=self.name)
         if self._T is not None:
@@ -291,7 +335,10 @@ def _dispatch_mxm(A: GBMatrix, B: Array, sr: S.Semiring,
     """Format + policy dispatch for one semiring matmul. Returns
     (raw_result, mask_already_applied)."""
     if A.fmt == "bsr":
-        if A.impl == "pallas":
+        impl = A.impl
+        if impl == "pallas" and A.auto and B.shape[1] < AUTO_MIN_WIDTH:
+            impl = "xla"   # auto policy: narrow frontier can't fill the MXU
+        if impl == "pallas":
             from repro.kernels import ops as kops   # lazy: kernels import core
             if fuse_mask:
                 # the kernel folds <M>/<!M> into its epilogue on the last
@@ -313,12 +360,14 @@ def _mask_storage(mask) -> Optional[Storage]:
 
 
 def _mask_as_bsr(mask, block: int) -> Optional[BSR]:
-    """Structural BSR view of a descriptor mask for the SpGEMM path."""
+    """Structural BSR view of a descriptor mask for the SpGEMM and sparse
+    element-wise paths. Sparse masks convert sparse-to-sparse (COO);
+    only a mask that is *already dense* is tiled from its array."""
     mask = _mask_storage(mask)
-    if mask is None or isinstance(mask, BSR):
-        return mask
-    if isinstance(mask, ELL):
-        mask = mask.to_dense()
+    if mask is None:
+        return None
+    if isinstance(mask, (BSR, ELL)):
+        return _bsr.as_bsr(mask, block)
     return BSR.from_dense(np.asarray(mask), block=block)
 
 
@@ -335,7 +384,7 @@ def _mxm_spgemm(A: GBMatrix, B: GBMatrix, sr: S.Semiring,
     C = spgemm(A.store, B.store, sr, mask=mask, complement=d.complement,
                impl=A.impl)
     name = f"({A.name}x{B.name})" if (A.name or B.name) else ""
-    return GBMatrix(C, impl=A.impl, name=name)
+    return GBMatrix(C, impl="auto" if A.auto else A.impl, name=name)
 
 
 def mxm(A, B, sr: S.Semiring, d: Descriptor = NULL,
@@ -389,35 +438,445 @@ def vxm(x: Array, A, sr: S.Semiring, d: Descriptor = NULL,
     return mxv(A, x, sr, d.with_(transpose_a=not d.transpose_a), out=out)
 
 
-def ewise_add(a: Array, b: Array, monoid: S.Monoid,
-              d: Descriptor = NULL, out: Optional[Array] = None) -> Array:
-    return finalize(d, monoid.op(a, b), out, monoid.identity)
+# ---------------------------------------------------------------------------
+# element-wise family — GrB_eWiseAdd / eWiseMult / apply / select
+# ---------------------------------------------------------------------------
+# Structural convention (repo-wide): an entry is stored iff nonzero; an
+# absent entry renders as 0 when a sparse result is densified. The whole
+# family therefore uses GraphBLAS *entry* semantics uniformly across dense /
+# BSR / ELL operands:
+#
+#   ewise_add   pattern = union;        op(a, b) where both stored, the
+#               stored value where only one side is (absent never fed to op)
+#   ewise_mult  pattern = intersection; op(a, b) on the intersection
+#   apply       pattern = stored(x);    f applied to stored entries only
+#   select      stored entries passing pred, zero-blocks pruned
+#
+# and the descriptor blend writes *empty* (renders 0) outside the mask —
+# not the monoid identity — with accum merging by union. Sparse operands
+# stay sparse end-to-end (block-aligned ops in core.bsr, COO set algebra in
+# core.coo for ELL); mixing a sparse operand with a dense array raises a
+# TypeError naming the expected kinds rather than densifying silently.
+
+def _operand_kind(x):
+    """('bsr'|'ell'|'dense', storage) of a GBMatrix / raw store / array."""
+    if isinstance(x, GBMatrix):
+        x = x.store
+    if isinstance(x, BSR):
+        return "bsr", x
+    if isinstance(x, ELL):
+        return "ell", x
+    return "dense", jnp.asarray(x)
 
 
-def ewise_mult(a: Array, b: Array, op: Callable[[Array, Array], Array],
-               d: Descriptor = NULL, out: Optional[Array] = None,
-               identity: float = 0.0) -> Array:
-    return finalize(d, op(a, b), out, identity)
+def _ewise_pair(a, b, fn: str):
+    """Classify an operand pair into one execution path, coercing only in
+    sparse-to-sparse directions (ELL joins a BSR partner via COO, never
+    through a dense intermediate)."""
+    ka, sa = _operand_kind(a)
+    kb, sb = _operand_kind(b)
+    if (ka == "dense") != (kb == "dense"):
+        raise TypeError(
+            f"grb.{fn}: operand kinds must match — both dense arrays or both "
+            f"sparse matrices (GBMatrix/BSR/ELL); got {ka} and {kb}. Convert "
+            f"explicitly: GBMatrix.from_dense(x, fmt=...) for the dense side "
+            f"or x.to_dense() for the sparse side.")
+    if sa.shape != sb.shape:
+        raise ValueError(f"grb.{fn} shapes: {sa.shape} vs {sb.shape}")
+    if ka == "dense":
+        return "dense", sa, sb
+    if "bsr" in (ka, kb):
+        if isinstance(sa, ELL):
+            sa = _bsr.as_bsr(sa, sb.block)
+        if isinstance(sb, ELL):
+            sb = _bsr.as_bsr(sb, sa.block)
+        return "bsr", sa, sb
+    return "ell", sa, sb
+
+
+def _dense_out(out, fn: str) -> Optional[Array]:
+    if out is None:
+        return None
+    kind, store = _operand_kind(out)
+    if kind != "dense":
+        raise TypeError(f"grb.{fn}: dense operands need a dense out= array "
+                        f"(got a sparse {kind} matrix); densify it "
+                        f"explicitly with out.to_dense() if intended")
+    return store
+
+
+def _sparse_out_bsr(out, fn: str, block: int) -> Optional[BSR]:
+    if out is None:
+        return None
+    kind, store = _operand_kind(out)
+    if kind == "dense":
+        raise TypeError(f"grb.{fn}: sparse operands need a sparse out= "
+                        f"(GBMatrix/BSR/ELL) or None (got a dense array); "
+                        f"wrap it with GBMatrix.from_dense(out, fmt='bsr')")
+    return _bsr.as_bsr(store, block)
+
+
+def _sparse_out_entries(out, fn: str, shape=None):
+    """(keys, vals) of a sparse out= operand for the COO blend."""
+    if out is None:
+        return None, None
+    kind, store = _operand_kind(out)
+    if kind == "dense":
+        raise TypeError(f"grb.{fn}: sparse operands need a sparse out= "
+                        f"(GBMatrix/BSR/ELL) or None (got a dense array); "
+                        f"wrap it with GBMatrix.from_dense(out, fmt='ell')")
+    if shape is not None and store.shape != shape:
+        raise ValueError(f"grb.{fn}: out shape {store.shape} != result "
+                         f"{shape}")
+    r, c, v = store.to_coo()
+    return _coo.keys_of(r, c, max(store.shape[1], 1)), \
+        np.asarray(v, np.float32)
+
+
+def _wrap_sparse(store: Storage, *operands) -> "GBMatrix":
+    """Wrap a sparse result, inheriting the first handle operand's policy.
+    An auto policy stays auto so the crossover heuristics re-resolve against
+    the *result's* store (a select can change the grid/fill drastically)."""
+    for o in operands:
+        if isinstance(o, GBMatrix):
+            return GBMatrix(store, impl="auto" if o.auto else o.impl)
+    return GBMatrix(store)
+
+
+def _mask_entry_keys(mask, shape) -> np.ndarray:
+    """Stored-entry key set of a descriptor mask (dense or sparse), checked
+    against the result shape (a mis-shaped mask must error, not corrupt)."""
+    m = _mask_storage(mask)
+    if tuple(m.shape) != tuple(shape):
+        raise ValueError(f"descriptor mask shape {tuple(m.shape)} != "
+                         f"result {tuple(shape)}")
+    ncols = max(shape[1], 1)
+    if isinstance(m, (BSR, ELL)):
+        r, c, _ = m.to_coo()
+        return _coo.keys_of(r, c, ncols)
+    r, c = np.nonzero(np.asarray(m))
+    return _coo.keys_of(r, c, ncols)
+
+
+def _dense_union(a: Array, b: Array, op) -> Array:
+    both = (a != 0) & (b != 0)
+    # a + b is exactly "the stored value" where only one side stores one
+    return jnp.where(both, op(a, b), a + b)
+
+
+def _structural_finalize_dense(d: Descriptor, result: Array,
+                               out: Optional[Array]) -> Array:
+    """The blend rule with entry semantics on dense storage: union-accum,
+    and *empty* (0) — not a monoid identity — outside the mask."""
+    if d.accum is not None and out is not None:
+        z = _dense_union(out, result, d.accum.op)
+    else:
+        z = result
+    mask = d.mask
+    if mask is None:
+        return z
+    m = _mask_storage(mask)
+    mask = m.to_dense() if isinstance(m, (BSR, ELL)) else jnp.asarray(m)
+    keep = (mask == 0) if d.complement else (mask != 0)
+    outside = jnp.zeros_like(z) if (out is None or d.replace) else out
+    return jnp.where(keep, z, outside)
+
+
+def _structural_finalize_bsr(d: Descriptor, res: BSR,
+                             out: Optional[BSR]) -> BSR:
+    """The same blend rule out of block-aligned sparse primitives — the
+    result pattern never leaves tile-list land."""
+    if d.accum is not None and out is not None:
+        res = _bsr.ewise_add(out, res, d.accum.op)
+    if d.mask is None:
+        return res
+    M = _mask_as_bsr(d.mask, res.block)
+    z_in = _bsr.mask_keep(res, M, complement=d.complement)
+    if out is None or d.replace:
+        return z_in
+    old = _bsr.mask_keep(out, M, complement=not d.complement)
+    return _bsr.ewise_add(z_in, old, lambda x, y: x + y)   # disjoint patterns
+
+
+def _structural_finalize_ell(d: Descriptor, keys, vals, out, fn: str,
+                             shape) -> ELL:
+    """The blend rule on COO entry sets, rebuilt into ELL at the end."""
+    w = max(shape[1], 1)                 # zero-width region: no entries
+    kc, vc = _sparse_out_entries(out, fn, shape)
+    mk = None if d.mask is None else _mask_entry_keys(d.mask, shape)
+    accum_op = None if d.accum is None else d.accum.op
+    k, v = _coo.blend(keys, vals, kc, vc, mk, d.complement, accum_op,
+                      d.replace)
+    return ELL.from_entries(*_coo.nonzero(k, v), shape)
+
+
+def _ell_entries(e) -> tuple:
+    r, c, v = e.to_coo()
+    return _coo.keys_of(r, c, e.shape[1]), np.asarray(v, np.float32)
+
+
+def ewise_add(a, b, monoid: S.Monoid, d: Descriptor = NULL, out=None):
+    """C<M> accum= A (+) B — GrB_eWiseAdd, union semantics (see above).
+
+    Both operands dense arrays -> dense array; both sparse -> a sparse
+    GBMatrix (BSR when either side is BSR, else ELL). Mixed kinds raise
+    TypeError. ``monoid`` may be a Monoid or a raw binary callable.
+    """
+    op = getattr(monoid, "op", monoid)
+    kind, A, B = _ewise_pair(a, b, "ewise_add")
+    if kind == "dense":
+        return _structural_finalize_dense(
+            d, _dense_union(A, B, op), _dense_out(out, "ewise_add"))
+    if kind == "bsr":
+        res = _bsr.ewise_add(A, B, op)
+        C = _sparse_out_bsr(out, "ewise_add", A.block)
+        return _wrap_sparse(_structural_finalize_bsr(d, res, C), a, b, out)
+    k, v = _coo.nonzero(*_coo.union(*_ell_entries(A), *_ell_entries(B), op))
+    return _wrap_sparse(
+        _structural_finalize_ell(d, k, v, out, "ewise_add", A.shape),
+        a, b, out)
+
+
+def ewise_mult(a, b, op: Callable[[Array, Array], Array],
+               d: Descriptor = NULL, out=None):
+    """C<M> accum= A (.*) B — GrB_eWiseMult, intersection semantics.
+
+    Same dispatch contract as :func:`ewise_add`; on BSR operands only tiles
+    valid in both patterns are gathered (structural pruning before any
+    element work). ``op`` may be a Monoid or a raw binary callable.
+    """
+    op = getattr(op, "op", op)
+    kind, A, B = _ewise_pair(a, b, "ewise_mult")
+    if kind == "dense":
+        both = (A != 0) & (B != 0)
+        raw = jnp.where(both, op(A, B), jnp.zeros_like(A))
+        return _structural_finalize_dense(d, raw, _dense_out(out, "ewise_mult"))
+    if kind == "bsr":
+        res = _bsr.ewise_mult(A, B, op)
+        C = _sparse_out_bsr(out, "ewise_mult", A.block)
+        return _wrap_sparse(_structural_finalize_bsr(d, res, C), a, b, out)
+    k, v = _coo.nonzero(*_coo.intersect(*_ell_entries(A), *_ell_entries(B),
+                                        op))
+    return _wrap_sparse(
+        _structural_finalize_ell(d, k, v, out, "ewise_mult", A.shape),
+        a, b, out)
+
+
+def apply(f: Callable[[Array], Array], x, d: Descriptor = NULL, out=None):
+    """C<M> accum= f(A) — GrB_apply over *stored* entries only.
+
+    Zero entries of a dense operand (and zero lanes inside stored BSR
+    tiles) are absent and stay zero regardless of f(0).
+    """
+    kind, X = _operand_kind(x)
+    if kind == "dense":
+        raw = jnp.where(X != 0, f(X), jnp.zeros_like(X))
+        return _structural_finalize_dense(d, raw, _dense_out(out, "apply"))
+    if kind == "bsr":
+        res = _bsr.apply_stored(X, f)
+        C = _sparse_out_bsr(out, "apply", X.block)
+        return _wrap_sparse(_structural_finalize_bsr(d, res, C), x, out)
+    k, v = _ell_entries(X)
+    k, v = _coo.nonzero(k, np.asarray(f(v), dtype=np.float32))
+    return _wrap_sparse(
+        _structural_finalize_ell(d, k, v, out, "apply", X.shape), x, out)
+
+
+def select(pred: Callable[[Array], Array], x, d: Descriptor = NULL,
+           out=None):
+    """C<M> accum= A where pred(A) — GxB_select over stored entries.
+
+    Same signature and descriptor semantics as :func:`apply` (the mask /
+    accum / out path goes through the same finalize); sparse results prune
+    tiles the predicate emptied, so nvals/fill_ratio stay truthful.
+    """
+    kind, X = _operand_kind(x)
+    if kind == "dense":
+        raw = jnp.where((X != 0) & pred(X), X, jnp.zeros_like(X))
+        return _structural_finalize_dense(d, raw, _dense_out(out, "select"))
+    if kind == "bsr":
+        res = _bsr.select_stored(X, pred)
+        C = _sparse_out_bsr(out, "select", X.block)
+        return _wrap_sparse(_structural_finalize_bsr(d, res, C), x, out)
+    k, v = _ell_entries(X)
+    keep = np.asarray(pred(v), dtype=bool)
+    return _wrap_sparse(
+        _structural_finalize_ell(d, k[keep], v[keep], out, "select",
+                                 X.shape), x, out)
+
+
+# ---------------------------------------------------------------------------
+# reduce — GrB_reduce
+# ---------------------------------------------------------------------------
+def _reduce_bsr(s: BSR, monoid: S.Monoid, axis) -> Array:
+    if monoid.name not in ("plus", "or") or axis not in (None, 0, 1):
+        # min/max need the absent entries (dense zeros) to participate
+        return monoid.reduce(s.to_dense(), axis=axis)
+    v = s.blocks.astype(jnp.float32) * s.valid.astype(jnp.float32)[:, None,
+                                                                   None]
+    if monoid.name == "or":
+        # boolean OR == "any stored entry", NOT max (wrong for negatives)
+        v = (v != 0).astype(jnp.float32)
+    if axis is None:
+        tot = jnp.sum(v)
+        return (tot > 0).astype(jnp.float32) if monoid.name == "or" else tot
+    per = jnp.sum(v, axis=2 if axis == 1 else 1)          # (nnzb, block)
+    seg = s.block_rows if axis == 1 else s.block_cols
+    nseg = s.nbrows if axis == 1 else s.nbcols
+    out = jax.ops.segment_sum(per, seg, num_segments=nseg).reshape(-1)
+    out = out[:s.shape[0] if axis == 1 else s.shape[1]]
+    return (out > 0).astype(jnp.float32) if monoid.name == "or" else out
+
+
+def _reduce_ell(e: ELL, monoid: S.Monoid, axis) -> Array:
+    if monoid.name not in ("plus", "or") or axis not in (None, 0, 1):
+        return monoid.reduce(e.to_dense(), axis=axis)
+    w = e.values * e.mask.astype(jnp.float32)
+    if monoid.name == "or":
+        w = (w != 0).astype(jnp.float32)
+    if axis is None:
+        tot = jnp.sum(w)
+        return (tot > 0).astype(jnp.float32) if monoid.name == "or" else tot
+    if axis == 1:
+        out = jnp.sum(w, axis=1)
+    else:
+        m = e.shape[1]
+        ids = jnp.where(e.mask, e.indices, m).reshape(-1)
+        out = jax.ops.segment_sum(w.reshape(-1), ids,
+                                  num_segments=m + 1)[:m]
+    return (out > 0).astype(jnp.float32) if monoid.name == "or" else out
 
 
 def reduce(x, monoid: S.Monoid, axis=None) -> Array:
-    """Monoid reduction; sparse GBMatrix handles reduce over stored blocks
-    without densifying (plus/or over full extent), else via to_dense()."""
-    if isinstance(x, GBMatrix):
-        if x.fmt == "bsr" and axis is None and monoid.name in ("plus", "or"):
-            s = x.store
-            v = s.blocks.astype(jnp.float32) * s.valid.astype(
-                jnp.float32)[:, None, None]
-            return jnp.max(v) if monoid.name == "or" else jnp.sum(v)
-        x = x.to_dense()
-    return monoid.reduce(x, axis=axis)
+    """Monoid reduction (GrB_reduce). Sparse operands (GBMatrix or raw
+    BSR/ELL) reduce over *stored* entries without densifying for the plus
+    and or monoids — full reduction, axis=0 (per column) and axis=1 (per
+    row); "or" means "any stored entry", correct for negative values. Other
+    monoids need the absent entries (dense zeros) and fall back through
+    to_dense()."""
+    kind, X = _operand_kind(x)
+    if kind == "bsr":
+        return _reduce_bsr(X, monoid, axis)
+    if kind == "ell":
+        return _reduce_ell(X, monoid, axis)
+    return monoid.reduce(X, axis=axis)
 
 
-def apply(f: Callable[[Array], Array], x: Array, d: Descriptor = NULL,
-          out: Optional[Array] = None, identity: float = 0.0) -> Array:
-    return finalize(d, f(x), out, identity)
+# ---------------------------------------------------------------------------
+# assign / extract — GrB_assign / GrB_extract analogs
+# ---------------------------------------------------------------------------
+def _norm_index(idx, n: int, fn: str) -> np.ndarray:
+    """Normalize a rows=/cols= argument to a unique int64 index vector."""
+    if idx is None:
+        return np.arange(n, dtype=np.int64)
+    if isinstance(idx, slice):
+        idx = range(*idx.indices(n))
+    idx = np.asarray(idx, dtype=np.int64)
+    if idx.ndim != 1:
+        raise TypeError(f"grb.{fn}: indices must be 1-D (got ndim={idx.ndim})")
+    if len(idx) and (idx.min() < 0 or idx.max() >= n):
+        raise ValueError(f"grb.{fn}: index out of range for extent {n}")
+    if len(np.unique(idx)) != len(idx):
+        raise ValueError(f"grb.{fn}: duplicate indices are not supported")
+    return idx
 
 
-def select(pred: Callable[[Array], Array], x: Array,
-           identity: float = 0.0) -> Array:
-    return jnp.where(pred(x), x, np.float32(identity))
+def _is_aligned_range(idx: np.ndarray, block: int) -> bool:
+    return (len(idx) > 0 and idx[0] % block == 0
+            and bool(np.all(np.diff(idx) == 1)))
+
+
+def extract(A, rows=None, cols=None, d: Descriptor = NULL, out=None):
+    """C<M> accum= A[rows, cols] — the GrB_extract analog.
+
+    rows/cols: None (all), a slice/range, or a unique index vector. Dense
+    operands return dense arrays; sparse operands stay sparse (BSR uses
+    pure tile-list surgery when the ranges are contiguous and block-aligned,
+    COO relabeling otherwise) and return a GBMatrix. The descriptor applies
+    to the extracted (len(rows), len(cols)) result.
+    """
+    kind, SA = _operand_kind(A)
+    n, m = SA.shape
+    I = _norm_index(rows, n, "extract")
+    J = _norm_index(cols, m, "extract")
+    if kind == "dense":
+        raw = SA[jnp.asarray(I)][:, jnp.asarray(J)]
+        return _structural_finalize_dense(d, raw, _dense_out(out, "extract"))
+    if kind == "bsr":
+        if _is_aligned_range(I, SA.block) and _is_aligned_range(J, SA.block):
+            sub = _bsr.extract_ranges(SA, int(I[0]), int(I[-1]) + 1,
+                                      int(J[0]), int(J[-1]) + 1)
+        else:
+            r, c, v = SA.to_coo()
+            rr, cc, vv = _coo.extract_entries(r, c, v, I, J, n, m)
+            sub = BSR.from_coo(rr, cc, vv, (len(I), len(J)), block=SA.block)
+        C = _sparse_out_bsr(out, "extract", sub.block)
+        return _wrap_sparse(_structural_finalize_bsr(d, sub, C), A, out)
+    r, c, v = SA.to_coo()
+    rr, cc, vv = _coo.extract_entries(r, c, v, I, J, n, m)
+    k = _coo.keys_of(rr, cc, max(len(J), 1))
+    return _wrap_sparse(
+        _structural_finalize_ell(d, k, vv, out, "extract",
+                                 (len(I), len(J))), A, out)
+
+
+def assign(C, A, rows=None, cols=None, d: Descriptor = NULL):
+    """C(rows, cols)<M> accum= A — the GrB_assign analog (functional: C is
+    not mutated; a new handle/array of C's kind is returned).
+
+    A must be (len(rows), len(cols)); the descriptor mask has that shape
+    too (the mask-on-submatrix GrB_assign variant). Without accum/mask the
+    region's pattern is *replaced* by A's (entries of C absent in A are
+    deleted). Sparse C stays sparse: entries are re-split by region
+    host-side and the blend runs on COO entry sets — no densification.
+    """
+    kindC, SC = _operand_kind(C)
+    n, m = SC.shape
+    I = _norm_index(rows, n, "assign")
+    J = _norm_index(cols, m, "assign")
+    kindA, SA = _operand_kind(A)
+    if SA.shape != (len(I), len(J)):
+        raise ValueError(f"grb.assign: A shape {SA.shape} != region "
+                         f"{(len(I), len(J))}")
+    if len(I) == 0 or len(J) == 0:
+        return C if isinstance(C, GBMatrix) else SC
+    if kindC == "dense":
+        subA = SA if kindA == "dense" else SA.to_dense()
+        Ij, Jj = jnp.asarray(I), jnp.asarray(J)
+        sub = SC[Ij][:, Jj]
+        blended = _structural_finalize_dense(d, subA, sub)
+        res = SC.at[Ij[:, None], Jj[None, :]].set(blended)
+        return GBMatrix(res) if isinstance(C, GBMatrix) else res
+    # sparse C: split stored entries by region membership, blend the local
+    # entry set, and reassemble — COO set algebra end to end
+    r, c, v = SC.to_coo()
+    lutr = np.full(n, -1, dtype=np.int64)
+    lutr[I] = np.arange(len(I))
+    lutc = np.full(m, -1, dtype=np.int64)
+    lutc[J] = np.arange(len(J))
+    inreg = (lutr[r] >= 0) & (lutc[c] >= 0)
+    w = len(J)
+    kc = _coo.keys_of(lutr[r[inreg]], lutc[c[inreg]], w)
+    vc = np.asarray(v[inreg], np.float32)
+    if kindA == "dense":
+        ar, ac = np.nonzero(np.asarray(SA))
+        ka = _coo.keys_of(ar, ac, w)
+        va = np.asarray(SA)[ar, ac].astype(np.float32)
+    else:
+        ar, ac, av = SA.to_coo()
+        ka = _coo.keys_of(ar, ac, w)
+        va = np.asarray(av, np.float32)
+    mk = None if d.mask is None else _mask_entry_keys(d.mask,
+                                                      (len(I), len(J)))
+    accum_op = None if d.accum is None else d.accum.op
+    k, val = _coo.blend(ka, va, kc, vc, mk, d.complement, accum_op,
+                        d.replace)
+    k, val = _coo.nonzero(k, val)
+    gr = np.concatenate([r[~inreg], I[k // w]])
+    gc = np.concatenate([c[~inreg], J[k % w]])
+    gv = np.concatenate([np.asarray(v[~inreg], np.float32), val])
+    if kindC == "bsr":
+        store: Storage = BSR.from_coo(gr, gc, gv, (n, m), block=SC.block)
+    else:
+        store = ELL.from_coo(gr, gc, gv, (n, m))
+    return _wrap_sparse(store, C)

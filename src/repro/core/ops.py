@@ -1,11 +1,11 @@
 """GraphBLAS operations over BSR / ELL / dense operands.
 
-The op surface mirrors the GraphBLAS C API subset RedisGraph uses:
+The op surface kept here is the legacy kwargs spelling of the semiring
+matmul family over raw storage:
   mxm / mxv / vxm          (semiring matmul, the traversal primitive)
-  ewise_add / ewise_mult   (element-wise monoid/op application)
-  reduce                   (monoid reduction)
-  apply / select           (unary op / predicate filter)
-plus GraphBLAS masks (with complement) and accumulators.
+plus GraphBLAS masks (with complement) and accumulators. The element-wise
+family (ewise_add / ewise_mult / reduce / apply / select / assign /
+extract) lives in `repro.core.grb` — format-aware, sparse-preserving.
 
 Frontiers are dense ``(N, F)`` matrices: F queries traverse at once — the TPU
 analog of RedisGraph's threadpool (one column = one query's frontier).
@@ -194,24 +194,11 @@ def _transpose(A):
     return A.T
 
 
-def ewise_add(a: Array, b: Array, monoid: S.Monoid) -> Array:
-    return monoid.op(a, b)
-
-
-def ewise_mult(a: Array, b: Array, op) -> Array:
-    return op(a, b)
-
-
-def reduce(x: Array, monoid: S.Monoid, axis=None) -> Array:
-    return monoid.reduce(x, axis=axis)
-
-
-def apply(f, x: Array) -> Array:
-    return f(x)
-
-
-def select(pred, x: Array, identity: float = 0.0) -> Array:
-    return jnp.where(pred(x), x, np.float32(identity))
+# The dense-only ewise_add / ewise_mult / reduce / apply / select shims that
+# used to live here are retired: the format-aware element-wise family (sparse
+# BSR/ELL paths, GraphBLAS union/intersection entry semantics, descriptor
+# blend) is `repro.core.grb.ewise_add` / `ewise_mult` / `apply` / `select` /
+# `reduce` / `assign` / `extract` — see docs/API.md §eWise.
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,515 @@
+"""Element-wise family conformance vs a dense NumPy oracle.
+
+The documented entry semantics (stored == nonzero, union for eWiseAdd,
+intersection for eWiseMult, stored-entries-only apply/select, empty — not a
+monoid identity — outside the mask, union-merge accum), checked for all
+three formats across the full descriptor grid, plus:
+
+  * the GrB_assign / GrB_extract analogs (aligned-range fast path and COO
+    relabeling) under the same blend rule,
+  * the satellite regressions: clear TypeError on mixed operand kinds,
+    select honoring its descriptor, BSR "or" reduce with negative values,
+    axis=0/1 sparse reductions, and the impl="auto" crossover policy,
+  * a hypothesis sweep over random COO operands (same oracle), guarded
+    with the importorskip convention from test_spgemm.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import BSR, ELL, grb, semiring as S
+from repro.core import bsr as bsr_mod
+from repro.core.grb import Descriptor
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+pytestmark = pytest.mark.ewise
+
+N, M = 96, 80
+
+
+def _rand_dense(seed, density=0.12, lo=0.5, hi=2.0, shape=(N, M)):
+    rng = np.random.default_rng(seed)
+    D = np.where(rng.uniform(size=shape) < density,
+                 rng.uniform(lo, hi, size=shape), 0.0).astype(np.float32)
+    return D
+
+
+def _handle(fmt, D, block=32):
+    if fmt == "dense":
+        return jnp.asarray(D)
+    r, c = np.nonzero(D)
+    if fmt == "bsr":
+        return grb.GBMatrix(BSR.from_coo(r, c, D[r, c], D.shape, block=block))
+    return grb.GBMatrix(ELL.from_coo(r, c, D[r, c], D.shape))
+
+
+def _materialize(x, shape):
+    if isinstance(x, grb.GBMatrix):
+        return np.asarray(x.to_dense())
+    return np.asarray(x)
+
+
+# -- the documented rules, independently in NumPy ------------------------------
+def o_union(a, b, op):
+    both = (a != 0) & (b != 0)
+    return np.where(both, np.asarray(op(a, b), np.float32), a + b)
+
+
+def o_blend(raw, C, mask, complement, accum_np, replace):
+    z = o_union(C, raw, accum_np) if (accum_np is not None
+                                      and C is not None) else raw
+    if mask is None:
+        return z
+    m = (mask == 0) if complement else (mask != 0)
+    outside = np.zeros_like(z) if (C is None or replace) else C
+    return np.where(m, z, outside)
+
+
+_F = lambda x: x * 2.0 + 1.0         # f(0) != 0: pins stored-only semantics
+_PRED = lambda x: x > 1.0
+
+# op name -> (runner(a, b, d, out), oracle_raw(D1, D2))
+OPS = {
+    "add_plus": (lambda a, b, d, o: grb.ewise_add(a, b, S.PLUS, d, out=o),
+                 lambda D1, D2: o_union(D1, D2, np.add)),
+    "add_min": (lambda a, b, d, o: grb.ewise_add(a, b, S.MIN, d, out=o),
+                lambda D1, D2: o_union(D1, D2, np.minimum)),
+    "mult_times": (lambda a, b, d, o: grb.ewise_mult(a, b,
+                                                     lambda x, y: x * y,
+                                                     d, out=o),
+                   lambda D1, D2: np.where((D1 != 0) & (D2 != 0),
+                                           D1 * D2, 0.0)),
+    "mult_min": (lambda a, b, d, o: grb.ewise_mult(a, b, jnp.minimum, d,
+                                                   out=o),
+                 lambda D1, D2: np.where((D1 != 0) & (D2 != 0),
+                                         np.minimum(D1, D2), 0.0)),
+    "apply": (lambda a, b, d, o: grb.apply(_F, a, d, out=o),
+              lambda D1, D2: np.where(D1 != 0, _F(D1), 0.0)),
+    "select": (lambda a, b, d, o: grb.select(_PRED, a, d, out=o),
+               lambda D1, D2: np.where((D1 != 0) & _PRED(D1), D1, 0.0)),
+}
+
+_ACCUM = {"none": None, "plus": S.PLUS, "min": S.MIN}
+_ACCUM_NP = {"none": None, "plus": np.add, "min": np.minimum}
+
+
+def _out_for(fmt, D, block=32):
+    """An existing-C operand of the right kind for the format's path."""
+    return _handle(fmt if fmt != "dense" else "dense", D, block=block)
+
+
+@pytest.mark.parametrize("fmt", ["dense", "bsr", "ell"])
+@pytest.mark.parametrize("opname", sorted(OPS))
+@pytest.mark.parametrize("mask_mode", ["none", "mask", "comp"])
+@pytest.mark.parametrize("accum", ["none", "plus"])
+@pytest.mark.parametrize("replace", [False, True])
+@pytest.mark.parametrize("with_c", [False, True])
+def test_ewise_blend_grid(fmt, opname, mask_mode, accum, replace, with_c):
+    runner, oracle_raw = OPS[opname]
+    D1 = _rand_dense(seed=3)
+    D2 = _rand_dense(seed=4)
+    DC = _rand_dense(seed=5, density=0.3)
+    mask = (np.random.default_rng(6).uniform(size=(N, M)) < 0.5
+            ).astype(np.int8)
+    a = _handle(fmt, D1)
+    b = _handle(fmt, D2)
+    out = _out_for(fmt, DC) if with_c else None
+    m = None if mask_mode == "none" else mask
+    d = Descriptor(mask=None if m is None else jnp.asarray(m),
+                   complement=mask_mode == "comp",
+                   accum=_ACCUM[accum], replace=replace)
+    got = runner(a, b, d, out)
+    if fmt != "dense":
+        assert isinstance(got, grb.GBMatrix) and got.fmt == fmt
+    want = o_blend(oracle_raw(D1, D2), DC if with_c else None, m,
+                   mask_mode == "comp", _ACCUM_NP[accum], replace)
+    np.testing.assert_allclose(_materialize(got, (N, M)), want,
+                               rtol=1e-5, atol=1e-5,
+                               err_msg=f"{fmt}/{opname}/{mask_mode}/"
+                                       f"accum={accum}/replace={replace}/"
+                                       f"C={with_c}")
+    if fmt != "dense":
+        assert got.nvals == int(np.count_nonzero(want))
+
+
+@pytest.mark.parametrize("fmt", ["bsr", "ell"])
+def test_sparse_mask_may_be_sparse_handle(fmt):
+    """The descriptor mask can itself be a sparse GBMatrix (k-truss passes
+    the adjacency); block-level pruning must match the dense oracle."""
+    D1 = _rand_dense(seed=11)
+    DM = _rand_dense(seed=12, density=0.4)
+    a = _handle(fmt, D1)
+    mh = _handle(fmt, DM)
+    got = grb.apply(_F, a, Descriptor(mask=mh))
+    want = np.where(DM != 0, np.where(D1 != 0, _F(D1), 0.0), 0.0)
+    np.testing.assert_allclose(_materialize(got, (N, M)), want, rtol=1e-5)
+    got_c = grb.apply(_F, a, Descriptor(mask=mh, complement=True))
+    want_c = np.where(DM == 0, np.where(D1 != 0, _F(D1), 0.0), 0.0)
+    np.testing.assert_allclose(_materialize(got_c, (N, M)), want_c,
+                               rtol=1e-5)
+
+
+def test_ell_mask_on_bsr_path_stays_sparse():
+    """An ELL descriptor mask over BSR operands converts sparse-to-sparse
+    (COO), never through a dense intermediate."""
+    D1 = _rand_dense(seed=42)
+    DM = _rand_dense(seed=43, density=0.4)
+    a = _handle("bsr", D1)
+    mh = _handle("ell", DM)
+    before = bsr_mod.densify_calls()
+    got = grb.apply(_F, a, Descriptor(mask=mh))
+    assert bsr_mod.densify_calls() == before
+    want = np.where(DM != 0, np.where(D1 != 0, _F(D1), 0.0), 0.0)
+    np.testing.assert_allclose(np.asarray(got.to_dense()), want, rtol=1e-5)
+
+
+def test_bsr_ell_operands_coerce_sparsely():
+    """A BSR and an ELL operand meet via COO relabeling, never to_dense."""
+    D1 = _rand_dense(seed=13)
+    D2 = _rand_dense(seed=14)
+    a = _handle("bsr", D1)
+    b = _handle("ell", D2)
+    before = bsr_mod.densify_calls()
+    got = grb.ewise_add(a, b, S.PLUS)
+    assert bsr_mod.densify_calls() == before
+    assert got.fmt == "bsr"
+    np.testing.assert_allclose(np.asarray(got.to_dense()),
+                               o_union(D1, D2, np.add), rtol=1e-5)
+
+
+def test_select_emptied_tiles_are_pruned():
+    """A predicate that kills every entry must leave no stored tiles."""
+    D = _rand_dense(seed=15)
+    a = _handle("bsr", D)
+    got = grb.select(lambda x: x > 1e9, a)
+    assert got.nvals == 0
+    assert int(np.asarray(got.store.valid).sum()) == 0
+
+
+# -- satellite: clear TypeError on mixed operand kinds -------------------------
+def test_mixed_operand_kinds_raise_clear_typeerror():
+    D1 = _rand_dense(seed=16)
+    D2 = _rand_dense(seed=17)
+    a = _handle("bsr", D1)
+    for fn, call in [
+        ("ewise_add", lambda: grb.ewise_add(a, jnp.asarray(D2), S.PLUS)),
+        ("ewise_add", lambda: grb.ewise_add(jnp.asarray(D1), a, S.PLUS)),
+        ("ewise_mult", lambda: grb.ewise_mult(a, jnp.asarray(D2),
+                                              jnp.minimum)),
+    ]:
+        with pytest.raises(TypeError) as ei:
+            call()
+        msg = str(ei.value)
+        assert fn in msg and "dense" in msg and "BSR/ELL" in msg
+
+
+def test_sparse_operands_reject_dense_out():
+    D = _rand_dense(seed=18)
+    a = _handle("bsr", D)
+    with pytest.raises(TypeError) as ei:
+        grb.apply(_F, a, Descriptor(accum=S.PLUS), out=jnp.asarray(D))
+    assert "out=" in str(ei.value)
+    with pytest.raises(TypeError):
+        grb.ewise_add(jnp.asarray(D), jnp.asarray(D), S.PLUS,
+                      out=_handle("bsr", D))
+
+
+def test_ewise_shape_mismatch_raises():
+    a = _handle("bsr", _rand_dense(seed=19))
+    b = _handle("bsr", _rand_dense(seed=20, shape=(N, M + 16)))
+    with pytest.raises(ValueError):
+        grb.ewise_add(a, b, S.PLUS)
+
+
+def test_numpy_array_mask_accepted_on_dense_path():
+    """A plain numpy mask must work like a jnp one (mxm accepts both)."""
+    D1 = _rand_dense(seed=37)
+    D2 = _rand_dense(seed=38)
+    mask = (np.random.default_rng(39).uniform(size=(N, M)) < 0.5
+            ).astype(np.int8)
+    got = grb.ewise_add(jnp.asarray(D1), jnp.asarray(D2), S.PLUS,
+                        Descriptor(mask=mask))
+    want = np.where(mask != 0, o_union(D1, D2, np.add), 0.0)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5)
+
+
+def test_ell_mask_shape_mismatch_raises():
+    """The ELL COO path must reject a mis-shaped mask (it would otherwise
+    build a garbage key set), matching the BSR/dense behavior."""
+    a = _handle("ell", _rand_dense(seed=40))
+    with pytest.raises(ValueError):
+        grb.apply(_F, a, Descriptor(mask=jnp.ones((4, 16))))
+
+
+def test_extract_empty_indices():
+    for fmt in ("dense", "bsr", "ell"):
+        A = _handle(fmt, _rand_dense(seed=41))
+        got = grb.extract(A, np.array([], dtype=np.int64), None)
+        assert _materialize(got, (0, M)).shape == (0, M)
+        if fmt != "dense":
+            assert got.nvals == 0
+
+
+# -- satellite: select honors its descriptor (used to drop it) -----------------
+def test_select_descriptor_not_ignored():
+    D = _rand_dense(seed=21)
+    DC = _rand_dense(seed=22, density=0.3)
+    mask = (np.random.default_rng(23).uniform(size=(N, M)) < 0.5
+            ).astype(np.int8)
+    d = Descriptor(mask=jnp.asarray(mask), accum=S.PLUS)
+    for fmt in ("dense", "bsr", "ell"):
+        got = grb.select(_PRED, _handle(fmt, D), d, out=_out_for(fmt, DC))
+        raw = np.where((D != 0) & _PRED(D), D, 0.0)
+        want = o_blend(raw, DC, mask, False, np.add, False)
+        np.testing.assert_allclose(_materialize(got, (N, M)), want,
+                                   rtol=1e-5, err_msg=fmt)
+        # and it must differ from the descriptor-free call (the old bug)
+        bare = _materialize(grb.select(_PRED, _handle(fmt, D)), (N, M))
+        assert not np.allclose(bare, want)
+
+
+# -- satellite: reduce fixes ---------------------------------------------------
+def test_bsr_or_reduce_negative_values():
+    """OR is "any stored entry", not max — wrong before for negatives."""
+    A = grb.GBMatrix(BSR.from_coo([0, 5], [3, 7], [-2.0, -3.5], (64, 64),
+                                  block=32))
+    assert float(grb.reduce(A, S.OR)) == 1.0
+    empty = grb.GBMatrix(BSR.from_coo([], [], [], (64, 64), block=32))
+    assert float(grb.reduce(empty, S.OR)) == 0.0
+
+
+@pytest.mark.parametrize("fmt", ["bsr", "ell"])
+@pytest.mark.parametrize("axis", [None, 0, 1])
+def test_sparse_reduce_axes_match_dense_oracle(fmt, axis):
+    D = _rand_dense(seed=24)
+    D[:, 7] = 0.0                      # a structurally empty column
+    D[33, :] = 0.0                     # and row
+    A = _handle(fmt, D)
+    before = bsr_mod.densify_calls()
+    got_p = np.asarray(grb.reduce(A, S.PLUS, axis=axis))
+    got_o = np.asarray(grb.reduce(A, S.OR, axis=axis))
+    if fmt == "bsr":
+        assert bsr_mod.densify_calls() == before    # no silent densification
+    np.testing.assert_allclose(got_p, D.sum(axis=axis), rtol=1e-5, atol=1e-5)
+    want_o = (D != 0).any(axis=axis).astype(np.float32)
+    np.testing.assert_array_equal(got_o, want_o)
+
+
+def test_sparse_reduce_other_monoids_fall_back():
+    D = _rand_dense(seed=25)
+    A = _handle("bsr", D)
+    np.testing.assert_allclose(float(grb.reduce(A, S.MIN)), D.min())
+    np.testing.assert_allclose(np.asarray(grb.reduce(A, S.MAX, axis=1)),
+                               D.max(axis=1), rtol=1e-6)
+
+
+# -- assign / extract ----------------------------------------------------------
+def _indices(kind, n, block, seed):
+    if kind == "all":
+        return None, np.arange(n)
+    if kind == "aligned":
+        lo = block
+        return np.arange(lo, n), np.arange(lo, n)
+    rng = np.random.default_rng(seed)
+    idx = np.sort(rng.choice(n, size=n // 3, replace=False))
+    return idx, idx
+
+
+@pytest.mark.parametrize("fmt", ["dense", "bsr", "ell"])
+@pytest.mark.parametrize("idx_kind", ["all", "aligned", "random"])
+@pytest.mark.parametrize("mask_mode", ["none", "mask", "comp"])
+def test_extract_grid(fmt, idx_kind, mask_mode):
+    D = _rand_dense(seed=26)
+    A = _handle(fmt, D)
+    rows, I = _indices(idx_kind, N, 32, seed=27)
+    cols, J = _indices(idx_kind, M, 32, seed=28)
+    raw = D[np.ix_(I, J)]
+    DC = _rand_dense(seed=29, density=0.3, shape=raw.shape)
+    mask = (np.random.default_rng(30).uniform(size=raw.shape) < 0.5
+            ).astype(np.int8)
+    m = None if mask_mode == "none" else mask
+    d = Descriptor(mask=None if m is None else jnp.asarray(m),
+                   complement=mask_mode == "comp", accum=S.PLUS)
+    out = (_handle(fmt, DC) if fmt != "dense" else jnp.asarray(DC))
+    got = grb.extract(A, rows, cols, d, out=out)
+    want = o_blend(raw, DC, m, mask_mode == "comp", np.add, False)
+    np.testing.assert_allclose(_materialize(got, raw.shape), want,
+                               rtol=1e-5, atol=1e-5,
+                               err_msg=f"{fmt}/{idx_kind}/{mask_mode}")
+    if fmt != "dense":
+        assert isinstance(got, grb.GBMatrix)
+
+
+def test_extract_aligned_bsr_stays_in_tile_land():
+    """Block-aligned ranges take tile-list surgery — zero densifications."""
+    D = _rand_dense(seed=31)
+    A = _handle("bsr", D)
+    before = bsr_mod.densify_calls()
+    got = grb.extract(A, range(32, 96), range(0, 64))
+    assert bsr_mod.densify_calls() == before
+    np.testing.assert_allclose(np.asarray(got.to_dense()),
+                               D[32:96, 0:64], rtol=1e-6)
+
+
+@pytest.mark.parametrize("fmt", ["dense", "bsr", "ell"])
+@pytest.mark.parametrize("mask_mode", ["none", "mask"])
+@pytest.mark.parametrize("accum", ["none", "plus"])
+@pytest.mark.parametrize("replace", [False, True])
+def test_assign_grid(fmt, mask_mode, accum, replace):
+    D = _rand_dense(seed=32)
+    rng = np.random.default_rng(33)
+    I = np.sort(rng.choice(N, size=30, replace=False))
+    J = np.sort(rng.choice(M, size=25, replace=False))
+    DA = _rand_dense(seed=34, density=0.3, shape=(len(I), len(J)))
+    mask = (rng.uniform(size=(len(I), len(J))) < 0.5).astype(np.int8)
+    m = None if mask_mode == "none" else mask
+    C = _handle(fmt, D)
+    A = _handle(fmt, DA) if fmt != "dense" else jnp.asarray(DA)
+    d = Descriptor(mask=None if m is None else jnp.asarray(m),
+                   accum=_ACCUM[accum], replace=replace)
+    got = grb.assign(C, A, I, J, d)
+    sub = D[np.ix_(I, J)]
+    want = D.copy()
+    want[np.ix_(I, J)] = o_blend(DA, sub, m, False, _ACCUM_NP[accum],
+                                 replace)
+    np.testing.assert_allclose(_materialize(got, (N, M)), want,
+                               rtol=1e-5, atol=1e-5,
+                               err_msg=f"{fmt}/{mask_mode}/{accum}/"
+                                       f"replace={replace}")
+    # functional: the input handle is untouched
+    np.testing.assert_allclose(_materialize(C, (N, M)), D, rtol=1e-6)
+
+
+def test_assign_region_overwrite_deletes_absent():
+    """No accum/mask: the region pattern is *replaced* (GrB_assign)."""
+    D = _rand_dense(seed=35, density=0.5)
+    C = _handle("bsr", D)
+    Z = _handle("bsr", np.zeros((32, 32), np.float32))
+    got = grb.assign(C, Z, range(0, 32), range(0, 32))
+    want = D.copy()
+    want[:32, :32] = 0.0
+    np.testing.assert_allclose(np.asarray(got.to_dense()), want, rtol=1e-6)
+    assert got.nvals == int(np.count_nonzero(want))
+
+
+def test_index_validation():
+    A = _handle("bsr", _rand_dense(seed=36))
+    with pytest.raises(ValueError):
+        grb.extract(A, np.array([1, 1, 2]), None)       # duplicates
+    with pytest.raises(ValueError):
+        grb.extract(A, np.array([0, N]), None)          # out of range
+    with pytest.raises(ValueError):
+        grb.assign(A, _handle("bsr", np.zeros((3, 3), np.float32)),
+                   np.arange(4), np.arange(3))          # region mismatch
+
+
+# -- satellite: impl="auto" crossover policy -----------------------------------
+def _store(n, density, block=128, seed=0):
+    D = _rand_dense(seed=seed, density=density, shape=(n, n))
+    r, c = np.nonzero(D)
+    return BSR.from_coo(r, c, D[r, c], (n, n), block=block)
+
+
+def test_auto_policy_cpu_is_xla():
+    s = _store(1024, 0.01)
+    assert grb._resolve_impl("auto", "bsr", s) == "xla"
+    assert grb._resolve_impl("pallas", "bsr", s) == "pallas"   # forced
+
+
+def test_auto_policy_uses_fill_and_grid(monkeypatch):
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+    big_sparse = _store(1024, 0.01)          # 8 block-rows, sparse tiles
+    small = _store(256, 0.01)                # 2 block-rows: dense matmul wins
+    assert min(big_sparse.nbrows, big_sparse.nbcols) >= grb.AUTO_MIN_GRID
+    assert grb._resolve_impl("auto", "bsr", big_sparse) == "pallas"
+    assert grb._resolve_impl("auto", "bsr", small) == "xla"
+    dense_ish = _store(1024, 0.6)            # stored tiles mostly full
+    assert dense_ish.fill_ratio > grb.AUTO_MAX_FILL
+    assert grb._resolve_impl("auto", "bsr", dense_ish) == "xla"
+    assert grb._resolve_impl("xla", "bsr", big_sparse) == "xla"    # forced
+    h = grb.GBMatrix(big_sparse)             # handle resolution, auto flag
+    assert h.impl == "pallas" and h.auto
+    assert h.with_impl("auto") is h
+
+
+def test_wrap_sparse_preserves_auto_policy(monkeypatch):
+    """Results derived from an auto handle stay auto: the crossover policy
+    re-resolves against the result's own store instead of being pinned to
+    the parent's resolved choice."""
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+    h = grb.GBMatrix(_store(1024, 0.01))
+    assert h.impl == "pallas" and h.auto
+    sel = grb.select(lambda x: x > 0, h)
+    assert sel.auto
+    forced = grb.select(lambda x: x > 0, h.with_impl("xla"))
+    assert not forced.auto and forced.impl == "xla"
+    assert h.T.auto                          # cached transpose stays auto
+    assert not h.with_impl("pallas").T.auto  # explicit request stays pinned
+
+
+def test_auto_policy_narrow_frontier_takes_xla(monkeypatch):
+    """Width side of the crossover: an auto-resolved pallas handle routes a
+    frontier narrower than AUTO_MIN_WIDTH through the XLA path (an explicit
+    impl="pallas" request is never second-guessed)."""
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+    h = grb.GBMatrix(_store(1024, 0.01))
+    assert h.impl == "pallas" and h.auto
+    forced = h.with_impl("pallas")
+    assert forced.impl == "pallas" and not forced.auto
+
+    from repro.kernels import ops as kops
+
+    def _kernel_spy(*a, **k):
+        raise AssertionError("kernel path taken")
+
+    monkeypatch.setattr(kops, "bsr_mxm", _kernel_spy)
+    monkeypatch.setattr(jax, "default_backend", lambda: "cpu")  # run on host
+    X = jnp.ones((1024, grb.AUTO_MIN_WIDTH - 1), jnp.float32)
+    y = grb.mxm(h, X, S.PLUS_TIMES)          # narrow: XLA, kernel untouched
+    assert y.shape == (1024, grb.AUTO_MIN_WIDTH - 1)
+    with pytest.raises(AssertionError):
+        grb.mxm(h, jnp.ones((1024, 128), jnp.float32), S.PLUS_TIMES)
+    with pytest.raises(AssertionError):      # forced pallas: always kernel
+        grb.mxm(forced, X, S.PLUS_TIMES)
+
+
+# -- hypothesis property sweep -------------------------------------------------
+if HAVE_HYPOTHESIS:
+
+    @pytest.mark.hypothesis
+    @settings(max_examples=40, deadline=None)
+    @given(seed=st.integers(0, 10**6), n=st.integers(8, 96),
+           m=st.integers(8, 96), density=st.floats(0.01, 0.3),
+           fmt=st.sampled_from(["dense", "bsr", "ell"]),
+           opname=st.sampled_from(sorted(OPS)),
+           mask_mode=st.sampled_from(["none", "mask", "comp"]),
+           block=st.sampled_from([8, 16, 32]))
+    def test_ewise_random_sweep(seed, n, m, density, fmt, opname, mask_mode,
+                                block):
+        runner, oracle_raw = OPS[opname]
+        rng = np.random.default_rng(seed)
+        D1 = _rand_dense(seed=seed, density=density, shape=(n, m))
+        D2 = _rand_dense(seed=seed + 1, density=density, shape=(n, m))
+        mask = (rng.uniform(size=(n, m)) < 0.5).astype(np.int8)
+        mm = None if mask_mode == "none" else mask
+        d = Descriptor(mask=None if mm is None else jnp.asarray(mm),
+                       complement=mask_mode == "comp")
+        got = runner(_handle(fmt, D1, block=block),
+                     _handle(fmt, D2, block=block), d, None)
+        want = o_blend(oracle_raw(D1, D2), None, mm, mask_mode == "comp",
+                       None, False)
+        np.testing.assert_allclose(_materialize(got, (n, m)), want,
+                                   rtol=1e-5, atol=1e-5)
+
+else:
+
+    @pytest.mark.hypothesis
+    def test_ewise_random_sweep():
+        pytest.importorskip("hypothesis", reason="hypothesis not installed "
+                            "(see requirements-dev.txt)")

@@ -1,0 +1,168 @@
+"""k-truss goldens + the zero-densification contract.
+
+Named graphs with known truss structure (K4, C5, Petersen, K3,3), an RMAT
+sweep against an independent NumPy peeling oracle, agreement between the
+sparse (masked SpGEMM) and dense formulations, and the acceptance pin: the
+BSR hot path performs *zero* ``to_dense()`` calls, asserted through the
+densification counter in repro.core.bsr.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.algorithms import ktruss
+from repro.core import bsr as bsr_mod
+from repro.core import grb
+from repro.core.bsr import BSR
+from repro.core.ell import ELL
+
+pytestmark = pytest.mark.ewise
+
+
+def _sym(edges, n):
+    D = np.zeros((n, n), np.float32)
+    for i, j in edges:
+        D[i, j] = D[j, i] = 1.0
+    return D
+
+
+def _k4():
+    return _sym([(i, j) for i in range(4) for j in range(i + 1, 4)], 4)
+
+
+def _c5():
+    return _sym([(i, (i + 1) % 5) for i in range(5)], 5)
+
+
+def _petersen():
+    outer = [(i, (i + 1) % 5) for i in range(5)]
+    inner = [(5 + i, 5 + (i + 2) % 5) for i in range(5)]
+    spokes = [(i, 5 + i) for i in range(5)]
+    return _sym(outer + inner + spokes, 10)
+
+
+def _k33():
+    return _sym([(i, 3 + j) for i in range(3) for j in range(3)], 6)
+
+
+def _oracle(D, k):
+    """Independent NumPy peeling loop."""
+    A = (np.asarray(D) != 0).astype(np.int64)
+    np.fill_diagonal(A, 0)
+    while True:
+        sup = (A @ A) * A
+        A2 = ((sup >= k - 2) & (A != 0)).astype(np.int64)
+        if (A2 == A).all():
+            return A2
+        A = A2
+
+
+def _bsr_handle(D, block=4):
+    return grb.GBMatrix(BSR.from_dense(D, block=block))
+
+
+GOLDENS = [
+    # (name, builder, k, surviving edge count) — directed count (2x edges)
+    ("K4_3truss", _k4, 3, 12),        # K4 is a 4-truss: everything stays
+    ("K4_4truss", _k4, 4, 12),
+    ("K4_5truss", _k4, 5, 0),         # no edge closes 3 triangles
+    ("C5_3truss", _c5, 3, 0),         # cycle: triangle-free
+    ("Petersen_3truss", _petersen, 3, 0),   # girth 5: triangle-free
+    ("K33_3truss", _k33, 3, 0),       # bipartite: triangle-free
+]
+
+
+@pytest.mark.parametrize("name,builder,k,edges", GOLDENS,
+                         ids=[g[0] for g in GOLDENS])
+def test_ktruss_goldens(name, builder, k, edges):
+    D = builder()
+    T = ktruss(_bsr_handle(D), k)
+    assert T.nvals == edges, name
+    want = _oracle(D, k)
+    np.testing.assert_array_equal(
+        (np.asarray(T.to_dense()) != 0).astype(np.int64), want)
+
+
+@pytest.mark.parametrize("scale", [6, 7, 8])
+@pytest.mark.parametrize("k", [3, 4, 5])
+def test_ktruss_rmat_matches_oracle(scale, k):
+    from repro.graph.datagen import rmat_edges
+    from repro.graph.graph import GraphBuilder
+    src, dst, n = rmat_edges(scale=scale, edge_factor=8, seed=7)
+    keep = src != dst
+    s = np.concatenate([src[keep], dst[keep]])
+    d = np.concatenate([dst[keep], src[keep]])
+    g = GraphBuilder(n).add_edges("R", s, d).build(fmt="bsr", block=64)
+    A = g.relations["R"].A
+    D = np.asarray(A.to_dense())
+    want = _oracle(D, k)
+
+    before = bsr_mod.densify_calls()
+    T = ktruss(A, k)
+    assert bsr_mod.densify_calls() == before, \
+        "k-truss BSR hot path must not densify"
+    got = (np.asarray(T.to_dense()) != 0).astype(np.int64)
+    np.testing.assert_array_equal(got, want)
+    # values are the final supports within the truss
+    sup = (want @ want) * want
+    np.testing.assert_allclose(np.asarray(T.to_dense()),
+                               sup.astype(np.float32), rtol=1e-5)
+
+
+def test_ktruss_dense_and_sparse_formulations_agree():
+    D = _petersen()
+    # add a triangle-rich pocket so k=3 is non-trivial
+    D2 = np.zeros((16, 16), np.float32)
+    D2[:10, :10] = D
+    for i, j in [(10, 11), (11, 12), (10, 12), (12, 13), (11, 13),
+                 (0, 10), (1, 11)]:
+        D2[i, j] = D2[j, i] = 1.0
+    sparse = ktruss(_bsr_handle(D2, block=8), 3)
+    dense = ktruss(grb.GBMatrix(jnp.asarray(D2)), 3)
+    np.testing.assert_array_equal(
+        np.asarray(sparse.to_dense()) != 0,
+        np.asarray(dense.to_dense()) != 0)
+    np.testing.assert_array_equal(
+        (np.asarray(sparse.to_dense()) != 0).astype(np.int64),
+        _oracle(D2, 3))
+
+
+def test_ktruss_ell_input_reblocks_sparsely():
+    D = _k4()
+    E = ELL.from_dense(D)
+    before = bsr_mod.densify_calls()
+    T = ktruss(grb.GBMatrix(E), 4)
+    assert bsr_mod.densify_calls() == before
+    assert T.nvals == 12 and T.fmt == "bsr"
+
+
+def test_ktruss_k2_returns_input():
+    A = _bsr_handle(_c5())
+    assert ktruss(A, 2) is A
+
+
+@pytest.mark.parametrize("fmt", ["bsr", "dense"])
+def test_ktruss_ignores_self_loops(fmt):
+    """Self-loops must not manufacture support: a lone edge with loops at
+    both endpoints closes no triangles (oracle zeroes the diagonal)."""
+    D = np.zeros((4, 4), np.float32)
+    D[0, 1] = D[1, 0] = 1.0
+    D[0, 0] = D[1, 1] = 1.0
+    h = _bsr_handle(D) if fmt == "bsr" else grb.GBMatrix(jnp.asarray(D))
+    T = ktruss(h, 3)
+    assert T.nvals == 0
+    # and on a triangle-rich graph with loops sprinkled in
+    D2 = _k4()
+    np.fill_diagonal(D2, 1.0)
+    h2 = _bsr_handle(D2) if fmt == "bsr" else grb.GBMatrix(jnp.asarray(D2))
+    T2 = ktruss(h2, 4)
+    np.testing.assert_array_equal(
+        (np.asarray(T2.to_dense()) != 0).astype(np.int64), _oracle(D2, 4))
+
+
+def test_ktruss_fixpoint_idempotent():
+    D = _oracle(_k4(), 4).astype(np.float32)
+    T = ktruss(_bsr_handle(D), 4)
+    T2 = ktruss(T, 4)
+    np.testing.assert_array_equal(np.asarray(T.to_dense()) != 0,
+                                  np.asarray(T2.to_dense()) != 0)
