@@ -6,7 +6,7 @@ PY ?= python
 # src for the package, repo root so `benchmarks.*` resolves as a namespace pkg
 export PYTHONPATH := src:.$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast test-ewise bench-smoke
+.PHONY: test test-fast test-ewise test-dist bench-smoke
 
 # tier-1 verification (the command ROADMAP.md pins)
 test:
@@ -21,6 +21,14 @@ test-fast:
 # just the sparse element-wise family + k-truss conformance suite
 test-ewise:
 	$(PY) -m pytest -x -q -m "ewise and not hypothesis"
+
+# sharded GBMatrix / mesh suite on the forced 8-device CPU topology
+# (conftest applies REPRO_FORCE_DEVICES to XLA_FLAGS before jax loads).
+# Includes the distributed hypothesis sweep where hypothesis is installed —
+# this target is its only wired runner (the tier-1 subprocess wrapper
+# excludes `hypothesis` for image parity).
+test-dist:
+	REPRO_FORCE_DEVICES=8 $(PY) -m pytest -x -q -m distributed
 
 # fast end-to-end benchmark pass: validates the masked plus_pair mxm against
 # the trace(A^3)/6 oracle and prints the CSV row (full suite: benchmarks/run.py)

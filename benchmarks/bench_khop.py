@@ -85,3 +85,57 @@ def run(rows):
     tw = twitter_like_graph(n=2048, avg_deg=16, seed=1, fmt="ell")
     bench_graph("twitter2k", tw, "FOLLOWS", rows)
     return rows
+
+
+# -- sharded-vs-single-device crossover (the §Sharded dispatch) ---------------
+def _row_mesh(d):
+    """d-way "data" mesh over the first d local devices (pod/model size 1:
+    the crossover isolates the row-shard collectives, not query scale-out)."""
+    from jax.sharding import Mesh
+    devs = np.array(jax.devices()[:d]).reshape(d, 1, 1)
+    return Mesh(devs, ("data", "pod", "model"))
+
+
+def run_dist(rows, scale=10, k=2, n_seeds=32, reps=3):
+    """k-hop through the unchanged algorithm surface on sharded handles,
+    per device count — where does the mesh overtake one device?
+
+    On a real pod the "data" collectives ride ICI; on this CPU host the
+    fake devices share one memory bus, so the printed crossover is a lower
+    bound (the per-hop all-gather is nearly free, the sharded row gathers
+    still pay shard_map dispatch). Run under REPRO_FORCE_DEVICES=8 (run.py
+    applies it to XLA_FLAGS before jax loads) to sweep 1/2/4/8.
+    """
+    from repro.core import grb
+
+    g = rmat_graph(scale=scale, edge_factor=8, seed=3, fmt="ell")
+    rel = g.relations["KNOWS"]
+    rng = np.random.default_rng(0)
+    seeds = rng.integers(0, g.n, size=n_seeds)
+
+    def timed(handle):
+        fn = jax.jit(lambda s: alg.khop_counts(handle, s, k=k))
+        counts = np.asarray(fn(seeds))                   # compile + run
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            counts = np.asarray(fn(seeds))
+        return counts, (time.perf_counter() - t0) / reps
+
+    base, dt_single = timed(rel.A)
+    rows.append((f"khop_dist_s{scale}_k{k}_single_device",
+                 dt_single / n_seeds * 1e6, f"{n_seeds}seeds"))
+    ndev = jax.device_count()
+    if ndev < 2:
+        rows.append((f"khop_dist_s{scale}_k{k}_sharded", 0.0,
+                     "skipped_single_device_host_set_REPRO_FORCE_DEVICES=8"))
+        return rows
+    for d in (1, 2, 4, 8):
+        if d > ndev:
+            break
+        sh = grb.distribute(rel.A, _row_mesh(d))
+        counts, dt = timed(sh)
+        assert list(counts) == list(base), f"sharded d={d} diverged"
+        rows.append((f"khop_dist_s{scale}_k{k}_sharded_dev{d}",
+                     dt / n_seeds * 1e6,
+                     f"vs_single={dt_single / dt:.2f}x"))
+    return rows

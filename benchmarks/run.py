@@ -1,6 +1,8 @@
 """Benchmark harness: one function per paper table/claim.
 
   khop        — paper Fig. 1 (k-hop response time, RedisGraph protocol)
+  khop-dist   — sharded-vs-single-device k-hop crossover per device count
+                (REPRO_FORCE_DEVICES=8 sweeps 1/2/4/8 fake CPU devices)
   throughput  — paper §II (threadpool/read-scaling claim)
   kernels     — format-selection crossover (BSR/ELL/dense)
   triangles   — GraphChallenge (paper future-work item)
@@ -11,7 +13,18 @@ dry-run artifacts: ``python -m benchmarks.roofline``.
 """
 from __future__ import annotations
 
+import os
 import sys
+
+# Must run before anything imports jax: a fake multi-device CPU topology
+# (the khop-dist sweep) can only be forced through XLA_FLAGS at backend
+# init — same env guard as tests/conftest.py.
+if os.environ.get("REPRO_FORCE_DEVICES"):
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            _flags + " --xla_force_host_platform_device_count="
+            + os.environ["REPRO_FORCE_DEVICES"]).strip()
 
 
 def main() -> None:
@@ -21,6 +34,7 @@ def main() -> None:
     only = sys.argv[1] if len(sys.argv) > 1 else None
     suites = {
         "khop": bench_khop.run,
+        "khop-dist": bench_khop.run_dist,
         "throughput": bench_throughput.run,
         "kernels": bench_kernels.run,
         "triangles": bench_triangles.run,

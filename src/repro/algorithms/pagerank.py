@@ -1,6 +1,9 @@
 """PageRank via plus_times pulls (transpose descriptor) with dangling-mass
 correction. Takes the graph's adjacency (Graph / Relation / GBMatrix / raw);
-the pull direction comes from the handle's cached transpose."""
+the pull direction comes from the handle's cached transpose. On a sharded
+handle (grb.distribute) the identical loop runs on the mesh: the pull mxv
+all-gathers the push vector over "data" when the transpose is linked, or
+psum_scatters row blocks when it is not — this file stays sharding-free."""
 from __future__ import annotations
 
 import jax

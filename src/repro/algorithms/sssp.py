@@ -4,7 +4,9 @@ Tropical-format caveat (documented in DESIGN.md): edge weights of exactly 0.0
 are indistinguishable from "absent" in tile storage; generators use w >= 0.5.
 
 Takes the graph's adjacency (Graph / Relation / GBMatrix / raw); relaxation
-pulls along in-edges through the handle's cached transpose.
+pulls along in-edges through the handle's cached transpose. Sharded handles
+run the same loop on a mesh (min_plus has no scatter-reduce collective, so
+the unlinked-transpose lowering combines row blocks with pmin).
 """
 from __future__ import annotations
 

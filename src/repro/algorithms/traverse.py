@@ -8,7 +8,10 @@ one column == one concurrent query).
 Every entry point takes the graph's adjacency (a Graph, Relation, GBMatrix, or
 raw storage) and pulls along out-edges through the handle's cached transpose
 (`desc.transpose_a`) — callers never hand-pass `A_T`, and the execution policy
-is whatever the handle resolved at construction.
+is whatever the handle resolved at construction. That includes a mesh: hand
+in a sharded handle (`grb.distribute(rel.A, mesh)`) and the same loop runs
+distributed — each hop's mxm lowers to one frontier all-gather plus local
+gather-reduce (distr.graph2d), with zero sharding arguments here.
 """
 from __future__ import annotations
 

@@ -1,10 +1,13 @@
 # The paper's primary contribution: GraphBLAS (sparse semiring linear algebra)
 # as the storage + execution substrate of a graph database, TPU-native.
 # `grb` is the unified operation surface (Descriptor / GBMatrix / mxm-family);
-# `ops` keeps the legacy kwargs spelling over raw storage.
+# `ops` keeps the legacy kwargs spelling over raw storage; `shard` holds the
+# mesh-sharded storage kind behind the same GBMatrix handle.
 from repro.core import grb, ops, semiring
 from repro.core.bsr import BSR
 from repro.core.ell import ELL
 from repro.core.grb import Descriptor, GBMatrix
+from repro.core.shard import ShardedELL
 
-__all__ = ["grb", "ops", "semiring", "BSR", "ELL", "Descriptor", "GBMatrix"]
+__all__ = ["grb", "ops", "semiring", "BSR", "ELL", "ShardedELL",
+           "Descriptor", "GBMatrix"]

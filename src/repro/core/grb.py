@@ -8,9 +8,9 @@ TPU analog of the GraphBLAS C API subset RedisGraph builds on:
                      ``A_T``/``impl`` kwargs that used to be re-threaded
                      through every caller,
   GrB_Matrix      -> :class:`GBMatrix`    (one handle over dense / BSR / ELL
-                     storage: format-agnostic dispatch, lazy cached transpose,
-                     nvals/shape introspection, execution policy resolved once
-                     at construction),
+                     / ShardedELL storage: format-agnostic dispatch, lazy
+                     cached transpose, nvals/shape introspection, execution
+                     policy resolved once at construction),
   GrB_mxm family  -> module-level :func:`mxm` / :func:`mxv` / :func:`vxm` /
                      :func:`ewise_add` / :func:`ewise_mult` / :func:`reduce` /
                      :func:`apply` / :func:`select` / :func:`assign` /
@@ -22,10 +22,21 @@ operands run block-aligned (BSR, core.bsr) or COO set-algebra (ELL,
 core.coo) paths with GraphBLAS union/intersection entry semantics and stay
 sparse end to end — no silent densification (docs/API.md §eWise).
 
+The fourth storage kind is *sharded* (`core.shard.ShardedELL`): the same ELL
+row layout laid out over a mesh ("data" axis rows, pod x model frontier
+columns). :func:`distribute` re-homes an ELL handle onto a mesh; mxm/mxv/
+reduce then lower to the explicit-collective shard_map bodies in
+`repro.distr.graph2d` (all-gather frontier in row form, psum_scatter row
+blocks in transposed form), apply/select run shard-local, and the rest of
+the family falls back to a documented gather-to-host round trip
+(docs/API.md §Sharded). Mixing sharded and unsharded operands raises a
+TypeError naming the expected kinds — mirroring the sparse/dense contract.
+
 Algorithms (`repro.algorithms`), the query executor (`repro.query.executor`),
-the batched server (`repro.engine.server`) and the sharded path
-(`repro.distr.graph2d`) all dispatch through here; new storage formats or
-backends plug in behind this surface without touching callers.
+and the batched server (`repro.engine.server`) all dispatch through here —
+single-device and on a mesh, with zero sharding-specific call-site
+arguments; new storage formats or backends plug in behind this surface
+without touching callers.
 
 Blend (write) semantics, centralized in :func:`finalize`:
 
@@ -47,11 +58,13 @@ from repro.core import bsr as _bsr
 from repro.core import coo as _coo
 from repro.core import ops as _ops
 from repro.core import semiring as S
+from repro.core import shard as _shard
 from repro.core.bsr import BSR, SPGEMM_MODES as _SPGEMM_MODES
 from repro.core.ell import ELL
+from repro.core.shard import ShardedELL
 
 Array = jnp.ndarray
-Storage = Union[BSR, ELL, Array]
+Storage = Union[BSR, ELL, ShardedELL, Array]
 
 
 # ---------------------------------------------------------------------------
@@ -124,6 +137,8 @@ def _fmt_of(store: Storage) -> str:
         return "bsr"
     if isinstance(store, ELL):
         return "ell"
+    if isinstance(store, ShardedELL):
+        return "sharded"
     return "dense"
 
 
@@ -179,12 +194,12 @@ class GBMatrix:
     pytrees / jnp arrays) is what flows through jit. Inside traced code,
     close over the handle — do not pass it as a traced argument.
     """
-    __slots__ = ("store", "fmt", "impl", "auto", "name", "_T")
+    __slots__ = ("store", "fmt", "impl", "auto", "name", "_T", "_sharded")
 
     def __init__(self, store: Storage, impl: str = "auto", name: str = ""):
         if isinstance(store, GBMatrix):
             store = store.store
-        if not isinstance(store, (BSR, ELL)):
+        if not isinstance(store, (BSR, ELL, ShardedELL)):
             store = jnp.asarray(store)
         self.store = store
         self.fmt = _fmt_of(store)
@@ -196,6 +211,10 @@ class GBMatrix:
                                   store if isinstance(store, BSR) else None)
         self.name = name
         self._T: Optional["GBMatrix"] = None
+        # mesh -> distributed twin, filled by grb.distribute (like the _T
+        # cache: serving contexts re-resolve per query and must not re-pad
+        # + re-device_put the whole graph each time)
+        self._sharded: Optional[dict] = None
 
     # -- construction --------------------------------------------------------
     @classmethod
@@ -327,6 +346,50 @@ def matrix(obj, rel: Optional[str] = None,
     return GBMatrix.wrap(obj, impl=impl)
 
 
+def distribute(obj, mesh, rel: Optional[str] = None) -> GBMatrix:
+    """Re-home an ELL handle onto a mesh: the sharded-storage constructor.
+
+    Takes anything :func:`matrix` takes (Graph + rel, Relation, GBMatrix,
+    raw ELL). Returns a GBMatrix whose storage is a row-sharded
+    ``core.shard.ShardedELL``; a linked ELL transpose is sharded and linked
+    too, so ``A.T`` / ``transpose_a`` descriptors keep resolving to stored
+    transposes on the mesh. Every later `grb` call on the handle lowers to
+    the mesh collectives — call sites carry zero sharding arguments.
+
+    Non-ELL storage raises a TypeError naming the expected kinds (the mesh
+    layout row-shards ELL's padded neighbor lists; BSR tiles and dense
+    arrays have no row-block layout here).
+
+    Distributed twins are cached on the source handle per mesh (like the
+    transpose cache), so per-query contexts re-resolving the same relation
+    never re-pad + re-device_put the graph.
+    """
+    h = matrix(obj, rel)
+    if h.fmt == "sharded":
+        if h.store.mesh == mesh:
+            return h
+        hh = GBMatrix(h.store.to_ell(), name=h.name)  # re-home across meshes
+        if h._T is not None and h._T.fmt == "sharded":
+            hh.link_transpose(GBMatrix(h._T.store.to_ell(), name=h._T.name))
+        h = hh
+    if h.fmt != "ell":
+        raise TypeError(
+            f"grb.distribute: sharded dispatch needs ELL row storage, got "
+            f"{h.fmt!r} — rebuild with fmt='ell' (GBMatrix.from_dense(x, "
+            f"fmt='ell') / GraphBuilder.build(fmt='ell')) before "
+            f"distributing onto a mesh")
+    cache = h._sharded if h._sharded is not None else {}
+    m = cache.get(mesh)
+    if m is None:
+        m = GBMatrix(ShardedELL.from_ell(h.store, mesh), name=h.name)
+        if h._T is not None and h._T.fmt == "ell":
+            m.link_transpose(GBMatrix(ShardedELL.from_ell(h._T.store, mesh),
+                                      name=h._T.name))
+        cache[mesh] = m
+        h._sharded = cache
+    return m
+
+
 # ---------------------------------------------------------------------------
 # uniform op surface — GrB_mxm family
 # ---------------------------------------------------------------------------
@@ -353,9 +416,12 @@ def _dispatch_mxm(A: GBMatrix, B: Array, sr: S.Semiring,
 
 
 def _mask_storage(mask) -> Optional[Storage]:
-    """Unwrap a descriptor mask that may be a GBMatrix handle."""
+    """Unwrap a descriptor mask that may be a GBMatrix handle. Sharded masks
+    gather to a host ELL — mask blending happens host/dense-side."""
     if isinstance(mask, GBMatrix):
-        return mask.store
+        mask = mask.store
+    if isinstance(mask, ShardedELL):
+        mask = mask.to_ell()
     return mask
 
 
@@ -387,6 +453,40 @@ def _mxm_spgemm(A: GBMatrix, B: GBMatrix, sr: S.Semiring,
     return GBMatrix(C, impl="auto" if A.auto else A.impl, name=name)
 
 
+def _mxm_sharded(A: GBMatrix, B, sr: S.Semiring, d: Descriptor,
+                 out: Optional[Array]) -> Array:
+    """Mesh dispatch: C<M> accum= A (x) B with A's rows sharded over "data".
+
+    B must be a dense (k, F) frontier (sharded x sparse has no mesh
+    lowering — the TypeError names the expected kinds). transpose_a is
+    served from a linked sharded transpose when one exists; otherwise the
+    transposed (psum_scatter) lowering reads the forward row shards — no
+    materialization either way. The blend (mask/accum/replace) runs on the
+    global result under GSPMD, identical to the dense path.
+    """
+    if isinstance(B, GBMatrix) and B.fmt == "dense":
+        B = B.store                      # dense handle == dense frontier
+    if isinstance(B, (GBMatrix, BSR, ELL, ShardedELL)):
+        kind = _operand_kind(B)[0]
+        raise TypeError(
+            f"grb.mxm: a sharded A multiplies a dense (k, F) frontier "
+            f"array; got a sparse {kind} operand for B. Gather it "
+            f"explicitly (B.to_dense()) or keep both sides unsharded for "
+            f"the SpGEMM path.")
+    transposed = False
+    if d.transpose_a:
+        if A._T is not None:
+            A = A.T
+        else:
+            transposed = True
+        d = d.with_(transpose_a=False)
+    if isinstance(d.mask, (GBMatrix, BSR, ELL, ShardedELL)):
+        m = _mask_storage(d.mask)
+        d = d.with_(mask=m if isinstance(m, jnp.ndarray) else m.to_dense())
+    y = _shard.mxm(A.store, jnp.asarray(B), sr, transposed=transposed)
+    return finalize(d, y, out, sr.identity)
+
+
 def mxm(A, B, sr: S.Semiring, d: Descriptor = NULL,
         out: Optional[Array] = None):
     """C<M> accum= A (x) B over a semiring — the uniform GraphBLAS call.
@@ -398,6 +498,14 @@ def mxm(A, B, sr: S.Semiring, d: Descriptor = NULL,
     the existing C for accum/blend; None means replace-into-empty.
     """
     A = GBMatrix.wrap(A)
+    if A.fmt == "sharded":
+        return _mxm_sharded(A, B, sr, d, out)
+    if isinstance(B, ShardedELL) or (isinstance(B, GBMatrix)
+                                     and B.fmt == "sharded"):
+        raise TypeError(
+            "grb.mxm: B is sharded but A is not — operand kinds must match. "
+            "Distribute A onto the same mesh (grb.distribute(A, mesh)) or "
+            "gather B explicitly (B.to_dense()).")
     if d.transpose_a:
         A = A.T
         d = d.with_(transpose_a=False)
@@ -406,7 +514,7 @@ def mxm(A, B, sr: S.Semiring, d: Descriptor = NULL,
         return _mxm_spgemm(A, B, sr, d)
     if isinstance(B, GBMatrix):
         B = B.to_dense()
-    if isinstance(d.mask, GBMatrix) or isinstance(d.mask, (BSR, ELL)):
+    if isinstance(d.mask, (GBMatrix, BSR, ELL, ShardedELL)):
         m = _mask_storage(d.mask)
         d = d.with_(mask=m if isinstance(m, jnp.ndarray) else m.to_dense())
     fuse = d.mask is not None and out is None and d.mask_only
@@ -459,14 +567,60 @@ def vxm(x: Array, A, sr: S.Semiring, d: Descriptor = NULL,
 # TypeError naming the expected kinds rather than densifying silently.
 
 def _operand_kind(x):
-    """('bsr'|'ell'|'dense', storage) of a GBMatrix / raw store / array."""
+    """('bsr'|'ell'|'sharded'|'dense', storage) of a handle / store / array."""
     if isinstance(x, GBMatrix):
         x = x.store
     if isinstance(x, BSR):
         return "bsr", x
     if isinstance(x, ELL):
         return "ell", x
+    if isinstance(x, ShardedELL):
+        return "sharded", x
     return "dense", jnp.asarray(x)
+
+
+def _unshard(x):
+    """Gather-to-host view of a sharded operand (ELL, handle-ness kept);
+    non-sharded operands pass through."""
+    if x is None:
+        return None
+    kind, s = _operand_kind(x)
+    if kind != "sharded":
+        return x
+    e = s.to_ell()
+    return GBMatrix(e, name=x.name) if isinstance(x, GBMatrix) else e
+
+
+def _sharded_pair_mesh(fn: str, a, b, out=None):
+    """Pairing contract for ops with a gather-to-host mesh path: both main
+    operands sharded on one mesh (out sharded or None) -> that mesh; no
+    sharded operand -> None; anything mixed -> TypeError naming the kinds."""
+    kinds = [_operand_kind(x) for x in (a, b) if x is not None]
+    shd = [s for k, s in kinds if k == "sharded"]
+    ko, so = _operand_kind(out) if out is not None else (None, None)
+    if not shd:
+        if ko == "sharded":
+            raise TypeError(
+                f"grb.{fn}: out= is sharded but the operands are not — "
+                f"operand kinds must match; distribute the operands "
+                f"(grb.distribute) or gather out (out.to_ell())")
+        return None
+    if len(shd) != len(kinds):
+        got = " and ".join(k for k, _ in kinds)
+        raise TypeError(
+            f"grb.{fn}: operand kinds must match — a sharded matrix pairs "
+            f"only with another sharded matrix on the same mesh; got {got}. "
+            f"Distribute the unsharded side (grb.distribute(x, mesh)) or "
+            f"gather the sharded one (x.to_ell() / x.to_dense()).")
+    mesh = shd[0].mesh
+    for s in shd[1:]:
+        if s.mesh != mesh:
+            raise TypeError(f"grb.{fn}: sharded operands live on different "
+                            f"meshes — distribute both onto one mesh")
+    if ko == "sharded" and so.mesh != mesh:
+        raise TypeError(f"grb.{fn}: out= lives on a different mesh than the "
+                        f"operands — distribute all three onto one mesh")
+    return mesh
 
 
 def _ewise_pair(a, b, fn: str):
@@ -622,6 +776,10 @@ def ewise_add(a, b, monoid: S.Monoid, d: Descriptor = NULL, out=None):
     GBMatrix (BSR when either side is BSR, else ELL). Mixed kinds raise
     TypeError. ``monoid`` may be a Monoid or a raw binary callable.
     """
+    mesh = _sharded_pair_mesh("ewise_add", a, b, out)
+    if mesh is not None:                 # gather-to-host (docs/API.md §Sharded)
+        res = ewise_add(_unshard(a), _unshard(b), monoid, d, _unshard(out))
+        return distribute(res, mesh)
     op = getattr(monoid, "op", monoid)
     kind, A, B = _ewise_pair(a, b, "ewise_add")
     if kind == "dense":
@@ -645,6 +803,10 @@ def ewise_mult(a, b, op: Callable[[Array, Array], Array],
     valid in both patterns are gathered (structural pruning before any
     element work). ``op`` may be a Monoid or a raw binary callable.
     """
+    mesh = _sharded_pair_mesh("ewise_mult", a, b, out)
+    if mesh is not None:                 # gather-to-host (docs/API.md §Sharded)
+        res = ewise_mult(_unshard(a), _unshard(b), op, d, _unshard(out))
+        return distribute(res, mesh)
     op = getattr(op, "op", op)
     kind, A, B = _ewise_pair(a, b, "ewise_mult")
     if kind == "dense":
@@ -666,9 +828,17 @@ def apply(f: Callable[[Array], Array], x, d: Descriptor = NULL, out=None):
     """C<M> accum= f(A) — GrB_apply over *stored* entries only.
 
     Zero entries of a dense operand (and zero lanes inside stored BSR
-    tiles) are absent and stay zero regardless of f(0).
+    tiles) are absent and stay zero regardless of f(0). On a sharded
+    operand the plain call (no mask/accum/out) is collective-free — the
+    value map runs on each row shard in place; descriptor blends take the
+    gather-to-host path (docs/API.md §Sharded).
     """
+    _sharded_pair_mesh("apply", x, None, out)       # mixed-out contract
     kind, X = _operand_kind(x)
+    if kind == "sharded":
+        if d.mask is None and d.accum is None and out is None:
+            return _wrap_sparse(X.apply_stored(f), x)
+        return distribute(apply(f, _unshard(x), d, _unshard(out)), X.mesh)
     if kind == "dense":
         raw = jnp.where(X != 0, f(X), jnp.zeros_like(X))
         return _structural_finalize_dense(d, raw, _dense_out(out, "apply"))
@@ -688,9 +858,17 @@ def select(pred: Callable[[Array], Array], x, d: Descriptor = NULL,
 
     Same signature and descriptor semantics as :func:`apply` (the mask /
     accum / out path goes through the same finalize); sparse results prune
-    tiles the predicate emptied, so nvals/fill_ratio stay truthful.
+    tiles the predicate emptied, so nvals/fill_ratio stay truthful. Sharded
+    dispatch mirrors :func:`apply`: shard-local when undecorated, gather-to-
+    host under a descriptor blend.
     """
+    _sharded_pair_mesh("select", x, None, out)      # mixed-out contract
     kind, X = _operand_kind(x)
+    if kind == "sharded":
+        if d.mask is None and d.accum is None and out is None:
+            return _wrap_sparse(X.select_stored(pred), x)
+        return distribute(select(pred, _unshard(x), d, _unshard(out)),
+                          X.mesh)
     if kind == "dense":
         raw = jnp.where((X != 0) & pred(X), X, jnp.zeros_like(X))
         return _structural_finalize_dense(d, raw, _dense_out(out, "select"))
@@ -753,12 +931,18 @@ def reduce(x, monoid: S.Monoid, axis=None) -> Array:
     and or monoids — full reduction, axis=0 (per column) and axis=1 (per
     row); "or" means "any stored entry", correct for negative values. Other
     monoids need the absent entries (dense zeros) and fall back through
-    to_dense()."""
+    to_dense(). Sharded operands reduce on the mesh (per-row sums are
+    shard-local, full/per-column sums psum partials over "data"); the
+    min/max fallback gathers to host like the ELL one densifies."""
     kind, X = _operand_kind(x)
     if kind == "bsr":
         return _reduce_bsr(X, monoid, axis)
     if kind == "ell":
         return _reduce_ell(X, monoid, axis)
+    if kind == "sharded":
+        if monoid.name in ("plus", "or") and axis in (None, 0, 1):
+            return _shard.reduce_stored(X, monoid, axis)
+        return monoid.reduce(X.to_dense(), axis=axis)
     return monoid.reduce(X, axis=axis)
 
 
@@ -793,8 +977,13 @@ def extract(A, rows=None, cols=None, d: Descriptor = NULL, out=None):
     operands return dense arrays; sparse operands stay sparse (BSR uses
     pure tile-list surgery when the ranges are contiguous and block-aligned,
     COO relabeling otherwise) and return a GBMatrix. The descriptor applies
-    to the extracted (len(rows), len(cols)) result.
+    to the extracted (len(rows), len(cols)) result. Sharded operands gather
+    to host and re-shard the extracted result (docs/API.md §Sharded).
     """
+    mesh = _sharded_pair_mesh("extract", A, None, out)
+    if mesh is not None:
+        return distribute(extract(_unshard(A), rows, cols, d, _unshard(out)),
+                          mesh)
     kind, SA = _operand_kind(A)
     n, m = SA.shape
     I = _norm_index(rows, n, "extract")
@@ -829,7 +1018,18 @@ def assign(C, A, rows=None, cols=None, d: Descriptor = NULL):
     region's pattern is *replaced* by A's (entries of C absent in A are
     deleted). Sparse C stays sparse: entries are re-split by region
     host-side and the blend runs on COO entry sets — no densification.
+    Sharded C gathers to host and re-shards the blended result
+    (docs/API.md §Sharded); A may be sharded alongside it.
     """
+    if "sharded" in (_operand_kind(C)[0], _operand_kind(A)[0]):
+        kc, sc = _operand_kind(C)
+        if kc != "sharded":
+            raise TypeError(
+                "grb.assign: A is sharded but C is not — operand kinds must "
+                "match; distribute C (grb.distribute) or gather A "
+                "(A.to_ell())")
+        return distribute(assign(_unshard(C), _unshard(A), rows, cols, d),
+                          sc.mesh)
     kindC, SC = _operand_kind(C)
     n, m = SC.shape
     I = _norm_index(rows, n, "assign")

@@ -1,0 +1,219 @@
+"""ShardedELL: row-sharded ELL storage behind the GBMatrix surface.
+
+The fourth GBMatrix kind (dense / BSR / ELL / *sharded*): the same ELL
+(indices, mask, values) row layout, but laid out over a ``jax.sharding.Mesh``
+instead of one device —
+
+  * adjacency rows           -> the mesh's "data" axis (row blocks),
+  * frontier/query columns F -> the "pod" x "model" axes (query scale-out,
+    the paper's threadpool claim at pod scale),
+  * padded rows (mask-false) square the row count up to a multiple of the
+    "data" axis so every shard_map spec divides evenly.
+
+Storage only lives here; the *operations* stay where they always were:
+``grb.mxm``/``mxv``/``reduce`` dispatch on the format tag and lower to the
+explicit-collective shard_map bodies in ``repro.distr.graph2d`` (one frontier
+all-gather per hop in row form, a psum_scatter of row blocks in transposed
+form), so algorithms and the query executor run unchanged on a mesh.
+``apply``/``select`` are embarrassingly local (stored-entry value maps) and
+run right on the sharded arrays below. Everything else (eWise, assign,
+extract, non-plus/or reductions) falls back to a documented gather-to-host
+round trip — see docs/API.md §Sharded.
+
+Handles over this storage are host-side objects like every GBMatrix; the
+sharded jnp arrays are what flows through jit. The padded row block is an
+internal detail: logical ``shape`` and stored-entry ``nnz`` never include it.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.ell import ELL
+
+ROW_AXIS = "data"                      # adjacency rows shard over this axis
+FRONTIER_AXES = ("pod", "model")       # frontier columns shard over these
+
+
+def frontier_axes(mesh: Mesh) -> tuple:
+    """The mesh axes (in canonical order) that shard the frontier's F dim."""
+    return tuple(a for a in FRONTIER_AXES if a in mesh.axis_names)
+
+
+def frontier_spec(mesh: Mesh):
+    """PartitionSpec entry for the frontier's F dimension on this mesh."""
+    fr = frontier_axes(mesh)
+    if not fr:
+        return None
+    return fr if len(fr) > 1 else fr[0]
+
+
+def _check_mesh(mesh: Mesh) -> Mesh:
+    if not isinstance(mesh, Mesh):
+        raise TypeError(f"ShardedELL needs a jax.sharding.Mesh, got "
+                        f"{type(mesh).__name__}")
+    if ROW_AXIS not in mesh.axis_names:
+        raise ValueError(f"ShardedELL needs a mesh with a {ROW_AXIS!r} axis "
+                         f"(rows shard over it); got axes {mesh.axis_names}")
+    return mesh
+
+
+class ShardedELL:
+    """Row-sharded ELL storage over a mesh (see module doc).
+
+    indices/mask/values are (n_pad, max_deg) device arrays placed with
+    NamedSharding(mesh, P("data", None)); n_pad rounds the logical row count
+    up to a multiple of the "data" axis size, the extra rows all mask-false.
+    """
+    __slots__ = ("shape", "mesh", "indices", "mask", "values", "nnz", "n_pad")
+
+    def __init__(self, shape: Tuple[int, int], mesh: Mesh, indices, mask,
+                 values, nnz: int):
+        self.shape = tuple(shape)
+        self.mesh = _check_mesh(mesh)
+        self.indices = indices
+        self.mask = mask
+        self.values = values
+        self.nnz = int(nnz)
+        self.n_pad = int(indices.shape[0])
+
+    # -- construction --------------------------------------------------------
+    @classmethod
+    def from_ell(cls, e: ELL, mesh: Mesh) -> "ShardedELL":
+        """Pad the row block to the "data" axis and scatter it over the mesh."""
+        _check_mesh(mesh)
+        dsz = mesh.shape[ROW_AXIS]
+        n, m = e.shape
+        n_pad = n + (-n) % dsz
+        idx = np.zeros((n_pad, e.max_deg), np.int32)
+        msk = np.zeros((n_pad, e.max_deg), bool)
+        val = np.zeros((n_pad, e.max_deg), np.float32)
+        idx[:n] = np.asarray(e.indices)
+        msk[:n] = np.asarray(e.mask)
+        val[:n] = np.asarray(e.values)
+        sh = NamedSharding(mesh, P(ROW_AXIS, None))
+        return cls((n, m), mesh,
+                   jax.device_put(jnp.asarray(idx), sh),
+                   jax.device_put(jnp.asarray(msk), sh),
+                   jax.device_put(jnp.asarray(val), sh), nnz=e.nnz)
+
+    @classmethod
+    def from_coo(cls, rows, cols, vals, shape, mesh: Mesh) -> "ShardedELL":
+        return cls.from_ell(ELL.from_coo(rows, cols, vals, shape), mesh)
+
+    @classmethod
+    def from_dense(cls, A, mesh: Mesh) -> "ShardedELL":
+        return cls.from_ell(ELL.from_dense(A), mesh)
+
+    # -- mesh geometry -------------------------------------------------------
+    @property
+    def max_deg(self) -> int:
+        return self.indices.shape[1]
+
+    @property
+    def data_size(self) -> int:
+        return self.mesh.shape[ROW_AXIS]
+
+    @property
+    def frontier_size(self) -> int:
+        """Number of shards the frontier's F dimension splits into."""
+        return int(np.prod([self.mesh.shape[a]
+                            for a in frontier_axes(self.mesh)] or [1]))
+
+    # -- gather-to-host conversions ------------------------------------------
+    def to_ell(self) -> ELL:
+        """Gather the row shards back to one host-side ELL (drops padding)."""
+        n, m = self.shape
+        return ELL(shape=(n, m),
+                   indices=jnp.asarray(np.asarray(self.indices)[:n]),
+                   mask=jnp.asarray(np.asarray(self.mask)[:n]),
+                   values=jnp.asarray(np.asarray(self.values)[:n]),
+                   nnz=self.nnz)
+
+    def to_dense(self) -> jnp.ndarray:
+        return self.to_ell().to_dense()
+
+    def to_coo(self):
+        return self.to_ell().to_coo()
+
+    def transpose(self) -> "ShardedELL":
+        """Host-gathered transpose, re-sharded onto the same mesh. Graph
+        relations link explicitly-built transposes instead (grb.distribute),
+        and un-linked handles never call this on the mxm path — the
+        transposed (psum_scatter) lowering reads the forward rows."""
+        return ShardedELL.from_ell(self.to_ell().transpose(), self.mesh)
+
+    # -- local (collective-free) stored-entry ops ----------------------------
+    def apply_stored(self, f) -> "ShardedELL":
+        """f over stored entries, zero results dropped — runs shard-local on
+        the mesh (values/mask are elementwise over the same row layout)."""
+        vals = jnp.where(self.mask, f(self.values),
+                         jnp.zeros_like(self.values))
+        mask = self.mask & (vals != 0)
+        vals = jnp.where(mask, vals, jnp.zeros_like(vals))
+        return ShardedELL(self.shape, self.mesh, self.indices, mask, vals,
+                          nnz=int(jnp.sum(mask)))
+
+    def select_stored(self, pred) -> "ShardedELL":
+        """Stored entries passing pred, shard-local (mask surgery only)."""
+        mask = self.mask & jnp.asarray(pred(self.values)) & (self.values != 0)
+        vals = jnp.where(mask, self.values, jnp.zeros_like(self.values))
+        return ShardedELL(self.shape, self.mesh, self.indices, mask, vals,
+                          nnz=int(jnp.sum(mask)))
+
+    def __repr__(self) -> str:
+        n, m = self.shape
+        axes = "x".join(f"{a}:{self.mesh.shape[a]}"
+                        for a in self.mesh.axis_names)
+        return (f"ShardedELL {n}x{m} mesh=({axes}) nnz={self.nnz} "
+                f"max_deg={self.max_deg}")
+
+
+# ---------------------------------------------------------------------------
+# op execution: pad, run the graph2d lowering, slice — what grb dispatches to
+# ---------------------------------------------------------------------------
+def _pad_frontier(s: ShardedELL, X: jnp.ndarray, x_rows: int):
+    """Pad an (x_rows, F) frontier to the mesh-divisible (x_rows_pad, F_pad)."""
+    dsz = s.data_size
+    r_pad = (-x_rows) % dsz
+    f_pad = (-X.shape[1]) % s.frontier_size
+    if r_pad or f_pad:
+        X = jnp.pad(X.astype(jnp.float32), ((0, r_pad), (0, f_pad)))
+    return X.astype(jnp.float32)
+
+
+def mxm(s: ShardedELL, X: jnp.ndarray, sr, transposed: bool = False):
+    """Y = A (x) X (or A^T (x) X) on the mesh. X: dense (k, F) global array
+    (k = A's columns in row form, A's rows in transposed form); the result is
+    a global (rows, F) array, row-sharded over "data" under GSPMD."""
+    from repro.distr import graph2d                 # lazy: core never pulls
+    n, m = s.shape                                  # distr at import time
+    dsz = s.data_size
+    if transposed:
+        fn = graph2d.mxm_2d(s.mesh, sr, transposed=True,
+                            out_rows=m + (-m) % dsz)
+        Xp = _pad_frontier(s, X, n)                 # x rides A's row shards
+        out_rows = m
+    else:
+        fn = graph2d.mxm_2d(s.mesh, sr)
+        Xp = _pad_frontier(s, X, m)                 # x rows are A's columns
+        out_rows = n
+    Y = fn(s.indices, s.mask, s.values, Xp)
+    return Y[:out_rows, :X.shape[1]]
+
+
+def reduce_stored(s: ShardedELL, monoid, axis):
+    """plus/or stored-entry reduction via the graph2d psum lowering; other
+    monoids need absent entries and go through the gather-to-host dense
+    fallback in grb.reduce."""
+    from repro.distr import graph2d
+    n, m = s.shape
+    fn = graph2d.reduce_2d(s.mesh, monoid.name, axis, m)
+    out = fn(s.indices, s.mask, s.values)
+    if axis == 1:
+        return out[:n]
+    return out

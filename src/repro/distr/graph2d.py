@@ -1,4 +1,4 @@
-"""Distributed graph traversal: 2D-sharded ELL k-hop over the mesh.
+"""Distributed lowerings for the 2D-sharded ELL layout (explicit collectives).
 
 Layout (DESIGN.md §5):
   * adjacency rows (ELL indices/mask)  -> "data" axis (within a pod, the
@@ -8,6 +8,22 @@ Layout (DESIGN.md §5):
   * between hops, each data-shard owns the new frontier rows it produced;
     an all-gather over "data" rebuilds the full frontier for the next
     gather step (the explicit collective the roofline reads).
+
+Two kinds of exports:
+
+  * **Reusable op lowerings** — :func:`mxm_2d` and :func:`reduce_2d` are the
+    shard_map bodies `grb` dispatches to when a GBMatrix holds ShardedELL
+    storage (core.shard). Row form: one frontier all-gather over "data" +
+    local ELL gather-reduce. Transposed form (`A^T (x) x` with no stored
+    transpose): local scatter-accumulate + a psum_scatter of row blocks
+    (pmin/pmax for the tropical semirings). Engine / query / algorithm
+    layers never call these directly — they go through `grb`.
+  * **Dry-run probes** — :func:`khop_counts_2d` (with the bitmap-packed and
+    sentinel perf variants) and :func:`pagerank_2d` keep whole-algorithm
+    loops fused in one shard_map so `launch.dryrun` can compile a single
+    cell and read its collective bytes off the HLO. They are lowering-
+    analysis tools, not an algorithm surface: the engine runs the same
+    algorithms through `grb` ops on sharded handles.
 
 shard_map keeps the collectives explicit — `lowered.as_text()` shows exactly
 one all-gather per hop plus the final reduce.
@@ -20,6 +36,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import ops as _core_ops
+from repro.core import semiring as S
+from repro.core.ell import ELL
+# single source of truth for the frontier-axis convention (F over pod x
+# model) — shared with the ShardedELL storage this module lowers for
+from repro.core.shard import frontier_axes as _frontier_axes
+from repro.core.shard import frontier_spec as _fr_spec
 
 # shard_map moved from jax.experimental to jax core (and its replication-check
 # kwarg was renamed check_rep -> check_vma); resolve whichever this jax ships.
@@ -58,12 +82,133 @@ def ell_shard_inputs(A, sentinel: bool = False):
     return idx, msk
 
 
+# ---------------------------------------------------------------------------
+# reusable op lowerings — what grb dispatches sharded GBMatrix ops to
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=None)
+def mxm_2d(mesh: Mesh, sr: S.Semiring, transposed: bool = False,
+           out_rows: int = 0):
+    """One semiring matmul over the mesh: (idx, msk, val, x) -> y.
+
+    Row form (transposed=False): y = A (x) x. idx/msk/val are A's row-padded
+    ELL arrays "data"-sharded; x is the (col_pad, F_pad) frontier, rows over
+    "data", F over pod x model. One all-gather of x over "data", then each
+    shard runs the local ELL gather-reduce (core.ops.ell_mxm) on its rows.
+
+    Transposed form (transposed=True): y = A^T (x) x *without a stored
+    transpose* — x rides A's row shards, each shard scatter-accumulates its
+    edges' contributions over all `out_rows` output rows (A's column count,
+    row-padded), and a psum_scatter over "data" hands every shard its own
+    output row block (pmin/pmax + local slice for the tropical add monoids,
+    which have no scatter-reduce collective).
+
+    The jitted callable is lru-cached per (mesh, semiring, direction) —
+    repeated hops recompile only on new operand shapes.
+    """
+    fr = _fr_spec(mesh)
+    dsz = mesh.shape["data"]
+
+    if not transposed:
+        def body(idx_l, msk_l, val_l, x_l):
+            x = jax.lax.all_gather(x_l, "data", axis=0, tiled=True)
+            local = ELL(shape=(idx_l.shape[0], x.shape[0]), indices=idx_l,
+                        mask=msk_l, values=val_l, nnz=0)
+            return _core_ops.ell_mxm(local, x, sr)
+    else:
+        if out_rows <= 0 or out_rows % dsz:
+            raise ValueError(f"transposed mxm_2d needs out_rows padded to "
+                             f"the data axis ({dsz}); got {out_rows}")
+
+        def body(idx_l, msk_l, val_l, x_l):
+            # edge (i -> j) stored at local row i contributes mul(w_ij, x_i)
+            # to output row j; segment-accumulate locally over all out_rows,
+            # then combine across shards.
+            w = val_l[:, :, None]
+            m = msk_l[:, :, None]
+            xg = x_l[:, None, :]                       # (rows_l, 1, F_l)
+            ident = np.float32(sr.identity)
+            if sr.mode == "dot":
+                term = jnp.where(m, w * xg, 0.0)
+            elif sr.mode in ("dot_indicator", "dot_pair"):
+                term = jnp.where(m & (xg != 0), 1.0, 0.0)
+            elif sr.mode == "dot_first":
+                term = jnp.where(m & (xg != 0), w, 0.0)
+            elif sr.mode == "bcast":
+                term = jnp.where(m, sr.mul(w, xg), ident)
+            else:
+                raise NotImplementedError(sr.mode)
+            flat = term.reshape(-1, term.shape[-1])
+            ids = jnp.where(msk_l, idx_l, out_rows).reshape(-1)
+            if sr.mode == "bcast":                     # min/max add monoid
+                seg = (jax.ops.segment_min if sr.add.name == "min"
+                       else jax.ops.segment_max)
+                part = seg(flat, ids, num_segments=out_rows + 1)[:out_rows]
+                full = (jax.lax.pmin if sr.add.name == "min"
+                        else jax.lax.pmax)(part, "data")
+                k = jax.lax.axis_index("data")
+                return jax.lax.dynamic_slice_in_dim(
+                    full, k * (out_rows // dsz), out_rows // dsz)
+            part = jax.ops.segment_sum(flat, ids,
+                                       num_segments=out_rows + 1)[:out_rows]
+            y = jax.lax.psum_scatter(part, "data", scatter_dimension=0,
+                                     tiled=True)
+            if sr.mode == "dot_indicator":
+                y = (y > 0).astype(jnp.float32)
+            return y
+
+    return jax.jit(_smap(
+        body, mesh,
+        in_specs=(P("data", None),) * 3 + (P("data", fr),),
+        out_specs=P("data", fr)))
+
+
+@functools.lru_cache(maxsize=None)
+def reduce_2d(mesh: Mesh, monoid_name: str, axis, ncols: int):
+    """Stored-entry plus/or reduction over the mesh: (idx, msk, val) -> out.
+
+    axis=1 (per row) is collective-free — rows live whole on one shard; the
+    full (axis=None) and per-column (axis=0) reductions psum partials over
+    "data" and return a replicated result. "or" reduces indicator counts and
+    renders any-stored (> 0), matching grb.reduce's sparse contract.
+    """
+    if monoid_name not in ("plus", "or"):
+        raise NotImplementedError(monoid_name)
+
+    def body(idx_l, msk_l, val_l):
+        w = val_l * msk_l.astype(jnp.float32)
+        if monoid_name == "or":
+            w = (w != 0).astype(jnp.float32)
+        if axis == 1:
+            out = jnp.sum(w, axis=1)
+        elif axis is None:
+            out = jax.lax.psum(jnp.sum(w), "data")
+        else:                                          # axis == 0
+            ids = jnp.where(msk_l, idx_l, ncols).reshape(-1)
+            part = jax.ops.segment_sum(w.reshape(-1), ids,
+                                       num_segments=ncols + 1)[:ncols]
+            out = jax.lax.psum(part, "data")
+        if monoid_name == "or":
+            out = (out > 0).astype(jnp.float32)
+        return out
+
+    return jax.jit(_smap(body, mesh, in_specs=(P("data", None),) * 3,
+                         out_specs=P("data") if axis == 1 else P()))
+
+
+# ---------------------------------------------------------------------------
+# dry-run probes — fused whole-algorithm loops for lowering/roofline analysis
+# ---------------------------------------------------------------------------
 def khop_counts_2d(mesh: Mesh, n: int, k: int, packed: bool = False,
                    sentinel: bool = False):
     """Returns a function (indices, mask, frontier0) -> counts (F,).
 
     indices/mask: (N, max_deg) ELL rows (row-sharded over "data");
     frontier0:    (N, F) one-hot seeds (int8; F sharded over pod+model).
+
+    Dry-run probe: `launch.dryrun` compiles this fused k-hop cell to read
+    collective bytes / roofline terms off one HLO module. The engine runs
+    k-hop through `grb.mxm` on a sharded handle instead (same collectives,
+    one shard_map per hop).
 
     packed=True — GraphBLAS *bitmap format* on the query axis: 8 queries per
     byte. The or_and semiring over {0,1} is bitwise, so the per-hop frontier
@@ -73,7 +218,7 @@ def khop_counts_2d(mesh: Mesh, n: int, k: int, packed: bool = False,
     instead of carrying a validity mask: the mask array and its `where` op
     disappear from the hop loop (§Perf GE-2). The mask input is ignored.
     """
-    fr_axes = tuple(a for a in ("pod", "model") if a in mesh.axis_names)
+    fr_axes = _frontier_axes(mesh)
 
     def body(idx_l, msk_l, seed_l):
         # seed_l: (N/data, F_l) this shard's rows of the one-hot frontier
@@ -134,9 +279,14 @@ def khop_counts_2d(mesh: Mesh, n: int, k: int, packed: bool = False,
 
 def pagerank_2d(mesh: Mesh, n: int, iters: int, alpha: float = 0.85,
                 push_dtype=None):
-    """Distributed PageRank on the same row-sharded ELL layout (plus_times
-    semiring): per iteration one frontier all-gather over "data" + local
-    gather-reduce + dangling-mass psum. Returns fn(indices, mask, out_deg).
+    """Dry-run probe: fused distributed PageRank (plus_times) on the
+    row-sharded layout — per iteration one frontier all-gather over "data" +
+    local gather-reduce + dangling-mass psum. Returns fn(indices, mask,
+    out_deg); input geometry comes from :func:`pagerank_specs_2d`.
+
+    The engine runs PageRank through `grb.mxv` on a sharded handle instead;
+    this probe keeps the whole loop in one shard_map so dryrun reads its
+    collective bytes off one HLO module.
 
     indices/mask: (N, max_deg) rows of A^T (in-neighbors), "data"-sharded;
     out_deg: (N,) f32, "data"-sharded. Result: ranks (N,) "data"-sharded.
@@ -173,31 +323,18 @@ def pagerank_2d(mesh: Mesh, n: int, iters: int, alpha: float = 0.85,
                  out_specs=P("data"))
 
 
-def sssp_2d(mesh: Mesh, n: int, iters: int):
-    """Distributed Bellman-Ford over min_plus on the row-sharded ELL layout —
-    the third core semiring on the mesh (or_and: khop; plus_times: pagerank).
-
-    Returns fn(indices, mask, weights, dist0):
-      indices/mask/weights: (N, max_deg) rows of A^T (in-neighbor edges,
-      w(j->i) at row i), "data"-sharded; dist0: (N, F) seed distances
-      (inf except 0 at seeds), F sharded over pod+model.
-    """
-    fr_axes = tuple(a for a in ("pod", "model") if a in mesh.axis_names)
-
-    def body(idx_l, msk_l, w_l, dist_l):
-        for _ in range(iters):
-            dist = jax.lax.all_gather(dist_l, "data", axis=0, tiled=True)
-            cand = dist[idx_l] + w_l[..., None]            # (rows, deg, F_l)
-            cand = jnp.where(msk_l[..., None], cand, jnp.inf)
-            relaxed = cand.min(axis=1)
-            dist_l = jnp.minimum(dist_l, relaxed)
-        return dist_l
-
-    fr = fr_axes if len(fr_axes) > 1 else (fr_axes[0] if fr_axes else None)
-    return _smap(body, mesh,
-                 in_specs=(P("data", None), P("data", None), P("data", None),
-                           P("data", fr)),
-                 out_specs=P("data", fr))
+def pagerank_specs_2d(mesh: Mesh, n: int, max_deg: int):
+    """Transpose-aware input geometry for the pagerank probe: (specs,
+    shardings). The ELL arrays are rows of **A^T** (the pull direction —
+    in-neighbors at each output row), "data"-sharded like every row layout
+    here; out-degree rides the same row shards."""
+    specs = (jax.ShapeDtypeStruct((n, max_deg), jnp.int32),
+             jax.ShapeDtypeStruct((n, max_deg), jnp.bool_),
+             jax.ShapeDtypeStruct((n,), jnp.float32))
+    shards = (NamedSharding(mesh, P("data", None)),
+              NamedSharding(mesh, P("data", None)),
+              NamedSharding(mesh, P("data")))
+    return specs, shards
 
 
 def input_specs_2d(n: int, max_deg: int, f: int):
@@ -208,7 +345,7 @@ def input_specs_2d(n: int, max_deg: int, f: int):
 
 
 def shardings_2d(mesh: Mesh, n: int, max_deg: int, f: int):
-    fr_axes = tuple(a for a in ("pod", "model") if a in mesh.axis_names)
+    fr_axes = _frontier_axes(mesh)
     fr = fr_axes if len(fr_axes) > 1 else (fr_axes[0] if fr_axes else None)
     return (NamedSharding(mesh, P("data", None)),
             NamedSharding(mesh, P("data", None)),

@@ -4,6 +4,11 @@ Mutations (CREATE) stage host-side edits; reads rebuild the frozen matrix set
 lazily (Redis fork-snapshot spirit: readers always see an immutable build).
 Every mutating command is appended to the AOF before acking — replay after a
 crash restores the graph (persistence.py).
+
+Sharded mode: `query(..., mesh=m)` / `context(..., mesh=m)` serve the same
+reads over a device mesh — the frozen build is ELL, the context distributes
+the relation handles (`grb.distribute`), and execution goes through the
+identical `grb` calls as single-device (no distributed code path here).
 """
 from __future__ import annotations
 
@@ -24,7 +29,7 @@ class MutableGraph:
         self.labels: Dict[str, list] = {}
         self.props: Dict[str, dict] = {}
         self.edges: list = []           # (rel, src, dst)
-        self._built: Optional[Graph] = None
+        self._builds: Dict[str, Graph] = {}     # fmt -> frozen build
         self.fmt = "auto"
         self.block = 64
 
@@ -37,31 +42,43 @@ class MutableGraph:
         for k, v in props.items():
             if k != "id":
                 self.props.setdefault(k, {})[nid] = float(v)
-        self._built = None
+        self._builds.clear()
         return nid
 
     def create_edge(self, src: int, rel: str, dst: int) -> None:
         self.next_id = max(self.next_id, src + 1, dst + 1)
         self.edges.append((rel, int(src), int(dst)))
-        self._built = None
+        self._builds.clear()
 
     # -- reads -------------------------------------------------------------------
-    def freeze(self) -> Graph:
-        if self._built is None:
-            n = max(self.next_id, 1)
-            b = GraphBuilder(n)
-            for label, ids in self.labels.items():
-                b.add_label(label, ids)
-            for prop, kv in self.props.items():
-                b.set_prop(prop, list(kv.keys()), list(kv.values()))
-            by_rel: Dict[str, list] = {}
-            for rel, s, d in self.edges:
-                by_rel.setdefault(rel, []).append((s, d))
-            for rel, pairs in by_rel.items():
-                arr = np.asarray(pairs, dtype=np.int64)
-                b.add_edges(rel, arr[:, 0], arr[:, 1])
-            self._built = b.build(fmt=self.fmt, block=self.block)
-        return self._built
+    def freeze(self, fmt: Optional[str] = None) -> Graph:
+        """Frozen matrix build. fmt=None keeps this graph's default; an
+        explicit fmt (the sharded mode freezes ELL) gets its own build.
+        Builds are cached per format so a workload that interleaves mesh
+        and local reads never thrashes rebuilds; any mutation clears all of
+        them. Bulk-loaded graphs (load_graph) have no edge log to rebuild
+        from and are served as-is for every format."""
+        want = fmt or self.fmt
+        if "external" in self._builds:
+            return self._builds["external"]
+        g = self._builds.get(want)
+        if g is not None:
+            return g
+        n = max(self.next_id, 1)
+        b = GraphBuilder(n)
+        for label, ids in self.labels.items():
+            b.add_label(label, ids)
+        for prop, kv in self.props.items():
+            b.set_prop(prop, list(kv.keys()), list(kv.values()))
+        by_rel: Dict[str, list] = {}
+        for rel, s, d in self.edges:
+            by_rel.setdefault(rel, []).append((s, d))
+        for rel, pairs in by_rel.items():
+            arr = np.asarray(pairs, dtype=np.int64)
+            b.add_edges(rel, arr[:, 0], arr[:, 1])
+        g = b.build(fmt=want, block=self.block)
+        self._builds[want] = g
+        return g
 
 
 class Database:
@@ -76,16 +93,25 @@ class Database:
         return self.graphs.setdefault(name, MutableGraph())
 
     # -- commands ------------------------------------------------------------
-    def query(self, name: str, text: str, impl: str = "auto") -> Result:
+    def query(self, name: str, text: str, impl: str = "auto",
+              mesh=None) -> Result:
         q = parse(text)
         if isinstance(q, A.CreateQuery):
             self._append_aof(name, text)
             return self._apply_create(name, q)
-        return self.context(name, impl=impl).run(q)
+        return self.context(name, impl=impl, mesh=mesh).run(q)
 
-    def context(self, name: str, impl: str = "auto") -> ExecutionContext:
-        """Public execution surface over the named graph's frozen build."""
-        return ExecutionContext(self._graph(name).freeze(), impl=impl)
+    def context(self, name: str, impl: str = "auto",
+                mesh=None) -> ExecutionContext:
+        """Public execution surface over the named graph's frozen build.
+
+        Sharded mode is the same surface: pass a mesh and the context's
+        relation handles are distributed onto it — reads freeze the graph
+        as ELL (the mesh row layout) and every query lowers through the
+        same `grb` calls as single-device; nothing else changes.
+        """
+        g = self._graph(name).freeze(fmt="ell" if mesh is not None else None)
+        return ExecutionContext(g, impl=impl, mesh=mesh)
 
     def explain(self, name: str, text: str) -> str:
         return explain(self._graph(name).freeze(), text)
@@ -94,7 +120,7 @@ class Database:
         """Bulk load a pre-built Graph (datagen path)."""
         mg = self._graph(name)
         g = graph_or_builder
-        mg._built = g
+        mg._builds = {"external": g}
         mg.next_id = g.n
 
     def _apply_create(self, name: str, q: A.CreateQuery) -> Result:

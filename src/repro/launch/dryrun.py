@@ -280,12 +280,7 @@ def run_pagerank_cell(name: str, multi_pod: bool, outdir: str,
     mesh = make_production_mesh(multi_pod=multi_pod)
     try:
         fn = graph2d.pagerank_2d(mesh, n, iters=iters)
-        specs = (jax.ShapeDtypeStruct((n, max_deg), jnp.int32),
-                 jax.ShapeDtypeStruct((n, max_deg), jnp.bool_),
-                 jax.ShapeDtypeStruct((n,), jnp.float32))
-        shards = (NamedSharding(mesh, P("data", None)),
-                  NamedSharding(mesh, P("data", None)),
-                  NamedSharding(mesh, P("data")))
+        specs, shards = graph2d.pagerank_specs_2d(mesh, n, max_deg)
         compiled = jax.jit(fn, in_shardings=shards).lower(*specs).compile()
         nchips = int(np.prod(list(mesh.shape.values())))
         cost = cost_stats(compiled)

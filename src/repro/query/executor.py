@@ -92,7 +92,13 @@ class ExecutionContext:
     run        parse/plan/execute a full read query
 
     The adjacency handles come from the graph's relations; `impl` re-resolves
-    their execution policy once per context (not per call).
+    their execution policy once per context (not per call). With `mesh` set,
+    every relation handle is distributed onto it (`grb.distribute`) and the
+    same expand/run calls lower to mesh collectives — the context carries
+    the mesh exactly like it carries `impl`; no primitive takes a sharding
+    argument. Needs ELL-stored relations (grb raises a TypeError naming the
+    expected kinds otherwise; `engine.Database` freezes sharded-mode graphs
+    as ELL for this reason).
     """
 
     # multi-hop SpGEMM fast path is only planned for adjacencies up to this
@@ -100,10 +106,11 @@ class ExecutionContext:
     SPGEMM_EXPAND_MAX_N = 16384
 
     def __init__(self, graph: Graph, impl: str = "auto",
-                 spgemm_expand: bool = True):
+                 spgemm_expand: bool = True, mesh=None):
         self.graph = graph
         self.impl = impl
         self.spgemm_expand = spgemm_expand
+        self.mesh = mesh
         self._mats: Dict[str, grb.GBMatrix] = {}
         self._hops: Dict[tuple, grb.GBMatrix] = {}
 
@@ -119,7 +126,10 @@ class ExecutionContext:
                              f"(have: {sorted(self.graph.relations)})")
         m = self._mats.get(r.name)
         if m is None:
-            m = self._mats[r.name] = r.A.with_impl(self.impl)
+            m = r.A.with_impl(self.impl)
+            if self.mesh is not None:
+                m = grb.distribute(m, self.mesh)
+            self._mats[r.name] = m
         return m
 
     def node_mask(self, label, preds=None) -> np.ndarray:
@@ -294,8 +304,8 @@ def _sr_add(sr: S.Semiring, a, b):
 
 
 # -- top level ----------------------------------------------------------------
-def execute(graph: Graph, query, impl: str = "auto") -> Result:
-    return ExecutionContext(graph, impl=impl).run(query)
+def execute(graph: Graph, query, impl: str = "auto", mesh=None) -> Result:
+    return ExecutionContext(graph, impl=impl, mesh=mesh).run(query)
 
 
 def _colname(r: A.ReturnItem) -> str:

@@ -1,18 +1,73 @@
-"""Shared test plumbing: the `tpu_only` marker.
+"""Shared test plumbing: the `tpu_only`/`distributed` markers + the
+multi-device harness.
+
+The early-import hook below MUST run before jax initializes anywhere in the
+session: a fake multi-device CPU topology can only be forced through
+XLA_FLAGS at backend init. `make test-dist` (REPRO_FORCE_DEVICES=8) takes
+this path directly; plain tier-1 `pytest -x -q` keeps its single-device jax
+and runs the distributed suite through the env-guarded subprocess wrapper in
+test_distributed.py instead.
 
 Pallas kernels run in interpret mode on CPU (correctness), but tests marked
 `tpu_only` exercise the compiled Mosaic path and would error, not fail, on
-hosts without TPU support — so they are skipped up front.
+hosts without TPU support — so they are skipped up front. Tests marked
+`distributed` need the 8-device topology and are skipped when it is absent.
 """
+import os
+
+if os.environ.get("REPRO_FORCE_DEVICES"):
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            _flags + " --xla_force_host_platform_device_count="
+            + os.environ["REPRO_FORCE_DEVICES"]).strip()
+
 import jax
+import numpy as np
 import pytest
+
+DIST_DEVICES = 8
+
+
+def mesh8(shape, names):
+    """Mesh over the first 8 local devices — robust to a topology forced
+    larger than 8 (jax.make_mesh would demand the axis product equal the
+    full device count)."""
+    return jax.sharding.Mesh(
+        np.array(jax.devices()[:DIST_DEVICES]).reshape(shape), names)
 
 
 def pytest_collection_modifyitems(config, items):
-    if jax.default_backend() == "tpu":
-        return
-    skip = pytest.mark.skip(
-        reason="tpu_only: requires a TPU backend (compiled Pallas path)")
-    for item in items:
-        if "tpu_only" in item.keywords:
-            item.add_marker(skip)
+    if jax.default_backend() != "tpu":
+        skip_tpu = pytest.mark.skip(
+            reason="tpu_only: requires a TPU backend (compiled Pallas path)")
+        for item in items:
+            if "tpu_only" in item.keywords:
+                item.add_marker(skip_tpu)
+    if jax.device_count() < DIST_DEVICES:
+        skip_dist = pytest.mark.skip(
+            reason=f"distributed: needs {DIST_DEVICES} devices — run "
+                   f"`make test-dist` (REPRO_FORCE_DEVICES=8); tier-1 covers "
+                   f"this suite via the subprocess wrapper in "
+                   f"test_distributed.py")
+        for item in items:
+            if "distributed" in item.keywords:
+                item.add_marker(skip_dist)
+
+
+# -- the meshes the sharded suite runs on -------------------------------------
+# Both use all 8 forced devices: 2x2x2 exercises a frontier sharded over
+# pod x model with 2-way row blocks; 4x2x1 puts 4-way row blocks under a
+# 2-way frontier (the degenerate "model" axis checks size-1 axes too).
+@pytest.fixture(scope="session")
+def mesh222():
+    if jax.device_count() < DIST_DEVICES:
+        pytest.skip("needs the forced 8-device topology")
+    return mesh8((2, 2, 2), ("pod", "data", "model"))
+
+
+@pytest.fixture(scope="session")
+def mesh421():
+    if jax.device_count() < DIST_DEVICES:
+        pytest.skip("needs the forced 8-device topology")
+    return mesh8((4, 2, 1), ("data", "pod", "model"))

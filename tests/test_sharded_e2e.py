@@ -1,0 +1,135 @@
+"""End-to-end sharded-vs-local goldens through the *public* route.
+
+The acceptance bar of the sharded-storage refactor: `k_hop`, `pagerank`,
+and `sssp` — and the query executor / database shell above them — produce
+the single-device answers on a forced 8-device mesh, called through the
+unchanged `grb`/algorithm surface with zero sharding-specific arguments at
+the call site (the only sharding-aware line anywhere is the one
+`grb.distribute` / `mesh=` handoff). k-hop and SSSP are bit-identical
+(integer counts / exact-min relaxation); PageRank sums float partials in a
+different order across shards and gets atol=1e-5.
+
+Folds the old orphan `tests/distributed_check.py` script into pytest proper
+(its khop/pagerank/sssp checks now go through grb instead of the deleted
+`*_2d` algorithm entry points; its train-lowering checks live in
+test_distributed.py).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import algorithms as alg
+from repro.core import grb
+from repro.engine.database import Database
+from repro.graph.datagen import rmat_graph
+from repro.graph.graph import GraphBuilder
+from repro.query.executor import ExecutionContext
+
+pytestmark = pytest.mark.distributed
+
+
+@pytest.fixture(scope="module")
+def rmat_ell():
+    return rmat_graph(scale=7, edge_factor=8, seed=0, fmt="ell")
+
+
+@pytest.fixture(scope="module")
+def weighted_ell():
+    """RMAT pattern with deterministic value weights >= 0.5 (the tropical
+    storage convention), built through GraphBuilder so the relation carries
+    a linked ELL transpose like any engine graph."""
+    g0 = rmat_graph(scale=7, edge_factor=8, seed=3, fmt="ell")
+    r, c, _ = g0.relations["KNOWS"].A.to_coo()
+    w = (0.5 + (r * 48271 + c * 16807) % 97 / 38.8).astype(np.float32)
+    return GraphBuilder(g0.n).add_edges("ROAD", r, c, w).build(fmt="ell")
+
+
+def test_khop_bit_identical(rmat_ell, mesh222):
+    rel = rmat_ell.relations["KNOWS"]
+    sh = grb.distribute(rel.A, mesh222)       # the only sharding-aware line
+    seeds = np.random.default_rng(0).integers(0, rmat_ell.n, size=8)
+    for k in (1, 2, 3):
+        want = np.asarray(alg.khop_counts(rel.A, seeds, k=k))
+        got = np.asarray(alg.khop_counts(sh, seeds, k=k))
+        np.testing.assert_array_equal(got, want, err_msg=f"k={k}")
+
+
+def test_khop_4way_mesh(rmat_ell, mesh421):
+    rel = rmat_ell.relations["KNOWS"]
+    sh = grb.distribute(rel.A, mesh421)
+    seeds = np.arange(6) * 11
+    np.testing.assert_array_equal(
+        np.asarray(alg.khop_counts(sh, seeds, k=3)),
+        np.asarray(alg.khop_counts(rel.A, seeds, k=3)))
+
+
+def test_bfs_levels_bit_identical(rmat_ell, mesh222):
+    rel = rmat_ell.relations["KNOWS"]
+    sh = grb.distribute(rel.A, mesh222)
+    seeds = np.asarray([0, 17, 63])
+    np.testing.assert_array_equal(
+        np.asarray(alg.bfs_levels(sh, seeds, max_iter=4)),
+        np.asarray(alg.bfs_levels(rel.A, seeds, max_iter=4)))
+
+
+def test_pagerank_close(rmat_ell, mesh222):
+    rel = rmat_ell.relations["KNOWS"]
+    sh = grb.distribute(rel.A, mesh222)
+    want = np.asarray(alg.pagerank(rel.A, iters=30))
+    got = np.asarray(alg.pagerank(sh, iters=30))
+    np.testing.assert_allclose(got, want, atol=1e-5)
+    np.testing.assert_allclose(got.sum(), 1.0, atol=1e-4)
+
+
+def test_sssp_bit_identical(weighted_ell, mesh222):
+    rel = weighted_ell.relations["ROAD"]
+    sh = grb.distribute(rel.A, mesh222)
+    seeds = np.arange(8) * 3
+    want = np.asarray(alg.sssp(rel.A, seeds, max_iter=weighted_ell.n // 8))
+    got = np.asarray(alg.sssp(sh, seeds, max_iter=weighted_ell.n // 8))
+    np.testing.assert_array_equal(got, want)
+    assert np.isfinite(got).sum() > len(seeds)    # actually reached things
+
+
+# -- engine / query route -----------------------------------------------------
+def test_execution_context_mesh(rmat_ell, mesh222):
+    q = ("MATCH (a)-[:KNOWS*1..2]->(b) WHERE id(a) IN [0, 9, 33] "
+         "RETURN a, count(DISTINCT b)")
+    local = ExecutionContext(rmat_ell).run(q)
+    sharded = ExecutionContext(rmat_ell, mesh=mesh222).run(q)
+    assert sharded.columns == local.columns
+    assert sharded.rows == local.rows
+
+
+def test_database_sharded_mode(mesh222):
+    db = Database()
+    db.query("g", "CREATE (:Person {id: 0}), (:Person {id: 1}), "
+                  "(:Person {id: 2}), (:Person {id: 3}), (:Person {id: 4})")
+    db.query("g", "CREATE (0)-[:KNOWS]->(1), (1)-[:KNOWS]->(2), "
+                  "(2)-[:KNOWS]->(3), (3)-[:KNOWS]->(4), (4)-[:KNOWS]->(0)")
+    q = ("MATCH (a)-[:KNOWS*1..3]->(b) WHERE id(a) = 0 "
+         "RETURN count(DISTINCT b)")
+    want = db.query("g", q).scalar()
+    got = db.query("g", q, mesh=mesh222).scalar()
+    assert got == want == 3
+    # the sharded context's handles really are mesh-backed
+    ctx = db.context("g", mesh=mesh222)
+    assert ctx.matrix("KNOWS").fmt == "sharded"
+    # alternating mesh/local reads must not thrash rebuilds or re-shards:
+    # builds cache per format, distributed twins cache per mesh
+    g_local = db.context("g").graph
+    g_mesh = db.context("g", mesh=mesh222).graph
+    assert db.context("g").graph is g_local
+    assert db.context("g", mesh=mesh222).graph is g_mesh
+    m1 = db.context("g", mesh=mesh222).matrix("KNOWS")
+    assert db.context("g", mesh=mesh222).matrix("KNOWS") is m1
+
+
+def test_context_mesh_rejects_bsr_graph(mesh222):
+    """A pre-built BSR graph on a mesh surfaces the non-ELL contract as a
+    clear TypeError (the Database freeze path avoids it by freezing ELL)."""
+    g = rmat_graph(scale=6, edge_factor=8, seed=1, fmt="bsr")
+    ctx = ExecutionContext(g, mesh=mesh222)
+    with pytest.raises(TypeError, match="needs ELL row storage"):
+        ctx.matrix("KNOWS")

@@ -1,0 +1,419 @@
+"""Differential conformance: sharded GBMatrix ops vs the single-device oracle.
+
+The sharded kind must be *invisible* through the grb surface: every op on a
+`grb.distribute`d handle (mesh collectives underneath) has to agree with the
+same call on dense/ELL storage — same graphs, same semirings, same
+descriptors, zero sharding arguments at the call site. Graphs cover the
+golden set (K4, C5, Petersen) plus RMAT s6-s8 patterns with deterministic
+value weights (so the value-carrying semirings are actually exercised);
+semirings cover all four dispatch modes (dot / dot_indicator / bcast-min /
+bcast-max). Mixed sharded/unsharded operands and non-ELL stores raise
+TypeErrors naming the expected kinds — the PR 3 contract, extended to the
+mesh. A hypothesis sweep (importorskip fallback, matching test_ewise.py)
+fuzzes shapes/density/semiring/mask on top of the fixed grid.
+
+Needs the forced 8-device CPU topology: `make test-dist` runs it directly;
+tier-1 runs it through the subprocess wrapper in test_distributed.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import grb, semiring as S
+from repro.core.grb import Descriptor
+from repro.core.shard import ShardedELL
+from repro.graph.datagen import rmat_graph
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+pytestmark = pytest.mark.distributed
+
+SEMIRINGS = {s.name: s for s in
+             (S.OR_AND, S.PLUS_TIMES, S.MIN_PLUS, S.MAX_PLUS)}
+
+
+# -- graph zoo ----------------------------------------------------------------
+def _weighted(pattern: np.ndarray) -> np.ndarray:
+    """Deterministic value weights >= 0.5 on a 0/1 pattern (the tropical
+    convention: 0.0 is indistinguishable from absent in tile storage)."""
+    n, m = pattern.shape
+    r, c = np.mgrid[0:n, 0:m]
+    w = 0.5 + ((r * 31 + c * 17) % 13) / 6.0
+    return (pattern * w).astype(np.float32)
+
+
+def _undirected(n, edges):
+    D = np.zeros((n, n), np.float32)
+    for a, b in edges:
+        D[a, b] = D[b, a] = 1.0
+    return D
+
+
+def _graph_dense(name: str) -> np.ndarray:
+    if name == "k4":
+        D = 1.0 - np.eye(4, dtype=np.float32)
+    elif name == "c5":
+        D = _undirected(5, [(i, (i + 1) % 5) for i in range(5)])
+    elif name == "petersen":
+        D = _undirected(10, [(i, (i + 1) % 5) for i in range(5)]
+                        + [(5 + i, 5 + (i + 2) % 5) for i in range(5)]
+                        + [(i, 5 + i) for i in range(5)])
+    else:                                   # rmat_s6 / rmat_s7 / rmat_s8
+        scale = int(name.split("_s")[1])
+        g = rmat_graph(scale=scale, edge_factor=8, seed=scale, fmt="ell")
+        D = np.asarray(g.relations["KNOWS"].A.to_dense())
+        D = (D != 0).astype(np.float32)
+    return _weighted(D)
+
+
+GRAPHS = ("k4", "c5", "petersen", "rmat_s6", "rmat_s7", "rmat_s8")
+_DENSE_CACHE: dict = {}
+
+
+def _dense_of(name):
+    if name not in _DENSE_CACHE:
+        _DENSE_CACHE[name] = _graph_dense(name)
+    return _DENSE_CACHE[name]
+
+
+def _handles(name, mesh):
+    """(dense-oracle handle, sharded handle) for one graph on one mesh."""
+    D = _dense_of(name)
+    dense = grb.GBMatrix(jnp.asarray(D), name=name)
+    sh = grb.distribute(grb.GBMatrix.from_dense(D, fmt="ell", name=name),
+                        mesh)
+    return dense, sh
+
+
+def _frontier(name, f=5, seed=0):
+    n = _dense_of(name).shape[0]
+    rng = np.random.default_rng(seed)
+    return rng.uniform(0.5, 2.0, size=(n, f)).astype(np.float32)
+
+
+# -- mxm / mxv / vxm ----------------------------------------------------------
+@pytest.mark.parametrize("srname", sorted(SEMIRINGS))
+@pytest.mark.parametrize("name", GRAPHS)
+def test_mxm_matches_oracle(name, srname, mesh222):
+    sr = SEMIRINGS[srname]
+    dense, sh = _handles(name, mesh222)
+    X = jnp.asarray(_frontier(name))
+    np.testing.assert_allclose(
+        np.asarray(grb.mxm(sh, X, sr)), np.asarray(grb.mxm(dense, X, sr)),
+        rtol=1e-5, atol=1e-5)
+    # transpose descriptor with no linked transpose: the psum_scatter /
+    # pmin row-block lowering, never a materialized flip
+    assert sh._T is None
+    np.testing.assert_allclose(
+        np.asarray(grb.mxm(sh, X, sr, grb.TRANSPOSE_A)),
+        np.asarray(grb.mxm(dense, X, sr, grb.TRANSPOSE_A)),
+        rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("srname", sorted(SEMIRINGS))
+def test_mxm_on_4way_row_mesh(srname, mesh421):
+    """Same contract on the 4x2x1 layout (4-way row blocks, size-1 axis)."""
+    sr = SEMIRINGS[srname]
+    dense, sh = _handles("rmat_s7", mesh421)
+    X = jnp.asarray(_frontier("rmat_s7", f=3, seed=7))
+    np.testing.assert_allclose(
+        np.asarray(grb.mxm(sh, X, sr)), np.asarray(grb.mxm(dense, X, sr)),
+        rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(grb.mxm(sh, X, sr, grb.TRANSPOSE_A)),
+        np.asarray(grb.mxm(dense, X, sr, grb.TRANSPOSE_A)),
+        rtol=1e-5, atol=1e-5)
+
+
+def test_mxm_linked_transpose(mesh222):
+    """A linked ELL transpose is sharded alongside and served for
+    transpose_a — the all-gather row lowering on the stored A^T."""
+    D = _dense_of("petersen")
+    h = grb.GBMatrix.from_dense(D, fmt="ell")
+    h.link_transpose(grb.GBMatrix.from_dense(D.T, fmt="ell"))
+    sh = grb.distribute(h, mesh222)
+    assert sh._T is not None and sh._T.fmt == "sharded"
+    assert sh.T.T is sh
+    X = jnp.asarray(_frontier("petersen", seed=3))
+    for sr in (S.PLUS_TIMES, S.MIN_PLUS):
+        np.testing.assert_allclose(
+            np.asarray(grb.mxm(sh, X, sr, grb.TRANSPOSE_A)),
+            np.asarray(grb.mxm(grb.GBMatrix(jnp.asarray(D)), X, sr,
+                               grb.TRANSPOSE_A)),
+            rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("srname", ["or_and", "plus_times"])
+@pytest.mark.parametrize("name", ["c5", "rmat_s6"])
+def test_mxv_vxm_match_oracle(name, srname, mesh222):
+    sr = SEMIRINGS[srname]
+    dense, sh = _handles(name, mesh222)
+    x = jnp.asarray(_frontier(name, f=1, seed=1)[:, 0])
+    np.testing.assert_allclose(np.asarray(grb.mxv(sh, x, sr)),
+                               np.asarray(grb.mxv(dense, x, sr)),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(grb.vxm(x, sh, sr)),
+                               np.asarray(grb.vxm(x, dense, sr)),
+                               rtol=1e-5, atol=1e-5)
+
+
+# -- descriptor blend ---------------------------------------------------------
+@pytest.mark.parametrize("comp", [False, True])
+@pytest.mark.parametrize("accum", [False, True])
+@pytest.mark.parametrize("replace", [False, True])
+def test_descriptor_blend_matches_dense(comp, accum, replace, mesh222):
+    """mask/complement/accum/replace ride the identical finalize as the
+    dense path — the blend happens on the global (GSPMD) result."""
+    name = "petersen"
+    dense, sh = _handles(name, mesh222)
+    X = jnp.asarray(_frontier(name, seed=5))
+    rng = np.random.default_rng(9)
+    mask = jnp.asarray((rng.uniform(size=X.shape) < 0.5).astype(np.float32))
+    out = jnp.asarray(rng.uniform(0.5, 1.5, size=X.shape).astype(np.float32))
+    d = Descriptor(mask=mask, complement=comp,
+                   accum=S.PLUS if accum else None, replace=replace)
+    np.testing.assert_allclose(
+        np.asarray(grb.mxm(sh, X, S.PLUS_TIMES, d, out=out)),
+        np.asarray(grb.mxm(dense, X, S.PLUS_TIMES, d, out=out)),
+        rtol=1e-5, atol=1e-5)
+
+
+# -- reduce -------------------------------------------------------------------
+@pytest.mark.parametrize("axis", [None, 0, 1])
+@pytest.mark.parametrize("monname", ["plus", "or"])
+@pytest.mark.parametrize("name", ["petersen", "rmat_s7"])
+def test_reduce_matches_ell(name, monname, axis, mesh222):
+    mon = {"plus": S.PLUS, "or": S.OR}[monname]
+    D = _dense_of(name)
+    ell = grb.GBMatrix.from_dense(D, fmt="ell")
+    sh = grb.distribute(ell, mesh222)
+    np.testing.assert_allclose(np.asarray(grb.reduce(sh, mon, axis=axis)),
+                               np.asarray(grb.reduce(ell, mon, axis=axis)),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_reduce_minmax_falls_back(mesh421):
+    """min/max need absent entries and take the documented gather-to-host
+    dense fallback — same numbers as the ELL route."""
+    D = _dense_of("rmat_s6")
+    ell = grb.GBMatrix.from_dense(D, fmt="ell")
+    sh = grb.distribute(ell, mesh421)
+    for mon in (S.MIN, S.MAX):
+        for axis in (None, 1):
+            np.testing.assert_allclose(
+                np.asarray(grb.reduce(sh, mon, axis=axis)),
+                np.asarray(grb.reduce(ell, mon, axis=axis)))
+
+
+# -- apply / select (shard-local) ---------------------------------------------
+@pytest.mark.parametrize("meshname", ["mesh222", "mesh421"])
+def test_apply_select_stay_sharded(meshname, request):
+    mesh = request.getfixturevalue(meshname)
+    D = _dense_of("rmat_s6")
+    ell = grb.GBMatrix.from_dense(D, fmt="ell")
+    sh = grb.distribute(ell, mesh)
+    ga, ge = grb.apply(lambda v: v * 2.0 + 1.0, sh), \
+        grb.apply(lambda v: v * 2.0 + 1.0, ell)
+    assert ga.fmt == "sharded" and ga.nvals == ge.nvals
+    np.testing.assert_allclose(np.asarray(ga.to_dense()),
+                               np.asarray(ge.to_dense()), rtol=1e-6)
+    sa, se = grb.select(lambda v: v > 1.2, sh), \
+        grb.select(lambda v: v > 1.2, ell)
+    assert sa.fmt == "sharded" and sa.nvals == se.nvals
+    np.testing.assert_allclose(np.asarray(sa.to_dense()),
+                               np.asarray(se.to_dense()), rtol=1e-6)
+
+
+def test_apply_with_descriptor_gathers_and_reshards(mesh222):
+    D = _dense_of("c5")
+    ell = grb.GBMatrix.from_dense(D, fmt="ell")
+    sh = grb.distribute(ell, mesh222)
+    mask = jnp.asarray((D != 0) * (np.arange(5)[:, None] % 2 == 0))
+    d = Descriptor(mask=mask.astype(jnp.float32))
+    ga = grb.apply(lambda v: v + 3.0, sh, d)
+    assert ga.fmt == "sharded"
+    np.testing.assert_allclose(
+        np.asarray(ga.to_dense()),
+        np.asarray(grb.apply(lambda v: v + 3.0, ell, d).to_dense()),
+        rtol=1e-6)
+
+
+# -- ewise family: gather-to-host path keeps the mesh -------------------------
+def test_ewise_add_mult_roundtrip(mesh222):
+    Da = _dense_of("petersen")
+    Db = _weighted(((np.arange(10)[:, None] + np.arange(10)[None, :]) % 3
+                    == 0).astype(np.float32))
+    ea = grb.GBMatrix.from_dense(Da, fmt="ell")
+    eb = grb.GBMatrix.from_dense(Db, fmt="ell")
+    sa, sb = grb.distribute(ea, mesh222), grb.distribute(eb, mesh222)
+    got = grb.ewise_add(sa, sb, S.PLUS)
+    assert got.fmt == "sharded"
+    np.testing.assert_allclose(
+        np.asarray(got.to_dense()),
+        np.asarray(grb.ewise_add(ea, eb, S.PLUS).to_dense()), rtol=1e-6)
+    got = grb.ewise_mult(sa, sb, lambda a, b: a * b)
+    assert got.fmt == "sharded"
+    np.testing.assert_allclose(
+        np.asarray(got.to_dense()),
+        np.asarray(grb.ewise_mult(ea, eb, lambda a, b: a * b).to_dense()),
+        rtol=1e-6)
+
+
+# -- the mixed-operand / wrong-store contract ---------------------------------
+def test_distribute_rejects_non_ell(mesh222):
+    D = _dense_of("k4")
+    with pytest.raises(TypeError, match="needs ELL row storage"):
+        grb.distribute(grb.GBMatrix.from_dense(D, fmt="bsr", block=4),
+                       mesh222)
+    with pytest.raises(TypeError, match="needs ELL row storage"):
+        grb.distribute(grb.GBMatrix(jnp.asarray(D)), mesh222)
+
+
+def test_distribute_needs_data_axis():
+    devs = np.array(jax.devices()[:8]).reshape(8, 1)
+    badmesh = jax.sharding.Mesh(devs, ("rows", "cols"))
+    with pytest.raises(ValueError, match="'data' axis"):
+        ShardedELL.from_dense(_dense_of("k4"), badmesh)
+
+
+def test_mxm_mixed_operands_raise(mesh222):
+    dense, sh = _handles("c5", mesh222)
+    ell = grb.GBMatrix.from_dense(_dense_of("c5"), fmt="ell")
+    with pytest.raises(TypeError, match=r"dense \(k, F\) frontier"):
+        grb.mxm(sh, ell, S.OR_AND)
+    with pytest.raises(TypeError, match="B is sharded but A is not"):
+        grb.mxm(ell, sh, S.OR_AND)
+    # a dense-format GBMatrix B is a dense frontier in handle clothing and
+    # must work exactly like it does on an unsharded A
+    X = _frontier("c5", seed=2)
+    np.testing.assert_allclose(
+        np.asarray(grb.mxm(sh, grb.GBMatrix(jnp.asarray(X)), S.PLUS_TIMES)),
+        np.asarray(grb.mxm(dense, grb.GBMatrix(jnp.asarray(X)),
+                           S.PLUS_TIMES)), rtol=1e-5, atol=1e-5)
+
+
+def test_distribute_caches_per_mesh(mesh222, mesh421):
+    """Per-query contexts re-resolve relations; the distributed twin must
+    come from the handle cache, not a fresh pad + device_put every time."""
+    ell = grb.GBMatrix.from_dense(_dense_of("rmat_s6"), fmt="ell")
+    a = grb.distribute(ell, mesh222)
+    assert grb.distribute(ell, mesh222) is a
+    b = grb.distribute(ell, mesh421)
+    assert b is not a and grb.distribute(ell, mesh421) is b
+    assert grb.distribute(a, mesh222) is a      # already-on-mesh fast path
+
+
+def test_ewise_mixed_operands_raise(mesh222, mesh421):
+    ell = grb.GBMatrix.from_dense(_dense_of("c5"), fmt="ell")
+    sh = grb.distribute(ell, mesh222)
+    with pytest.raises(TypeError, match="operand kinds must match"):
+        grb.ewise_add(sh, ell, S.PLUS)
+    with pytest.raises(TypeError, match="operand kinds must match"):
+        grb.ewise_mult(ell, sh, lambda a, b: a * b)
+    with pytest.raises(TypeError, match="operand kinds must match"):
+        grb.ewise_add(sh, jnp.asarray(_dense_of("c5")), S.PLUS)
+    other = grb.distribute(ell, mesh421)
+    with pytest.raises(TypeError, match="different meshes"):
+        grb.ewise_add(sh, other, S.PLUS)
+    with pytest.raises(TypeError, match="out= is sharded"):
+        grb.ewise_add(ell, ell, S.PLUS, out=sh)
+    # apply/select honor the same out= contract instead of silently
+    # gathering the sharded out
+    with pytest.raises(TypeError, match="out= is sharded"):
+        grb.apply(lambda v: v + 1.0, ell, out=sh)
+    with pytest.raises(TypeError, match="out= is sharded"):
+        grb.select(lambda v: v > 0.5, ell, out=sh)
+
+
+def test_distribute_rehome_keeps_transpose(mesh222, mesh421):
+    """Re-homing a sharded handle onto another mesh keeps the linked
+    transpose sharded and linked (no silent fall-back to the scatter
+    lowering / host rebuild)."""
+    D = _dense_of("petersen")
+    h = grb.GBMatrix.from_dense(D, fmt="ell")
+    h.link_transpose(grb.GBMatrix.from_dense(D.T, fmt="ell"))
+    sh = grb.distribute(h, mesh222)
+    re = grb.distribute(sh, mesh421)
+    assert re.fmt == "sharded" and re.store.mesh == mesh421
+    assert re._T is not None and re._T.fmt == "sharded"
+    assert re._T.store.mesh == mesh421
+    X = jnp.asarray(_frontier("petersen", seed=11))
+    np.testing.assert_allclose(
+        np.asarray(grb.mxm(re, X, S.PLUS_TIMES, grb.TRANSPOSE_A)),
+        np.asarray(grb.mxm(grb.GBMatrix(jnp.asarray(D)), X, S.PLUS_TIMES,
+                           grb.TRANSPOSE_A)), rtol=1e-5, atol=1e-5)
+
+
+def test_assign_mixed_raise_and_roundtrip(mesh222):
+    ell = grb.GBMatrix.from_dense(_dense_of("petersen"), fmt="ell")
+    sh = grb.distribute(ell, mesh222)
+    sub = grb.GBMatrix.from_dense(np.full((2, 2), 5.0, np.float32),
+                                  fmt="ell")
+    with pytest.raises(TypeError, match="A is sharded but C is not"):
+        grb.assign(ell, grb.distribute(sub, mesh222), rows=[0, 1],
+                   cols=[0, 1])
+    got = grb.assign(sh, sub, rows=[0, 1], cols=[0, 1])
+    assert got.fmt == "sharded"
+    np.testing.assert_allclose(
+        np.asarray(got.to_dense()),
+        np.asarray(grb.assign(ell, sub, rows=[0, 1], cols=[0, 1]).to_dense()))
+
+
+def test_extract_reshards(mesh222):
+    ell = grb.GBMatrix.from_dense(_dense_of("rmat_s6"), fmt="ell")
+    sh = grb.distribute(ell, mesh222)
+    got = grb.extract(sh, rows=range(0, 32), cols=range(8, 40))
+    assert got.fmt == "sharded"
+    np.testing.assert_allclose(
+        np.asarray(got.to_dense()),
+        np.asarray(grb.extract(ell, rows=range(0, 32),
+                               cols=range(8, 40)).to_dense()))
+
+
+# -- hypothesis property sweep ------------------------------------------------
+if HAVE_HYPOTHESIS:
+
+    @pytest.mark.hypothesis
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 10**6), n=st.integers(2, 48),
+           f=st.integers(1, 6), density=st.floats(0.05, 0.5),
+           srname=st.sampled_from(sorted(SEMIRINGS)),
+           transpose=st.booleans(), mask_mode=st.sampled_from(
+               ["none", "mask", "comp"]))
+    def test_sharded_mxm_random_sweep(seed, n, f, density, srname, transpose,
+                                      mask_mode):
+        # hypothesis forbids function-scoped fixtures; build the mesh
+        # directly over the first 8 devices
+        if jax.device_count() < 8:
+            pytest.skip("needs the forced 8-device topology")
+        mesh = jax.sharding.Mesh(
+            np.array(jax.devices()[:8]).reshape(2, 2, 2),
+            ("pod", "data", "model"))
+        sr = SEMIRINGS[srname]
+        rng = np.random.default_rng(seed)
+        D = np.where(rng.uniform(size=(n, n)) < density,
+                     rng.uniform(0.5, 2.0, size=(n, n)), 0.0) \
+            .astype(np.float32)
+        X = rng.uniform(0.5, 2.0, size=(n, f)).astype(np.float32)
+        mask = (rng.uniform(size=(n, f)) < 0.5).astype(np.float32)
+        d = Descriptor(mask=None if mask_mode == "none" else
+                       jnp.asarray(mask), complement=mask_mode == "comp",
+                       transpose_a=transpose)
+        dense = grb.GBMatrix(jnp.asarray(D))
+        sh = grb.distribute(grb.GBMatrix.from_dense(D, fmt="ell"), mesh)
+        np.testing.assert_allclose(
+            np.asarray(grb.mxm(sh, jnp.asarray(X), sr, d)),
+            np.asarray(grb.mxm(dense, jnp.asarray(X), sr, d)),
+            rtol=1e-5, atol=1e-5)
+
+else:
+
+    @pytest.mark.hypothesis
+    def test_sharded_mxm_random_sweep():
+        pytest.importorskip("hypothesis", reason="hypothesis not installed "
+                            "(see requirements-dev.txt)")
