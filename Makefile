@@ -6,7 +6,7 @@ PY ?= python
 # src for the package, repo root so `benchmarks.*` resolves as a namespace pkg
 export PYTHONPATH := src:.$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast test-ewise test-dist bench-smoke
+.PHONY: test test-fast test-ewise test-dist bench-smoke docs-check
 
 # tier-1 verification (the command ROADMAP.md pins)
 test:
@@ -34,3 +34,8 @@ test-dist:
 # the trace(A^3)/6 oracle and prints the CSV row (full suite: benchmarks/run.py)
 bench-smoke:
 	$(PY) benchmarks/run.py triangles
+
+# execute every fenced ```python block in docs/*.md against the current
+# surface (tests/test_docs.py — also part of tier-1, so docs can't drift)
+docs-check:
+	$(PY) -m pytest -x -q tests/test_docs.py

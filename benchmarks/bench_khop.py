@@ -87,6 +87,52 @@ def run(rows):
     return rows
 
 
+# -- shared timing harness (jit + warmup + averaged reps) ---------------------
+def _timed_khop(handle, seeds, k, reps):
+    """(counts, seconds/call) of a jitted batched khop — the one warmup +
+    rep-averaging recipe every sweep in this file uses."""
+    fn = jax.jit(lambda s: alg.khop_counts(handle, s, k=k))
+    counts = np.asarray(fn(seeds))                       # compile + run
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        counts = np.asarray(fn(seeds))
+    return counts, (time.perf_counter() - t0) / reps
+
+
+def _timed_modes(handle, seeds, k, reps):
+    """The packed-vs-unpacked comparison cell: time both policy modes and
+    assert the counts identical (the bit-identity claim)."""
+    from repro.core import grb
+    times, counts = {}, {}
+    for mode in ("off", "on"):
+        with grb.packed_frontiers(mode):
+            counts[mode], times[mode] = _timed_khop(handle, seeds, k, reps)
+    assert list(counts["on"]) == list(counts["off"]), "packed diverged"
+    return times
+
+
+# -- bitmap-packed vs unpacked crossover (the §Bitmap dispatch) ---------------
+def run_packed(rows, scale=10, k=2, reps=3):
+    """Where does the packed boolean frontier overtake the float route, per
+    frontier width F? One khop per width with the policy forced off then on
+    (`grb.packed_frontiers`); the measured crossover is what
+    `grb.AUTO_PACK_MIN_WIDTH` pins — re-run this sweep to recalibrate it on
+    new hardware."""
+    from repro.core import bitmap
+
+    g = rmat_graph(scale=scale, edge_factor=8, seed=3, fmt="ell")
+    rel = g.relations["KNOWS"]
+    rng = np.random.default_rng(0)
+    for f in (8, 16, 32, 64, 128, 256, 512):
+        seeds = rng.integers(0, g.n, size=f)
+        times = _timed_modes(rel, seeds, k, reps)
+        rows.append((f"khop_packed_s{scale}_k{k}_f{f}",
+                     times["on"] / f * 1e6,
+                     f"vs_unpacked={times['off'] / times['on']:.2f}x_"
+                     f"frontier_bytes={bitmap.payload_reduction(f):.0f}x_less"))
+    return rows
+
+
 # -- sharded-vs-single-device crossover (the §Sharded dispatch) ---------------
 def _row_mesh(d):
     """d-way "data" mesh over the first d local devices (pod/model size 1:
@@ -113,15 +159,7 @@ def run_dist(rows, scale=10, k=2, n_seeds=32, reps=3):
     rng = np.random.default_rng(0)
     seeds = rng.integers(0, g.n, size=n_seeds)
 
-    def timed(handle):
-        fn = jax.jit(lambda s: alg.khop_counts(handle, s, k=k))
-        counts = np.asarray(fn(seeds))                   # compile + run
-        t0 = time.perf_counter()
-        for _ in range(reps):
-            counts = np.asarray(fn(seeds))
-        return counts, (time.perf_counter() - t0) / reps
-
-    base, dt_single = timed(rel.A)
+    base, dt_single = _timed_khop(rel.A, seeds, k, reps)
     rows.append((f"khop_dist_s{scale}_k{k}_single_device",
                  dt_single / n_seeds * 1e6, f"{n_seeds}seeds"))
     ndev = jax.device_count()
@@ -133,9 +171,24 @@ def run_dist(rows, scale=10, k=2, n_seeds=32, reps=3):
         if d > ndev:
             break
         sh = grb.distribute(rel.A, _row_mesh(d))
-        counts, dt = timed(sh)
+        counts, dt = _timed_khop(sh, seeds, k, reps)
         assert list(counts) == list(base), f"sharded d={d} diverged"
         rows.append((f"khop_dist_s{scale}_k{k}_sharded_dev{d}",
                      dt / n_seeds * 1e6,
                      f"vs_single={dt_single / dt:.2f}x"))
+
+    # packed-vs-unpacked on the mesh: a wide frontier so the per-hop
+    # all-gather payload cut (core.bitmap words) dominates. Fake CPU devices
+    # share one memory bus, so the wall-clock ratio here is a lower bound —
+    # the payload accounting column is the hardware-independent claim.
+    from repro.core import bitmap
+    f = 256
+    d = min(4, ndev)
+    sh = grb.distribute(rel.A, _row_mesh(d))
+    times = _timed_modes(sh, rng.integers(0, g.n, size=f), k, reps)
+    rows.append((f"khop_dist_s{scale}_k{k}_packed_f{f}_dev{d}",
+                 times["on"] / f * 1e6,
+                 f"vs_unpacked={times['off'] / times['on']:.2f}x_"
+                 f"allgather_payload="
+                 f"{bitmap.payload_reduction(f):.0f}x_less"))
     return rows

@@ -2,7 +2,10 @@
 
   khop        — paper Fig. 1 (k-hop response time, RedisGraph protocol)
   khop-dist   — sharded-vs-single-device k-hop crossover per device count
-                (REPRO_FORCE_DEVICES=8 sweeps 1/2/4/8 fake CPU devices)
+                (REPRO_FORCE_DEVICES=8 sweeps 1/2/4/8 fake CPU devices),
+                plus the packed-vs-unpacked all-gather payload comparison
+  khop-packed — bitmap-packed vs float boolean frontiers per frontier
+                width (the measured AUTO_PACK_MIN_WIDTH crossover)
   throughput  — paper §II (threadpool/read-scaling claim)
   kernels     — format-selection crossover (BSR/ELL/dense)
   triangles   — GraphChallenge (paper future-work item)
@@ -35,6 +38,7 @@ def main() -> None:
     suites = {
         "khop": bench_khop.run,
         "khop-dist": bench_khop.run_dist,
+        "khop-packed": bench_khop.run_packed,
         "throughput": bench_throughput.run,
         "kernels": bench_kernels.run,
         "triangles": bench_triangles.run,

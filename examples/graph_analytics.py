@@ -1,12 +1,15 @@
 """Graph analytics over semirings: PageRank (plus_times), SSSP (min_plus),
-WCC (min-label), triangles (plus_pair) — each a different GraphBLAS semiring
-on the same stored graph.
+WCC (min-seed boolean closures), triangles (plus_pair) — each a different
+GraphBLAS semiring on the same stored graph — then the same k-hop run on a
+device mesh through `grb.distribute` (zero algorithm changes; wide boolean
+frontiers ride the bitmap-packed path automatically).
 
   PYTHONPATH=src python examples/graph_analytics.py
 """
 import numpy as np
 
 from repro import algorithms as alg
+from repro.core import grb
 from repro.graph.datagen import rmat_edges
 from repro.graph.graph import GraphBuilder
 
@@ -38,3 +41,21 @@ d2 = np.concatenate([dst, src])
 gu = GraphBuilder(n).add_edges("E", s2, d2).build(fmt="bsr", block=128)
 t = int(alg.triangle_count(gu.relations["E"]))
 print(f"triangles (plus_pair, GraphChallenge): {t}")
+
+# the distributed surface: re-home the graph onto a mesh (ELL rows shard
+# over "data") and run the unchanged algorithm — each or_and hop all-gathers
+# a bitmap-packed frontier (128 seeds = 4 uint32 words per row, 32x less
+# wire than float32 indicators).
+import jax  # noqa: E402
+from jax.sharding import Mesh  # noqa: E402
+
+ge = GraphBuilder(n).add_edges("E", src, dst, w).build(fmt="ell")
+mesh = Mesh(np.array(jax.devices()).reshape(-1, 1, 1),
+            ("data", "pod", "model"))
+sharded = grb.distribute(ge.relations["E"].A, mesh)
+seeds = np.arange(128)
+local = np.asarray(alg.khop_counts(ge.relations["E"], seeds, k=2))
+dist = np.asarray(alg.khop_counts(sharded, seeds, k=2))
+assert (local == dist).all(), "sharded khop diverged"
+print(f"sharded khop (mesh of {mesh.devices.size}, packed frontiers): "
+      f"bit-identical over {len(seeds)} seeds")

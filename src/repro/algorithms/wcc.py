@@ -1,37 +1,88 @@
-"""Weakly-connected components by min-label propagation over min_plus.
+"""Weakly-connected components on boolean frontiers (min-seed labeling).
 
-label'_i = min(label_i, min_{j in N(i)} label_j); the min over neighbors is a
-min_plus pull with unit weights followed by a -1 shift (unit weights because
-0-weights are not storable in tropical tile format). Both directions come
-from one adjacency handle — the in-neighbor pull uses the cached transpose.
+The classic min-label propagation pulls numeric labels over min_plus — a
+tropical semiring that can never ride the bitmap-packed frontier path. This
+formulation keeps the *labels* host-side and does all the graph work as
+or_and reachability closures, so WCC's inner loop is the same packed
+boolean mxm BFS and k-hop use (core.bitmap, `grb.AUTO_PACK_MIN_WIDTH`):
+
+  1. take the `batch` smallest unlabeled vertex ids as seed columns,
+  2. run an undirected reachability closure (both directions per hop,
+     complemented visited mask) to fixpoint — each column is its seed's
+     whole weak component,
+  3. label every member of a column with the column's minimum member id.
+
+Step 3 makes the result *identical* to min-label propagation: a closure
+column contains the full component, so its minimum member IS the
+component's minimum id, regardless of which seeds were chosen. Seeds that
+share a component produce identical columns and agree on the label.
+
+Takes a Graph/Relation/GBMatrix like every algorithm here; hand in a
+sharded handle (`grb.distribute`) and the closure hops lower to mesh
+collectives with packed all-gathers, unchanged.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import grb, semiring as S
+from repro.core.grb import Descriptor
+from repro.algorithms.traverse import seeds_to_frontier
 
 
-def wcc(A, max_iter: int = 0, rel=None) -> jnp.ndarray:
-    A = grb.matrix(A, rel)
+def _closure(A: grb.GBMatrix, seeds, max_iter: int) -> jnp.ndarray:
+    """(n, F) 0/1 closure: column j is everything weakly reachable from
+    seeds[j] (seed included) — or_and hops in both edge directions until
+    the frontier empties."""
     n = A.shape[0]
-    labels = jnp.arange(n, dtype=jnp.float32)
     iters = max_iter or n
-
-    def step(labels, d):
-        pulled = grb.mxv(A, labels, S.MIN_PLUS, d)
-        return jnp.minimum(labels, pulled - 1.0)
+    frontier = seeds_to_frontier(seeds, n)
 
     def cond(state):
-        t, labels, changed = state
-        return jnp.logical_and(t < iters, changed)
+        t, fr, _ = state
+        return jnp.logical_and(t < iters, jnp.any(fr > 0))
 
     def body(state):
-        t, labels, _ = state
-        new = step(labels, grb.TRANSPOSE_A)    # pull from in-neighbors
-        new = step(new, grb.NULL)              # and out-neighbors (undirected)
-        return t + 1, new, jnp.any(new < labels)
+        t, fr, visited = state
+        d = Descriptor(mask=visited, complement=True)
+        nxt = jnp.maximum(
+            grb.mxm(A, fr, S.OR_AND, d.with_(transpose_a=True)),
+            grb.mxm(A, fr, S.OR_AND, d))
+        return t + 1, nxt, jnp.maximum(visited, nxt)
 
-    _, labels, _ = jax.lax.while_loop(cond, body, (0, labels, True))
-    return labels.astype(jnp.int32)
+    _, _, visited = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), frontier, frontier))
+    return visited
+
+
+def wcc(A, max_iter: int = 0, rel=None, batch: int = 128) -> jnp.ndarray:
+    """Component labels (n,) int32: each vertex gets the minimum vertex id
+    of its weak component — the same labels min-label propagation yields.
+    `batch` seeds traverse per closure (one frontier matrix column each);
+    `max_iter` bounds hops per closure (0 = diameter-safe n)."""
+    A = grb.matrix(A, rel)
+    n = A.shape[0]
+    labels = np.full(n, -1, dtype=np.int64)
+    # isolated vertices (no stored entry in their row or column) are their
+    # own singleton components — label them up front so the closure loop
+    # never spends a round on them (power-law generators leave many)
+    if A.fmt == "dense":
+        D = np.asarray(A.store) != 0
+        iso = ~(D.any(axis=1) | D.any(axis=0))
+    else:
+        # sparse/sharded "or" reduce is any-stored (docs/API.md §eWise)
+        iso = (np.asarray(grb.reduce(A, S.OR, axis=1)) == 0) & \
+            (np.asarray(grb.reduce(A, S.OR, axis=0)) == 0)
+    labels[iso] = np.nonzero(iso)[0]
+    while True:
+        unlabeled = np.nonzero(labels < 0)[0]
+        if len(unlabeled) == 0:
+            break
+        seeds = unlabeled[:batch]
+        reach = np.asarray(_closure(A, seeds, max_iter)) > 0
+        for j in range(reach.shape[1]):
+            members = reach[:, j]
+            labels[members] = int(np.flatnonzero(members)[0])
+    return jnp.asarray(labels.astype(np.int32))

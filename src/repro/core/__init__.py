@@ -2,12 +2,13 @@
 # as the storage + execution substrate of a graph database, TPU-native.
 # `grb` is the unified operation surface (Descriptor / GBMatrix / mxm-family);
 # `ops` keeps the legacy kwargs spelling over raw storage; `shard` holds the
-# mesh-sharded storage kind behind the same GBMatrix handle.
-from repro.core import grb, ops, semiring
+# mesh-sharded storage kind behind the same GBMatrix handle; `bitmap` is the
+# packed boolean frontier form or_and traversals ride (docs/API.md §Bitmap).
+from repro.core import bitmap, grb, ops, semiring
 from repro.core.bsr import BSR
 from repro.core.ell import ELL
 from repro.core.grb import Descriptor, GBMatrix
 from repro.core.shard import ShardedELL
 
-__all__ = ["grb", "ops", "semiring", "BSR", "ELL", "ShardedELL",
+__all__ = ["bitmap", "grb", "ops", "semiring", "BSR", "ELL", "ShardedELL",
            "Descriptor", "GBMatrix"]

@@ -1,0 +1,164 @@
+"""Bitmap-packed boolean frontiers: 32 queries per uint32 word.
+
+Bit-GraphBLAS (arXiv 2201.08560) observes that boolean/structural workloads
+— BFS, k-hop, reachability, anything on the or_and semiring — waste 31/32 of
+their bandwidth carrying float32 indicators. This module is the packed
+*frontier form* behind the `grb` surface: an (n, F) boolean frontier becomes
+an (n, ceil(F/32)) uint32 word array, every or_and primitive (neighbor
+gather, OR-reduce, mask / complement blend) becomes a word-wise bitwise op,
+and the per-hop all-gather of a sharded traversal moves 32x fewer bytes
+(`distr.graph2d`). Packing is an *execution detail*: `grb.mxm`/`mxv`/`vxm`
+pack and unpack at the call boundary (policy: `grb.AUTO_PACK_MIN_WIDTH`),
+so algorithms keep seeing ordinary 0/1 float frontiers and results stay
+bit-identical to the unpacked route.
+
+Two lane layouts live here:
+
+  * **bit lanes** (`pack`/`unpack`, 32 booleans per word) — the frontier
+    form itself; OR across shards/neighbors is `|`, masking is `&`/`&~`.
+  * **nibble lanes** (`pack_nibbles`/`unpack_nibbles`, 8 booleans per word,
+    4 bits each) — the *summable* spelling used where the combining
+    collective can only add (psum_scatter in the transposed sharded mxm):
+    each lane holds a per-shard 0/1 partial, the sum across <= 15 row
+    shards never carries into the next lane, and `> 0` per lane restores
+    the OR. Still an 8x payload cut over float32.
+
+Everything is plain jnp (traceable inside jit / shard_map / while_loop);
+the Pallas inner-loop kernel for the packed ELL gather lives in
+`repro.kernels.bitmap_mxv`. `pack_calls()` is the observability counter
+tests pin policy decisions with (trace-time semantics, like
+`core.bsr.densify_calls`).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jnp.ndarray
+
+WORD_BITS = 32          # bit lanes per uint32 word (the frontier form)
+NIBBLE_LANES = 8        # summable lanes per word: 4 bits each, carry-free
+NIBBLE_MAX_SHARDS = 15  # nibble sums stay carry-free up to this many addends
+
+# -- observability: how many times a frontier was packed ----------------------
+# Trace-time semantics (a cached jit does not re-count), same caveat as
+# core.bsr.densify_calls; tests use deltas around eager calls.
+_pack_calls = [0]
+
+
+def pack_calls() -> int:
+    """Total :func:`pack` invocations so far (policy-pin counter)."""
+    return _pack_calls[0]
+
+
+def n_words(f: int) -> int:
+    """uint32 words per frontier row for an F-column boolean frontier."""
+    return max(-(-int(f) // WORD_BITS), 1)
+
+
+def payload_bytes(rows: int, f: int, packed: bool) -> int:
+    """Wire bytes of one frontier all-gather payload: the words-per-frontier
+    accounting the sharded regression pins. Unpacked frontiers travel as
+    float32 indicators (4 bytes/entry); packed ones as uint32 words."""
+    if packed:
+        return rows * n_words(f) * 4
+    return rows * f * 4
+
+
+def payload_reduction(f: int) -> float:
+    """Packed-vs-unpacked payload ratio for an F-wide frontier (-> 32x as F
+    grows; >= 8x from F = 8)."""
+    return payload_bytes(1, f, packed=False) / payload_bytes(1, f, packed=True)
+
+
+def _bit_weights() -> Array:
+    return jnp.left_shift(jnp.uint32(1),
+                          jnp.arange(WORD_BITS, dtype=jnp.uint32))
+
+
+def pack(x: Array) -> Array:
+    """(n, F) anything-numeric -> (n, ceil(F/32)) uint32; bit b of word w of
+    row i is `x[i, 32*w + b] != 0`. The stored-iff-nonzero convention makes
+    this exact for every or_and operand, not just 0/1 arrays."""
+    _pack_calls[0] += 1
+    n, f = x.shape
+    w = n_words(f)
+    bits = (x != 0)
+    bits = jnp.pad(bits, ((0, 0), (0, w * WORD_BITS - f)))
+    lanes = bits.reshape(n, w, WORD_BITS).astype(jnp.uint32) * _bit_weights()
+    return jax.lax.reduce(lanes, jnp.uint32(0), jax.lax.bitwise_or, (2,))
+
+
+def unpack(xw: Array, f: int) -> Array:
+    """(n, W) uint32 words -> (n, f) float32 0/1 indicators — the exact
+    values the unpacked or_and route produces (bit-identity boundary)."""
+    n, w = xw.shape
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    bits = jnp.bitwise_and(
+        jnp.right_shift(xw[:, :, None], shifts), jnp.uint32(1))
+    return bits.reshape(n, w * WORD_BITS)[:, :f].astype(jnp.float32)
+
+
+# -- word-wise boolean algebra (mask / complement / visited blends) -----------
+def word_or(a: Array, b: Array) -> Array:
+    """Frontier union — the or_and add monoid on words."""
+    return jnp.bitwise_or(a, b)
+
+
+def word_and(a: Array, b: Array) -> Array:
+    """`C<M>` mask keep on words."""
+    return jnp.bitwise_and(a, b)
+
+
+def word_andnot(a: Array, b: Array) -> Array:
+    """`C<!M>` complement-mask keep on words: a & ~b (the BFS visited
+    blend)."""
+    return jnp.bitwise_and(a, jnp.bitwise_not(b))
+
+
+def popcount(xw: Array) -> Array:
+    """Per-word set-bit count (SWAR), uint32 in -> int32 out. Summed over a
+    word column this is the or_and `reduce` of 32 frontiers at once."""
+    x = xw.astype(jnp.uint32)
+    x = x - (jnp.right_shift(x, 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + \
+        (jnp.right_shift(x, 2) & jnp.uint32(0x33333333))
+    x = (x + jnp.right_shift(x, 4)) & jnp.uint32(0x0F0F0F0F)
+    return jnp.right_shift(x * jnp.uint32(0x01010101), 24).astype(jnp.int32)
+
+
+def reduce_or_columns(xw: Array, f: int) -> Array:
+    """(n, W) words -> (f,) per-query reached counts: popcount spelled as an
+    unpack + column sum (the packed `grb.reduce(plus, axis=0)` of an
+    indicator frontier)."""
+    return jnp.sum(unpack(xw, f), axis=0, dtype=jnp.float32)
+
+
+# -- nibble lanes: the summable packing for add-only collectives --------------
+def _nibble_weights() -> Array:
+    return jnp.left_shift(jnp.uint32(1),
+                          jnp.uint32(4) * jnp.arange(NIBBLE_LANES,
+                                                     dtype=jnp.uint32))
+
+
+def pack_nibbles(bits: Array) -> Array:
+    """(n, F) 0/1 partials -> (n, ceil(F/8)) uint32, 4 bits per lane. Sums
+    of <= NIBBLE_MAX_SHARDS such words never carry across lanes — the
+    psum_scatter payload of the transposed packed mxm."""
+    n, f = bits.shape
+    w = max(-(-f // NIBBLE_LANES), 1)
+    b = jnp.pad((bits != 0), ((0, 0), (0, w * NIBBLE_LANES - f)))
+    lanes = b.reshape(n, w, NIBBLE_LANES).astype(jnp.uint32) * \
+        _nibble_weights()
+    return jax.lax.reduce(lanes, jnp.uint32(0), jax.lax.bitwise_or, (2,))
+
+
+def unpack_nibbles(xw: Array, f: int) -> Array:
+    """(n, Wn) summed nibble words -> (n, f) bool "any shard contributed"
+    (each lane saturates with > 0, restoring the OR the sum stood in for)."""
+    n, w = xw.shape
+    shifts = jnp.uint32(4) * jnp.arange(NIBBLE_LANES, dtype=jnp.uint32)
+    lanes = jnp.bitwise_and(
+        jnp.right_shift(xw[:, :, None], shifts), jnp.uint32(0xF))
+    return (lanes.reshape(n, w * NIBBLE_LANES)[:, :f] > 0)

@@ -29,8 +29,29 @@ reduce then lower to the explicit-collective shard_map bodies in
 `repro.distr.graph2d` (all-gather frontier in row form, psum_scatter row
 blocks in transposed form), apply/select run shard-local, and the rest of
 the family falls back to a documented gather-to-host round trip
-(docs/API.md §Sharded). Mixing sharded and unsharded operands raises a
-TypeError naming the expected kinds — mirroring the sparse/dense contract.
+(docs/API.md §Sharded).
+
+Boolean traversals additionally ride the *bitmap-packed frontier* form
+(`core.bitmap`, docs/API.md §Bitmap): an or_and mxm/mxv/vxm whose dense
+frontier is at least AUTO_PACK_MIN_WIDTH wide packs it into uint32 words
+(32 queries/word) on dense, ELL, and ShardedELL operands, blends
+pure-masked writes word-wise, and unpacks at the boundary — results are
+bit-identical to the float route and callers never see a packed array.
+The policy is trace-time static; `packed_frontiers("on"|"off"|"auto")`
+overrides it.
+
+Public contract (what raises, what moves data):
+
+  * TypeError — mixed operand kinds, always naming the expected ones:
+    sparse with dense in the eWise family; sharded with unsharded
+    anywhere; sparse B against a sharded A; non-ELL storage handed to
+    :func:`distribute`; sharded `out=` under unsharded operands.
+  * ValueError — shape mismatches (operands, masks vs result, assign
+    regions) and invalid/duplicate index vectors.
+  * Gathers to host (documented, correct, not mesh-resident) — eWise on
+    two same-mesh sharded operands, assign/extract, apply/select under a
+    descriptor blend, min/max reduce, and sparse descriptor *masks* on
+    sharded ops. Everything else on a sharded handle stays on the mesh.
 
 Algorithms (`repro.algorithms`), the query executor (`repro.query.executor`),
 and the batched server (`repro.engine.server`) all dispatch through here —
@@ -47,6 +68,7 @@ Blend (write) semantics, centralized in :func:`finalize`:
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Callable, Optional, Union
 
@@ -54,6 +76,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import bitmap as _bitmap
 from repro.core import bsr as _bsr
 from repro.core import coo as _coo
 from repro.core import ops as _ops
@@ -154,6 +177,45 @@ AUTO_MIN_GRID = 4     # block-rows/-cols below this: one dense matmul wins
 AUTO_MAX_FILL = 0.25  # stored-tile fill above this: effectively dense
 AUTO_MIN_WIDTH = 8    # B frontier narrower than this: XLA (auto handles only)
 
+# -- bitmap-packed frontier policy -------------------------------------------
+# or_and-semiring mxm/mxv/vxm on dense / ELL / ShardedELL operands pack the
+# boolean frontier into uint32 words (core.bitmap) when it is at least this
+# wide. Measured by benchmarks/bench_khop.run_packed (RMAT s10 k-hop,
+# XLA-CPU reference host): the packed route wins at every swept width —
+# 9.8x at F=8, 26x at F=32, 84x at F=128 — because the unpacked ELL gather
+# materializes an (n, deg, F) float32 intermediate the words shrink 32x.
+# The floor only exempts near-scalar frontiers (a width-1 or_and mxv),
+# where a word is >= 97% padding and the pack/unpack boundary is pure
+# overhead; it mirrors AUTO_MIN_WIDTH. BSR operands never pack — their
+# or_and route is the MXU indicator matmul, which packing would abandon.
+AUTO_PACK_MIN_WIDTH = 8
+
+_PACK_MODE = "auto"   # "auto" (width threshold) | "on" | "off"
+
+
+@contextlib.contextmanager
+def packed_frontiers(mode: str):
+    """Temporarily override the bitmap-packing policy: "on" packs every
+    or_and-eligible call regardless of width, "off" disables packing,
+    "auto" restores the AUTO_PACK_MIN_WIDTH crossover. Benchmarks and the
+    differential tests use this; production code should leave "auto"."""
+    global _PACK_MODE
+    if mode not in ("auto", "on", "off"):
+        raise ValueError(f"packed_frontiers mode {mode!r} not in "
+                         f"('auto', 'on', 'off')")
+    prev, _PACK_MODE = _PACK_MODE, mode
+    try:
+        yield
+    finally:
+        _PACK_MODE = prev
+
+
+def _pack_wanted(f: int) -> bool:
+    """Width side of the packed-frontier policy (static at trace time)."""
+    if _PACK_MODE == "off":
+        return False
+    return _PACK_MODE == "on" or f >= AUTO_PACK_MIN_WIDTH
+
 
 def _kernel_pays_off(store: BSR) -> bool:
     """Fill-ratio/grid-size side of the measured crossover (width is only
@@ -183,7 +245,7 @@ def _resolve_impl(requested: str, fmt: str, store: Optional[BSR] = None) -> str:
 
 
 class GBMatrix:
-    """One matrix handle over dense / BSR / ELL storage.
+    """One matrix handle over dense / BSR / ELL / ShardedELL storage.
 
     The handle carries everything per-call kwargs used to: the storage format,
     the resolved execution policy (``impl``), and a lazily-built, cached
@@ -269,10 +331,14 @@ class GBMatrix:
     def T(self) -> "GBMatrix":
         """Stored transpose, built once and cached; ``A.T.T is A``."""
         if self._T is None:
-            if self.fmt == "dense":
-                t: Storage = self.store.T
-            else:
-                t = self.store.transpose()
+            # the handle cache outlives any trace that triggers the build
+            # (e.g. transpose_a inside a while_loop body), so the transpose
+            # arrays must be concrete, never trace-bound tracers
+            with jax.ensure_compile_time_eval():
+                if self.fmt == "dense":
+                    t: Storage = self.store.T
+                else:
+                    t = self.store.transpose()
             # an auto policy stays auto: re-resolve against the transposed
             # store and keep the per-call crossover heuristics active
             self.link_transpose(GBMatrix(t,
@@ -483,8 +549,50 @@ def _mxm_sharded(A: GBMatrix, B, sr: S.Semiring, d: Descriptor,
     if isinstance(d.mask, (GBMatrix, BSR, ELL, ShardedELL)):
         m = _mask_storage(d.mask)
         d = d.with_(mask=m if isinstance(m, jnp.ndarray) else m.to_dense())
-    y = _shard.mxm(A.store, jnp.asarray(B), sr, transposed=transposed)
+    B = jnp.asarray(B)
+    # or_and frontiers ride the mesh as packed uint32 words — the per-hop
+    # all-gather (row form) / psum_scatter (transposed form) payload cut
+    packed = (sr.mode == "dot_indicator" and B.ndim == 2
+              and _pack_wanted(B.shape[1]))
+    y = _shard.mxm(A.store, B, sr, transposed=transposed, packed=packed)
     return finalize(d, y, out, sr.identity)
+
+
+def _packed_route_ok(A: GBMatrix, B, sr: S.Semiring) -> bool:
+    """Static (trace-time) gate for the bitmap-packed or_and route: boolean
+    semiring, dense frontier B, dense/ELL storage (BSR keeps the MXU
+    indicator matmul), frontier wide enough per the measured crossover."""
+    return (sr.mode == "dot_indicator"
+            and A.fmt in ("dense", "ell")
+            and getattr(B, "ndim", 0) == 2
+            and _pack_wanted(B.shape[1]))
+
+
+def _mxm_packed(A: GBMatrix, B: Array, sr: S.Semiring, d: Descriptor,
+                out: Optional[Array]) -> Array:
+    """or_and mxm with the frontier in core.bitmap packed form: pack at the
+    call boundary, OR words through the packed gather (Pallas kernel on TPU,
+    XLA reference otherwise), blend the mask word-wise when the write is a
+    pure masked overwrite, unpack at the other boundary. Bit-identical to
+    the float indicator route (the unpack renders exactly {0.0, 1.0})."""
+    f = B.shape[1]
+    Bw = _bitmap.pack(B)
+    if A.fmt == "ell":
+        if jax.default_backend() == "tpu":
+            from repro.kernels import ops as kops   # lazy: kernels import core
+            Yw = kops.ell_mxv_packed(A.store, Bw)
+        else:
+            Yw = _ops.ell_mxm_packed(A.store, Bw)
+    else:
+        Yw = _ops.dense_mxm_packed(A.store, Bw)
+    if d.mask is not None and d.mask_only and out is None:
+        # the or_and identity is 0, so <M> / <!M> on a replace-into-empty
+        # write is pure word algebra: keep = and, complement keep = andnot
+        Mw = _bitmap.pack(jnp.asarray(d.mask))
+        Yw = (_bitmap.word_andnot(Yw, Mw) if d.complement
+              else _bitmap.word_and(Yw, Mw))
+        return _bitmap.unpack(Yw, f)
+    return finalize(d, _bitmap.unpack(Yw, f), out, sr.identity)
 
 
 def mxm(A, B, sr: S.Semiring, d: Descriptor = NULL,
@@ -517,6 +625,8 @@ def mxm(A, B, sr: S.Semiring, d: Descriptor = NULL,
     if isinstance(d.mask, (GBMatrix, BSR, ELL, ShardedELL)):
         m = _mask_storage(d.mask)
         d = d.with_(mask=m if isinstance(m, jnp.ndarray) else m.to_dense())
+    if _packed_route_ok(A, B, sr):
+        return _mxm_packed(A, jnp.asarray(B), sr, d, out)
     fuse = d.mask is not None and out is None and d.mask_only
     y, mask_done = _dispatch_mxm(A, B, sr, d, fuse)
     if mask_done:

@@ -151,6 +151,35 @@ def ell_mxm(A: ELL, X: Array, sr: S.Semiring, row_chunk: int = 0) -> Array:
 
 
 # ---------------------------------------------------------------------------
+# bitmap-packed or_and matmul — XLA reference paths (CPU + shard_map bodies)
+# ---------------------------------------------------------------------------
+def ell_mxm_packed(A: ELL, Xw: Array) -> Array:
+    """Yw[i] = OR_{j in adj(i)} Xw[j] on uint32 frontier words — the or_and
+    gather-reduce with the frontier in `core.bitmap` packed form. This is
+    the XLA reference for `kernels.bitmap_mxv.ell_mxv_packed` and the
+    shard-local body of the packed row-form `distr.graph2d.mxm_2d`."""
+    gathered = Xw[A.indices]                               # (n, deg, W) u32
+    gathered = jnp.where(A.mask[:, :, None], gathered, jnp.uint32(0))
+    return jax.lax.reduce(gathered, jnp.uint32(0), jax.lax.bitwise_or, (1,))
+
+
+def dense_mxm_packed(A: Array, Xw: Array, k_chunk: int = 1024) -> Array:
+    """Packed or_and matmul for a dense A: Yw[i] = OR_{j: A[i,j] != 0} Xw[j].
+    K is chunked to bound the (n, k_chunk, W) broadcast intermediate — the
+    packed analog of semiring.dense_mxm's bcast chunking."""
+    n, k = A.shape
+    acc = jnp.zeros((n, Xw.shape[1]), dtype=jnp.uint32)
+    for start in range(0, k, k_chunk):
+        a = A[:, start:start + k_chunk] != 0
+        term = jnp.where(a[:, :, None], Xw[None, start:start + k_chunk, :],
+                         jnp.uint32(0))
+        acc = jnp.bitwise_or(
+            acc, jax.lax.reduce(term, jnp.uint32(0),
+                                jax.lax.bitwise_or, (1,)))
+    return acc
+
+
+# ---------------------------------------------------------------------------
 # public op surface
 # ---------------------------------------------------------------------------
 def mxm(A, X: Array, sr: S.Semiring, *, mask: Optional[Array] = None,

@@ -14,11 +14,20 @@ Storage only lives here; the *operations* stay where they always were:
 ``grb.mxm``/``mxv``/``reduce`` dispatch on the format tag and lower to the
 explicit-collective shard_map bodies in ``repro.distr.graph2d`` (one frontier
 all-gather per hop in row form, a psum_scatter of row blocks in transposed
-form), so algorithms and the query executor run unchanged on a mesh.
+form), so algorithms and the query executor run unchanged on a mesh. Wide
+or_and frontiers cross the mesh bitmap-packed (``core.bitmap`` uint32
+words — 32x less all-gather payload; grb sets ``packed=`` from its policy,
+this module only pads/packs/unpacks at the lowering boundary).
 ``apply``/``select`` are embarrassingly local (stored-entry value maps) and
 run right on the sharded arrays below. Everything else (eWise, assign,
 extract, non-plus/or reductions) falls back to a documented gather-to-host
 round trip — see docs/API.md §Sharded.
+
+Public contract: construction needs a Mesh with a "data" axis (TypeError /
+ValueError otherwise); ``to_ell``/``to_dense``/``to_coo``/``transpose``
+gather to host by design; everything in the "local stored-entry ops"
+section is collective-free. Mixed sharded/unsharded operand TypeErrors are
+raised one layer up, in ``repro.core.grb``, which owns the pairing rules.
 
 Handles over this storage are host-side objects like every GBMatrix; the
 sharded jnp arrays are what flows through jit. The padded row block is an
@@ -186,23 +195,50 @@ def _pad_frontier(s: ShardedELL, X: jnp.ndarray, x_rows: int):
     return X.astype(jnp.float32)
 
 
-def mxm(s: ShardedELL, X: jnp.ndarray, sr, transposed: bool = False):
+def _pad_frontier_packed(s: ShardedELL, X: jnp.ndarray, x_rows: int):
+    """Pack an (x_rows, F) frontier into uint32 words and pad both axes to
+    the mesh: rows to the "data" axis, words to the frontier shard count."""
+    from repro.core import bitmap
+    Xw = bitmap.pack(X)
+    r_pad = (-x_rows) % s.data_size
+    w_pad = (-Xw.shape[1]) % s.frontier_size
+    if r_pad or w_pad:
+        Xw = jnp.pad(Xw, ((0, r_pad), (0, w_pad)))
+    return Xw
+
+
+def mxm(s: ShardedELL, X: jnp.ndarray, sr, transposed: bool = False,
+        packed: bool = False):
     """Y = A (x) X (or A^T (x) X) on the mesh. X: dense (k, F) global array
     (k = A's columns in row form, A's rows in transposed form); the result is
-    a global (rows, F) array, row-sharded over "data" under GSPMD."""
+    a global (rows, F) array, row-sharded over "data" under GSPMD.
+
+    packed=True (or_and only, set by grb's bitmap policy): X crosses the
+    mesh as core.bitmap uint32 words — the frontier all-gather moves 32x
+    fewer bytes in row form; the transposed form psum_scatters summable
+    nibble words (8x) and needs <= bitmap.NIBBLE_MAX_SHARDS row shards,
+    beyond which this falls back to the float route.
+    """
+    from repro.core import bitmap
     from repro.distr import graph2d                 # lazy: core never pulls
     n, m = s.shape                                  # distr at import time
     dsz = s.data_size
+    if packed and transposed and dsz > bitmap.NIBBLE_MAX_SHARDS:
+        packed = False                              # nibble sums would carry
     if transposed:
         fn = graph2d.mxm_2d(s.mesh, sr, transposed=True,
-                            out_rows=m + (-m) % dsz)
-        Xp = _pad_frontier(s, X, n)                 # x rides A's row shards
+                            out_rows=m + (-m) % dsz, packed=packed)
+        Xp = (_pad_frontier_packed(s, X, n) if packed
+              else _pad_frontier(s, X, n))          # x rides A's row shards
         out_rows = m
     else:
-        fn = graph2d.mxm_2d(s.mesh, sr)
-        Xp = _pad_frontier(s, X, m)                 # x rows are A's columns
+        fn = graph2d.mxm_2d(s.mesh, sr, packed=packed)
+        Xp = (_pad_frontier_packed(s, X, m) if packed
+              else _pad_frontier(s, X, m))          # x rows are A's columns
         out_rows = n
     Y = fn(s.indices, s.mask, s.values, Xp)
+    if packed:
+        return bitmap.unpack(Y[:out_rows], X.shape[1])
     return Y[:out_rows, :X.shape[1]]
 
 

@@ -14,19 +14,30 @@ Two kinds of exports:
   * **Reusable op lowerings** — :func:`mxm_2d` and :func:`reduce_2d` are the
     shard_map bodies `grb` dispatches to when a GBMatrix holds ShardedELL
     storage (core.shard). Row form: one frontier all-gather over "data" +
-    local ELL gather-reduce. Transposed form (`A^T (x) x` with no stored
-    transpose): local scatter-accumulate + a psum_scatter of row blocks
-    (pmin/pmax for the tropical semirings). Engine / query / algorithm
-    layers never call these directly — they go through `grb`.
+    local ELL gather-reduce; with `packed=True` (or_and, set by grb's
+    bitmap policy) both sides of the collective carry `core.bitmap` uint32
+    words — 32x less wire payload. Transposed form (`A^T (x) x` with no
+    stored transpose): local scatter-accumulate + a psum_scatter of row
+    blocks (pmin/pmax for the tropical semirings; summable nibble words,
+    8x less payload, when packed). Engine / query / algorithm layers never
+    call these directly — they go through `grb`.
   * **Dry-run probes** — :func:`khop_counts_2d` (with the bitmap-packed and
-    sentinel perf variants) and :func:`pagerank_2d` keep whole-algorithm
+    sentinel perf variants, packing via the same public `core.bitmap`
+    route the ops use) and :func:`pagerank_2d` keep whole-algorithm
     loops fused in one shard_map so `launch.dryrun` can compile a single
     cell and read its collective bytes off the HLO. They are lowering-
     analysis tools, not an algorithm surface: the engine runs the same
     algorithms through `grb` ops on sharded handles.
 
-shard_map keeps the collectives explicit — `lowered.as_text()` shows exactly
-one all-gather per hop plus the final reduce.
+Public contract: every callable here is mesh-resident and collective-
+explicit — nothing gathers to host (the gather-to-host fallbacks live in
+`grb`). Inputs must arrive pre-padded to the mesh (core.shard owns that);
+mis-padded `out_rows`, a packed call on a non-indicator semiring, or a
+packed transposed call over more than `bitmap.NIBBLE_MAX_SHARDS` row
+shards raise ValueError / NotImplementedError at trace time. shard_map
+keeps the collectives explicit — `lowered.as_text()` shows exactly one
+all-gather per hop plus the final reduce, which is what the payload
+regression in tests/test_bitmap.py pins.
 """
 from __future__ import annotations
 
@@ -87,7 +98,7 @@ def ell_shard_inputs(A, sentinel: bool = False):
 # ---------------------------------------------------------------------------
 @functools.lru_cache(maxsize=None)
 def mxm_2d(mesh: Mesh, sr: S.Semiring, transposed: bool = False,
-           out_rows: int = 0):
+           out_rows: int = 0, packed: bool = False):
     """One semiring matmul over the mesh: (idx, msk, val, x) -> y.
 
     Row form (transposed=False): y = A (x) x. idx/msk/val are A's row-padded
@@ -102,18 +113,63 @@ def mxm_2d(mesh: Mesh, sr: S.Semiring, transposed: bool = False,
     output row block (pmin/pmax + local slice for the tropical add monoids,
     which have no scatter-reduce collective).
 
-    The jitted callable is lru-cached per (mesh, semiring, direction) —
-    repeated hops recompile only on new operand shapes.
+    packed=True (or_and only — `core.shard.mxm` sets it from grb's bitmap
+    policy): x and y are core.bitmap uint32 word arrays, (rows, W) with W
+    sharded where F was. Row form all-gathers the *words* — 32x less wire
+    payload per hop — and ORs them through the packed gather-reduce.
+    Transposed form still sums: the local partial bits are re-packed into
+    summable nibble words (8 lanes/word, 4 bits each) so one psum_scatter
+    carries an 8x-smaller payload without bit carries (<= 15 row shards),
+    then each shard saturates its nibbles back to bits.
+
+    The jitted callable is lru-cached per (mesh, semiring, direction,
+    packing) — repeated hops recompile only on new operand shapes.
     """
     fr = _fr_spec(mesh)
     dsz = mesh.shape["data"]
+    if packed and sr.mode != "dot_indicator":
+        raise NotImplementedError(
+            f"packed mxm_2d is or_and/any_pair only (mode dot_indicator); "
+            f"got {sr.mode}")
 
-    if not transposed:
+    if not transposed and packed:
+        def body(idx_l, msk_l, val_l, xw_l):
+            xw = jax.lax.all_gather(xw_l, "data", axis=0, tiled=True)
+            local = ELL(shape=(idx_l.shape[0], xw.shape[0]), indices=idx_l,
+                        mask=msk_l, values=val_l, nnz=0)
+            return _core_ops.ell_mxm_packed(local, xw)
+    elif not transposed:
         def body(idx_l, msk_l, val_l, x_l):
             x = jax.lax.all_gather(x_l, "data", axis=0, tiled=True)
             local = ELL(shape=(idx_l.shape[0], x.shape[0]), indices=idx_l,
                         mask=msk_l, values=val_l, nnz=0)
             return _core_ops.ell_mxm(local, x, sr)
+    elif packed:
+        from repro.core import bitmap
+        if out_rows <= 0 or out_rows % dsz:
+            raise ValueError(f"transposed mxm_2d needs out_rows padded to "
+                             f"the data axis ({dsz}); got {out_rows}")
+        if dsz > bitmap.NIBBLE_MAX_SHARDS:
+            raise ValueError(f"packed transposed mxm_2d sums nibble lanes "
+                             f"across row shards; {dsz} > "
+                             f"{bitmap.NIBBLE_MAX_SHARDS} would carry")
+
+        def body(idx_l, msk_l, val_l, xw_l):
+            # edge (i -> j) at local row i ORs x's words at row i into
+            # output row j. The cross-shard combine has to ride an add
+            # collective, so: expand local words -> per-bit partial counts
+            # -> saturate to bits -> nibble-pack -> psum_scatter -> saturate.
+            fl = xw_l.shape[1] * bitmap.WORD_BITS
+            bits = bitmap.unpack(xw_l, fl)             # (rows_l, fl)
+            term = jnp.where(msk_l[:, :, None], bits[:, None, :], 0.0)
+            ids = jnp.where(msk_l, idx_l, out_rows).reshape(-1)
+            part = jax.ops.segment_sum(term.reshape(-1, fl), ids,
+                                       num_segments=out_rows + 1)[:out_rows]
+            nib = bitmap.pack_nibbles(part > 0)        # (out_rows, fl/8)
+            tot = jax.lax.psum_scatter(nib, "data", scatter_dimension=0,
+                                       tiled=True)
+            own = bitmap.unpack_nibbles(tot, fl)       # (out_rows/dsz, fl)
+            return bitmap.pack(own)
     else:
         if out_rows <= 0 or out_rows % dsz:
             raise ValueError(f"transposed mxm_2d needs out_rows padded to "
@@ -210,9 +266,13 @@ def khop_counts_2d(mesh: Mesh, n: int, k: int, packed: bool = False,
     k-hop through `grb.mxm` on a sharded handle instead (same collectives,
     one shard_map per hop).
 
-    packed=True — GraphBLAS *bitmap format* on the query axis: 8 queries per
-    byte. The or_and semiring over {0,1} is bitwise, so the per-hop frontier
-    all-gather and the neighbor gathers move 8x fewer bytes (§Perf GE-1).
+    packed=True — GraphBLAS *bitmap format* on the query axis via the public
+    packed-frontier route (`core.bitmap`, 32 queries per uint32 word): the
+    or_and semiring over {0,1} is bitwise, so the per-hop frontier
+    all-gather and the neighbor gathers move 32x fewer bytes (§Perf GE-1).
+    This is the same word layout `grb.mxm` uses automatically for wide
+    or_and frontiers; the probe only exists to keep the whole loop in one
+    shard_map for HLO collective accounting.
 
     sentinel=True — padded slots point at a dedicated all-zero row (index n)
     instead of carrying a validity mask: the mask array and its `where` op
@@ -220,16 +280,12 @@ def khop_counts_2d(mesh: Mesh, n: int, k: int, packed: bool = False,
     """
     fr_axes = _frontier_axes(mesh)
 
+    from repro.core import bitmap
+
     def body(idx_l, msk_l, seed_l):
         # seed_l: (N/data, F_l) this shard's rows of the one-hot frontier
         if packed:
-            # pack query bits: (rows, F_l) int8 -> (rows, ceil(F_l/8)) uint8
-            rows, fl = seed_l.shape
-            pad = (-fl) % 8
-            bits = jnp.pad(seed_l, ((0, 0), (0, pad)))
-            bits = bits.reshape(rows, (fl + pad) // 8, 8).astype(jnp.uint8)
-            weights = (1 << jnp.arange(8, dtype=jnp.uint8))
-            frontier = (bits * weights).sum(axis=-1).astype(jnp.uint8)
+            frontier = bitmap.pack(seed_l)    # (rows, ceil(F_l/32)) uint32
         else:
             frontier = seed_l
         visited = frontier
@@ -245,11 +301,11 @@ def khop_counts_2d(mesh: Mesh, n: int, k: int, packed: bool = False,
             if packed:
                 if not sentinel:
                     gathered = jnp.where(msk_l[..., None], gathered,
-                                         jnp.uint8(0))
+                                         jnp.uint32(0))
                 nxt = jax.lax.reduce(
-                    gathered, jnp.uint8(0), jax.lax.bitwise_or, (1,))
-                nxt = jnp.bitwise_and(nxt, jnp.bitwise_not(visited))
-                visited = jnp.bitwise_or(visited, nxt)
+                    gathered, jnp.uint32(0), jax.lax.bitwise_or, (1,))
+                nxt = bitmap.word_andnot(nxt, visited)
+                visited = bitmap.word_or(visited, nxt)
             else:
                 if not sentinel:
                     gathered = jnp.where(msk_l[..., None], gathered, 0)
@@ -259,11 +315,9 @@ def khop_counts_2d(mesh: Mesh, n: int, k: int, packed: bool = False,
             frontier = nxt
 
         if packed:
-            # unpack once at the end: count_j = popcount(visited bit j) - seed
-            shifts = jnp.arange(8, dtype=jnp.uint8)
-            per_bit = (visited[:, :, None] >> shifts) & jnp.uint8(1)
-            count = per_bit.astype(jnp.int32).sum(axis=0).reshape(-1)
-            count = count[: seed_l.shape[1]]              # drop bit padding
+            # unpack once at the end: reached count per query column
+            count = bitmap.reduce_or_columns(
+                visited, seed_l.shape[1]).astype(jnp.int32)
         else:
             count = visited.astype(jnp.int32).sum(axis=0)
         # rows are sharded over "data": total count sums across row shards

@@ -1,0 +1,97 @@
+"""Pallas TPU kernel: packed or_and gather-reduce  Yw = A_ell (|) Xw.
+
+The inner loop of every structural traversal once the frontier is in
+`core.bitmap` packed form: for each vertex row, OR together the uint32
+frontier words of its neighbors. One word column carries 32 concurrent
+queries, so this is 32 fused boolean mxv's per word — all VPU bitwise ops,
+no MXU, and 32x less VMEM traffic than the float indicator route.
+
+Layout / schedule
+-----------------
+  grid = (n_pad / rows_tile,)       # one step per tile of ELL rows
+  idx (scalar prefetch, SMEM)       # flattened sentinel neighbor ids:
+                                    #   padded / invalid slots point at the
+                                    #   dedicated all-zero row k (the
+                                    #   graph2d sentinel trick) — the kernel
+                                    #   body has no mask operand at all
+  Xw  (k+1, W) uint32, VMEM         # packed frontier + the zero sentinel
+                                    #   row; whole-resident (a packed
+                                    #   frontier is 32x smaller, so even
+                                    #   wide query batches fit)
+  Yw  (rows_tile, W) per step       # OR-accumulated in registers, written
+                                    #   once per row
+
+The fori over degree slots does one dynamic row slice of Xw per edge — the
+gather the XLA reference (`core.ops.ell_mxm_packed`) expresses as a fancy
+index. On CPU the kernel runs in interpret mode for conformance only; the
+`grb` dispatch uses the XLA reference off-TPU (`kernels.ops.ell_mxv_packed`
+resolves this the same way the BSR kernels do).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.ell import ELL
+
+DEFAULT_ROWS_TILE = 8
+
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")
+
+
+def _kernel(idx_ref, x_ref, y_ref, *, deg: int, rows_tile: int):
+    t = pl.program_id(0)
+    base = t * rows_tile * deg
+    w = y_ref.shape[1]
+    for r in range(rows_tile):                 # static unroll, rows_tile small
+
+        def body(s, acc):
+            j = idx_ref[base + r * deg + s]    # sentinel -> the zero row
+            return jnp.bitwise_or(acc, x_ref[pl.dslice(j, 1), :])
+
+        acc = jax.lax.fori_loop(0, deg, body,
+                                jnp.zeros((1, w), dtype=jnp.uint32))
+        y_ref[pl.dslice(r, 1), :] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("rows_tile", "interpret"))
+def ell_mxv_packed(A: ELL, Xw: jnp.ndarray, *,
+                   rows_tile: int = DEFAULT_ROWS_TILE,
+                   interpret: bool = False) -> jnp.ndarray:
+    """Yw[i] = OR_{j in adj(i)} Xw[j] over uint32 frontier words.
+
+    A: ELL adjacency (only indices/mask used — or_and is structural).
+    Xw: (k, W) packed frontier, k = A.shape[1]. Returns (n, W) uint32.
+    """
+    n, k = A.shape
+    deg = A.max_deg
+    w = Xw.shape[1]
+    n_pad = n + (-n) % rows_tile
+
+    # sentinel spelling: invalid / padded slots index the appended zero row
+    idx = jnp.where(A.mask, A.indices, jnp.int32(k)).astype(jnp.int32)
+    idx = jnp.pad(idx, ((0, n_pad - n), (0, 0)), constant_values=k)
+    Xe = jnp.concatenate(
+        [Xw.astype(jnp.uint32), jnp.zeros((1, w), dtype=jnp.uint32)], axis=0)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, deg=deg, rows_tile=rows_tile),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(n_pad // rows_tile,),
+            in_specs=[
+                pl.BlockSpec((k + 1, w), lambda t, idx: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((rows_tile, w), lambda t, idx: (t, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_pad, w), jnp.uint32),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",)),
+    )(idx.reshape(-1), Xe)
+    return out[:n]

@@ -32,6 +32,18 @@ def bsr_mxm(A, X: jnp.ndarray, sr: S.Semiring, *,
                         f_tile=f_tile, interpret=interpret)
 
 
+def ell_mxv_packed(A, Xw: jnp.ndarray, *,
+                   interpret: bool | None = None) -> jnp.ndarray:
+    """Packed or_and gather-reduce over uint32 frontier words (see
+    kernels/bitmap_mxv.py). Takes an ELL store or a GBMatrix handle; the
+    XLA reference is `core.ops.ell_mxm_packed`."""
+    from repro.kernels import bitmap_mxv as _bm
+    store = getattr(A, "store", A)
+    if interpret is None:
+        interpret = _interpret_default()
+    return _bm.ell_mxv_packed(store, Xw, interpret=interpret)
+
+
 def bsr_spgemm(A, B, sr: S.Semiring, *, mask=None, complement: bool = False,
                interpret: bool | None = None) -> BSR:
     """BSR x BSR -> BSR through the Pallas SpGEMM kernel (symbolic phase on

@@ -4,13 +4,26 @@ The binding state is a frontier matrix B (n, F): column j is the reachable
 set (or walk counts) of source binding j. Each Expand is min..max masked
 semiring hops through the `repro.core.grb` surface (mask/complement/transpose
 ride in a Descriptor); node predicates become diagonal masks applied between
-hops. This is the paper's Cypher->linear-algebra translation.
+hops. This is the paper's Cypher->linear-algebra translation. Structural
+(or_and) expands over a wide seed batch ride grb's bitmap-packed frontier
+route automatically (docs/API.md §Bitmap) — nothing here opts in.
 
 `ExecutionContext` is the public execution surface: `node_mask`, `expand`,
 and `project` are the three primitives a scheduler composes — the batched
 server (`repro.engine.server`) drives them directly to answer many
 pattern-compatible queries with one frontier traversal. `execute()` is the
 solo driver over the same context.
+
+Public contract: a context reads one *frozen* Graph (CREATE raises
+TypeError — writes go through `engine.Database`); unknown relations raise
+ValueError naming the ones that exist. `impl` and `mesh` are resolved once
+per context, never per call; with `mesh` set every relation handle is
+distributed on first use (`grb.distribute` — which raises TypeError unless
+the graph was frozen as ELL; `engine.Database` freezes sharded-mode graphs
+as ELL for exactly this reason) and traversal hops run as mesh
+collectives. `project` materializes rows host-side by design (results are
+Python values); `node_mask` evaluates predicates host-side on node
+property columns.
 """
 from __future__ import annotations
 

@@ -25,6 +25,8 @@ def test_quickstart():
     out = run_example("quickstart.py")
     assert "2-hop neighborhood of node 0:" in out
     assert "ConditionalTraverse" in out
+    # the mesh= surface answers the same query identically
+    assert "device mesh: 3" in out
 
 
 def test_serve_queries():
@@ -37,6 +39,8 @@ def test_graph_analytics():
     out = run_example("graph_analytics.py")
     assert "pagerank" in out and "triangles" in out
     assert "wcc" in out and "sssp" in out
+    # the grb.distribute surface runs the unchanged algorithm bit-identically
+    assert "sharded khop" in out and "bit-identical" in out
 
 
 def test_train_lm():
