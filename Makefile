@@ -6,7 +6,7 @@ PY ?= python
 # src for the package, repo root so `benchmarks.*` resolves as a namespace pkg
 export PYTHONPATH := src:.$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast test-ewise test-dist bench-smoke docs-check
+.PHONY: test test-fast test-ewise test-dist test-delta bench-smoke docs-check
 
 # tier-1 verification (the command ROADMAP.md pins)
 test:
@@ -29,6 +29,11 @@ test-ewise:
 # excludes `hypothesis` for image parity).
 test-dist:
 	REPRO_FORCE_DEVICES=8 $(PY) -m pytest -x -q -m distributed
+
+# delta-matrix mutation layer: composition oracles over every storage kind,
+# the engine write path (zero rebuilds), snapshot isolation, AOF coalescing
+test-delta:
+	$(PY) -m pytest -x -q -m delta
 
 # fast end-to-end benchmark pass: validates the masked plus_pair mxm against
 # the trace(A^3)/6 oracle and prints the CSV row (full suite: benchmarks/run.py)

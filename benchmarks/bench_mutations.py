@@ -1,0 +1,135 @@
+"""Live-mutation serving: delta-matrix writes vs stop-the-world rebuilds.
+
+Two suites behind ``python benchmarks/run.py mutations``:
+
+  mutations_*  — end-to-end Database latency under a sustained Poisson
+                 insert/delete stream with interleaved k-hop reads, delta
+                 mode vs the legacy rebuild-on-freeze mode
+                 (``Database(delta=False)``). Reports per-query latency and
+                 the rebuild counters — the paper's "modifying the graph is
+                 done by modifying these matrices" claim made measurable.
+  crossover_*  — the AUTO_DELTA_COMPACT calibration: per pending-ratio
+                 (|deltas| / base nnz), the read overhead of composing the
+                 deltas at query time vs a compacted base, and the one-off
+                 compaction cost; ``breakeven`` is how many reads at that
+                 ratio repay one compaction. The threshold in
+                 repro.core.delta is chosen where the composed read first
+                 costs measurably more than the compacted one.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import grb, semiring as S
+from repro.core.delta import AUTO_DELTA_COMPACT, DeltaMatrix
+from repro.engine import Database
+from repro.graph.datagen import rmat_edges
+
+
+def _timeit(fn, reps: int = 20) -> float:
+    fn()                                    # warm (trace + compile)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+def _populate(db: Database, src, dst, n) -> None:
+    mg = db._graph("g")
+    mg.next_id = n
+    for s, d in zip(src.tolist(), dst.tolist()):
+        if s != d:
+            mg.create_edge(s, "KNOWS", d)
+
+
+def _poisson_stream(rng, src, dst, n, events: int):
+    """(kind, s, d) events: inserts of absent pairs and deletes of live
+    edges, interleaved with Poisson-ish burst sizes."""
+    live = {(int(a), int(b)) for a, b in zip(src, dst) if a != b}
+    out = []
+    while len(out) < events:
+        for _ in range(max(1, rng.poisson(2))):
+            if rng.random() < 0.5 and live:
+                i = rng.integers(0, len(live))
+                pair = list(live)[int(i)]
+                live.discard(pair)
+                out.append(("del", *pair))
+            else:
+                a, b = int(rng.integers(0, n)), int(rng.integers(0, n))
+                if a != b and (a, b) not in live:
+                    live.add((a, b))
+                    out.append(("add", a, b))
+    return out[:events]
+
+
+def run(rows):
+    # -- end-to-end: query latency under a live write stream ------------------
+    # s12 (n=4096, 32k edges): the scale where one GraphBuilder rebuild
+    # (~70ms host) costs more than the read itself — the regime the delta
+    # layer exists for. Headline metric is p50: the mean folds in the
+    # handful of one-off XLA compiles of new bucketed patch shapes.
+    scale, events, reads_per_write = 12, 40, 2
+    src, dst, n = rmat_edges(scale, edge_factor=8, seed=7)
+    rng = np.random.default_rng(7)
+    stream = _poisson_stream(rng, src, dst, n, events)
+    q = "MATCH (a)-[:KNOWS*1..2]->(b) WHERE id(a) = 3 RETURN count(DISTINCT b)"
+    for mode, delta in (("delta", True), ("rebuild", False)):
+        db = Database(delta=delta)
+        _populate(db, src, dst, n)
+        db.query("g", q)                    # base build + compile, off-clock
+        t0 = time.perf_counter()
+        lat = []
+        for kind, a, b in stream:
+            if kind == "add":
+                db.query("g", f"CREATE ({a})-[:KNOWS]->({b})")
+            else:
+                db.query("g", f"DELETE ({a})-[:KNOWS]->({b})")
+            for _ in range(reads_per_write):
+                tq = time.perf_counter()
+                db.query("g", q)
+                lat.append(time.perf_counter() - tq)
+        wall = time.perf_counter() - t0
+        mg = db._graph("g")
+        rows.append((f"mutations_{mode}_s{scale}",
+                     float(np.percentile(lat, 50)) * 1e6,
+                     f"mean_us={np.mean(lat) * 1e6:.0f};"
+                     f"wall_s={wall:.2f};rebuilds={mg.rebuilds};"
+                     f"compactions={mg.compactions}"))
+
+    # -- crossover sweep: composed-read overhead vs compaction cost -----------
+    src, dst, n = rmat_edges(12, edge_factor=8, seed=11)
+    keep = src != dst
+    r, c = src[keep], dst[keep]
+    base = grb.GBMatrix.from_coo(r, c, np.ones(len(r), np.float32),
+                                 (n, n), fmt="ell")
+    x = np.random.default_rng(0).random(n).astype(np.float32)
+    compacted_t = _timeit(
+        lambda: np.asarray(grb.mxv(base, x, S.PLUS_TIMES)))
+    live = {(int(a), int(b)) for a, b in zip(r, c)}
+    for ratio in (0.01, 0.02, 0.05, 0.1, 0.25, 0.5):
+        k = max(1, int(ratio * base.nvals))
+        rng = np.random.default_rng(int(ratio * 100))
+        ops = []
+        while len(ops) < k:
+            a, b = int(rng.integers(0, n)), int(rng.integers(0, n))
+            if a != b and (a, b) not in live:
+                ops.append(("add", a, b, 1.0))
+        dm = DeltaMatrix.wrap(base.store).apply_ops(ops)
+        h = grb.GBMatrix(dm)
+        dm.patch()                          # patch build off-clock (cached)
+        delta_t = _timeit(lambda: np.asarray(grb.mxv(h, x, S.PLUS_TIMES)))
+        t0 = time.perf_counter()
+        dm._mat = None                      # force a fresh fold
+        dm.materialize()
+        compact_cost = time.perf_counter() - t0
+        over = max(delta_t - compacted_t, 1e-9)
+        rows.append((f"crossover_ratio{ratio}", delta_t * 1e6,
+                     f"compacted_us={compacted_t * 1e6:.1f};"
+                     f"overhead_x={delta_t / compacted_t:.2f};"
+                     f"compact_ms={compact_cost * 1e3:.1f};"
+                     f"breakeven_reads={compact_cost / over:.0f}"))
+    rows.append(("crossover_threshold", AUTO_DELTA_COMPACT * 1e6,
+                 f"AUTO_DELTA_COMPACT={AUTO_DELTA_COMPACT}"))
+    return rows

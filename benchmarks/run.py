@@ -10,6 +10,9 @@
   kernels     — format-selection crossover (BSR/ELL/dense)
   triangles   — GraphChallenge (paper future-work item)
   ktruss      — Graphulo k-truss, sparse (masked SpGEMM) vs dense
+  mutations   — query latency under a live Poisson insert/delete stream
+                (delta serving vs rebuild-on-freeze) + the delta-vs-rebuild
+                crossover sweep calibrating AUTO_DELTA_COMPACT
 
 Prints ``name,us_per_call,derived`` CSV. Roofline terms come from the
 dry-run artifacts: ``python -m benchmarks.roofline``.
@@ -32,7 +35,7 @@ if os.environ.get("REPRO_FORCE_DEVICES"):
 
 def main() -> None:
     from benchmarks import bench_khop, bench_kernels, bench_ktruss, \
-        bench_throughput, bench_triangles
+        bench_mutations, bench_throughput, bench_triangles
     rows: list = []
     only = sys.argv[1] if len(sys.argv) > 1 else None
     suites = {
@@ -43,6 +46,7 @@ def main() -> None:
         "kernels": bench_kernels.run,
         "triangles": bench_triangles.run,
         "ktruss": bench_ktruss.run,
+        "mutations": bench_mutations.run,
     }
     print("name,us_per_call,derived")
     for name, fn in suites.items():

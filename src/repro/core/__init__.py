@@ -6,9 +6,10 @@
 # packed boolean frontier form or_and traversals ride (docs/API.md §Bitmap).
 from repro.core import bitmap, grb, ops, semiring
 from repro.core.bsr import BSR
+from repro.core.delta import DeltaMatrix
 from repro.core.ell import ELL
 from repro.core.grb import Descriptor, GBMatrix
 from repro.core.shard import ShardedELL
 
 __all__ = ["bitmap", "grb", "ops", "semiring", "BSR", "ELL", "ShardedELL",
-           "Descriptor", "GBMatrix"]
+           "DeltaMatrix", "Descriptor", "GBMatrix"]

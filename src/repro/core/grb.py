@@ -8,9 +8,10 @@ TPU analog of the GraphBLAS C API subset RedisGraph builds on:
                      ``A_T``/``impl`` kwargs that used to be re-threaded
                      through every caller,
   GrB_Matrix      -> :class:`GBMatrix`    (one handle over dense / BSR / ELL
-                     / ShardedELL storage: format-agnostic dispatch, lazy
-                     cached transpose, nvals/shape introspection, execution
-                     policy resolved once at construction),
+                     / ShardedELL / DeltaMatrix storage: format-agnostic
+                     dispatch, lazy cached transpose, nvals/shape
+                     introspection, execution policy resolved once at
+                     construction),
   GrB_mxm family  -> module-level :func:`mxm` / :func:`mxv` / :func:`vxm` /
                      :func:`ewise_add` / :func:`ewise_mult` / :func:`reduce` /
                      :func:`apply` / :func:`select` / :func:`assign` /
@@ -30,6 +31,16 @@ reduce then lower to the explicit-collective shard_map bodies in
 blocks in transposed form), apply/select run shard-local, and the rest of
 the family falls back to a documented gather-to-host round trip
 (docs/API.md §Sharded).
+
+The fifth storage kind is the *delta* form (`core.delta.DeltaMatrix`,
+docs/API.md §Delta): a frozen base plus pending plus/minus COO deltas, the
+live-mutation path of `engine.Database`. The matmul family and plus/or
+reduce compose the deltas with zero rebuild (row-patch decomposition —
+exact for every semiring); the element-wise family, SpGEMM, descriptor
+masks, and min/max reduce fall back to a cached materialize of the
+effective matrix in the base's own format. Compaction back into the base
+is policy-driven (`AUTO_DELTA_COMPACT`, re-exported here; measured by
+benchmarks/bench_mutations.py).
 
 Boolean traversals additionally ride the *bitmap-packed frontier* form
 (`core.bitmap`, docs/API.md §Bitmap): an or_and mxm/mxv/vxm whose dense
@@ -83,11 +94,12 @@ from repro.core import ops as _ops
 from repro.core import semiring as S
 from repro.core import shard as _shard
 from repro.core.bsr import BSR, SPGEMM_MODES as _SPGEMM_MODES
+from repro.core.delta import AUTO_DELTA_COMPACT, DeltaMatrix  # noqa: F401
 from repro.core.ell import ELL
 from repro.core.shard import ShardedELL
 
 Array = jnp.ndarray
-Storage = Union[BSR, ELL, ShardedELL, Array]
+Storage = Union[BSR, ELL, ShardedELL, DeltaMatrix, Array]
 
 
 # ---------------------------------------------------------------------------
@@ -162,6 +174,8 @@ def _fmt_of(store: Storage) -> str:
         return "ell"
     if isinstance(store, ShardedELL):
         return "sharded"
+    if isinstance(store, DeltaMatrix):
+        return "delta"
     return "dense"
 
 
@@ -245,7 +259,8 @@ def _resolve_impl(requested: str, fmt: str, store: Optional[BSR] = None) -> str:
 
 
 class GBMatrix:
-    """One matrix handle over dense / BSR / ELL / ShardedELL storage.
+    """One matrix handle over dense / BSR / ELL / ShardedELL / DeltaMatrix
+    storage.
 
     The handle carries everything per-call kwargs used to: the storage format,
     the resolved execution policy (``impl``), and a lazily-built, cached
@@ -261,7 +276,7 @@ class GBMatrix:
     def __init__(self, store: Storage, impl: str = "auto", name: str = ""):
         if isinstance(store, GBMatrix):
             store = store.store
-        if not isinstance(store, (BSR, ELL, ShardedELL)):
+        if not isinstance(store, (BSR, ELL, ShardedELL, DeltaMatrix)):
             store = jnp.asarray(store)
         self.store = store
         self.fmt = _fmt_of(store)
@@ -438,6 +453,15 @@ def distribute(obj, mesh, rel: Optional[str] = None) -> GBMatrix:
         if h._T is not None and h._T.fmt == "sharded":
             hh.link_transpose(GBMatrix(h._T.store.to_ell(), name=h._T.name))
         h = hh
+    if h.fmt == "delta":
+        # the mesh layout has no delta lowering: compact into the base
+        # format first (engine.Database freezes mesh-served graphs with
+        # compact=True so serving contexts never pay this per query)
+        hh = GBMatrix(h.store.materialize(), name=h.name)
+        if h._T is not None and h._T.fmt == "delta":
+            hh.link_transpose(GBMatrix(h._T.store.materialize(),
+                                       name=h._T.name))
+        h = hh
     if h.fmt != "ell":
         raise TypeError(
             f"grb.distribute: sharded dispatch needs ELL row storage, got "
@@ -483,11 +507,15 @@ def _dispatch_mxm(A: GBMatrix, B: Array, sr: S.Semiring,
 
 def _mask_storage(mask) -> Optional[Storage]:
     """Unwrap a descriptor mask that may be a GBMatrix handle. Sharded masks
-    gather to a host ELL — mask blending happens host/dense-side."""
+    gather to a host ELL; delta masks compose into their base format (the
+    documented materialize fallback, docs/API.md §Delta) — mask blending
+    happens host/dense-side."""
     if isinstance(mask, GBMatrix):
         mask = mask.store
     if isinstance(mask, ShardedELL):
         mask = mask.to_ell()
+    if isinstance(mask, DeltaMatrix):
+        mask = mask.materialize()
     return mask
 
 
@@ -558,6 +586,38 @@ def _mxm_sharded(A: GBMatrix, B, sr: S.Semiring, d: Descriptor,
     return finalize(d, y, out, sr.identity)
 
 
+def _mxm_delta(A: GBMatrix, B: Array, sr: S.Semiring, d: Descriptor,
+               out: Optional[Array]) -> Array:
+    """Delta-composed semiring matmul, exact for every semiring with zero
+    rebuild: result row i depends only on A row i, so rows no delta touches
+    come from the frozen base's product and delta-touched rows from the
+    product of a small ELL *patch* holding their exact effective content
+    (docs/API.md §Delta). The patch covers only the touched rows, so the
+    composition overhead is O(touched * deg), not a second full product;
+    its rows scatter over the base product (out-of-bounds padding drops).
+    Rows past the base's extent (live node growth) are the add identity
+    unless patched. Both sub-products recurse through :func:`mxm`, so the
+    base keeps its own route — BSR kernel/XLA policy, bitmap-packed or_and
+    frontiers — untouched."""
+    dm: DeltaMatrix = A.store
+    impl = "auto" if A.auto else A.impl
+    baseh = GBMatrix(dm.base, impl=impl, name=A.name)
+    bn, bm = baseh.shape
+    n = dm.shape[0]
+    patch, rows = dm.patch()
+    if patch is None and n == bn:
+        return mxm(baseh, B, sr, d, out=out)       # empty delta: base verbatim
+    yb = mxm(baseh, B[:bm], sr)
+    if n > bn:
+        pad = jnp.full((n - bn, yb.shape[1]), np.float32(sr.identity),
+                       dtype=yb.dtype)
+        yb = jnp.concatenate([yb, pad], axis=0)
+    if patch is not None:
+        yp = mxm(GBMatrix(patch, impl=impl), B, sr)
+        yb = yb.at[rows].set(yp, mode="drop")
+    return finalize(d, yb, out, sr.identity)
+
+
 def _packed_route_ok(A: GBMatrix, B, sr: S.Semiring) -> bool:
     """Static (trace-time) gate for the bitmap-packed or_and route: boolean
     semiring, dense frontier B, dense/ELL storage (BSR keeps the MXU
@@ -617,14 +677,24 @@ def mxm(A, B, sr: S.Semiring, d: Descriptor = NULL,
     if d.transpose_a:
         A = A.T
         d = d.with_(transpose_a=False)
+    # delta operands against a *sparse* partner (the SpGEMM route and its
+    # BSR result type) compose via the cached materialize fallback; against
+    # a dense frontier, A stays delta and takes the row-patch route below
+    if isinstance(B, (GBMatrix, BSR, ELL)) and A.fmt == "delta":
+        A = GBMatrix(A.store.materialize(), impl="auto" if A.auto else A.impl,
+                     name=A.name)
+    if isinstance(B, GBMatrix) and B.fmt == "delta":
+        B = GBMatrix(B.store.materialize(), name=B.name)
     if (isinstance(B, GBMatrix) and A.fmt == "bsr" and B.fmt == "bsr"
             and out is None and sr.mode in _SPGEMM_MODES):
         return _mxm_spgemm(A, B, sr, d)
     if isinstance(B, GBMatrix):
         B = B.to_dense()
-    if isinstance(d.mask, (GBMatrix, BSR, ELL, ShardedELL)):
+    if isinstance(d.mask, (GBMatrix, BSR, ELL, ShardedELL, DeltaMatrix)):
         m = _mask_storage(d.mask)
         d = d.with_(mask=m if isinstance(m, jnp.ndarray) else m.to_dense())
+    if A.fmt == "delta":
+        return _mxm_delta(A, jnp.asarray(B), sr, d, out)
     if _packed_route_ok(A, B, sr):
         return _mxm_packed(A, jnp.asarray(B), sr, d, out)
     fuse = d.mask is not None and out is None and d.mask_only
@@ -677,9 +747,14 @@ def vxm(x: Array, A, sr: S.Semiring, d: Descriptor = NULL,
 # TypeError naming the expected kinds rather than densifying silently.
 
 def _operand_kind(x):
-    """('bsr'|'ell'|'sharded'|'dense', storage) of a handle / store / array."""
+    """('bsr'|'ell'|'sharded'|'dense', storage) of a handle / store / array.
+    Delta operands compose into their base format here (cached materialize,
+    docs/API.md §Delta) — the whole element-wise / assign / extract family
+    sees exact post-mutation entries without per-op special cases."""
     if isinstance(x, GBMatrix):
         x = x.store
+    if isinstance(x, DeltaMatrix):
+        x = x.materialize()
     if isinstance(x, BSR):
         return "bsr", x
     if isinstance(x, ELL):
@@ -1035,6 +1110,40 @@ def _reduce_ell(e: ELL, monoid: S.Monoid, axis) -> Array:
     return (out > 0).astype(jnp.float32) if monoid.name == "or" else out
 
 
+def _reduce_delta(h: "GBMatrix", monoid: S.Monoid, axis) -> Array:
+    """Delta-composed reduce for the plus/or monoids, zero rebuild: per-row
+    (axis=1) uses the same row decomposition as _mxm_delta — untouched rows
+    from the base's reduce, delta-touched rows from the patch's; per-column
+    (axis=0) is the per-row reduce of the *linked transpose twin* (the graph
+    layer maintains twins incrementally); the full reduction folds the
+    per-row vector. Anything else — min/max (absent entries participate),
+    or axis=0 without a twin — takes the cached materialize fallback."""
+    dm: DeltaMatrix = h.store
+    if monoid.name in ("plus", "or"):
+        if axis == 1:
+            rb = reduce(dm.base, monoid, axis=1)
+            if monoid.name == "or":
+                # "any stored entry" uniformly (a dense base's raw max
+                # would leak non-indicator values into the indicator path)
+                rb = (rb != 0).astype(jnp.float32)
+            n, bn = dm.shape[0], dm.base.shape[0]
+            if n > bn:
+                rb = jnp.concatenate(
+                    [rb, jnp.zeros(n - bn, dtype=rb.dtype)])
+            patch, rows = dm.patch()
+            if patch is None:
+                return rb
+            rp = _reduce_ell(patch, monoid, axis=1)
+            return rb.at[rows].set(rp, mode="drop")
+        if axis == 0 and h._T is not None and h._T.fmt == "delta":
+            return _reduce_delta(h._T, monoid, axis=1)
+        if axis is None:
+            tot = jnp.sum(_reduce_delta(h, monoid, axis=1))
+            return (tot > 0).astype(jnp.float32) if monoid.name == "or" \
+                else tot
+    return reduce(dm.materialize(), monoid, axis=axis)
+
+
 def reduce(x, monoid: S.Monoid, axis=None) -> Array:
     """Monoid reduction (GrB_reduce). Sparse operands (GBMatrix or raw
     BSR/ELL) reduce over *stored* entries without densifying for the plus
@@ -1043,7 +1152,12 @@ def reduce(x, monoid: S.Monoid, axis=None) -> Array:
     monoids need the absent entries (dense zeros) and fall back through
     to_dense(). Sharded operands reduce on the mesh (per-row sums are
     shard-local, full/per-column sums psum partials over "data"); the
-    min/max fallback gathers to host like the ELL one densifies."""
+    min/max fallback gathers to host like the ELL one densifies. Delta
+    operands compose (plus/or) with zero rebuild — see _reduce_delta."""
+    s = x.store if isinstance(x, GBMatrix) else x
+    if isinstance(s, DeltaMatrix):
+        h = x if isinstance(x, GBMatrix) else GBMatrix(s)
+        return _reduce_delta(h, monoid, axis)
     kind, X = _operand_kind(x)
     if kind == "bsr":
         return _reduce_bsr(X, monoid, axis)

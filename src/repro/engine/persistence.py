@@ -1,18 +1,57 @@
-"""RDB-analog snapshots: full binary dump of a frozen Graph (npz + manifest).
+"""RDB-analog snapshots + the append-only file (AOF) primitives.
 
 Snapshot + AOF tail = Redis-style point-in-time recovery: restore the
-snapshot, then replay AOF entries appended after it.
+snapshot, then replay AOF entries appended after it. The AOF helpers here
+(`aof_path` / `append_aof` / `iter_aof`) are the durability layer
+`engine.Database` writes through: every mutating command is fsynced to the
+log before acking, and replay streams the lines back for the database to
+**coalesce into deltas** — the replayed writes accumulate in host state and
+fold into delta matrices over one base build on first read, never one
+rebuild per line (see `Database._replay_aof`).
+
+Snapshots work unchanged on delta-served graphs: `rel.A.to_coo()` resolves
+through the handle to `DeltaMatrix.to_coo`, which composes base-minus-
+deletions-plus-additions — a snapshot taken mid-write-stream captures the
+exact effective matrix.
 """
 from __future__ import annotations
 
 import json
 import os
 import tempfile
-from typing import Optional
+from typing import Iterator, Optional, Tuple
 
 import numpy as np
 
 from repro.graph.graph import Graph, GraphBuilder
+
+
+# -- AOF ------------------------------------------------------------------------
+def aof_path(data_dir: str, name: str) -> str:
+    return os.path.join(data_dir, f"{name}.aof")
+
+
+def append_aof(path: str, text: str) -> None:
+    """Append one mutating command, fsynced before the caller acks (the
+    Redis appendfsync-always durability point)."""
+    with open(path, "a") as f:
+        f.write(text.replace("\n", " ") + "\n")
+        f.flush()
+        os.fsync(f.fileno())
+
+
+def iter_aof(data_dir: str) -> Iterator[Tuple[str, str]]:
+    """Yield (graph_name, command_line) across every AOF in the directory,
+    in deterministic (sorted-filename, append) order — the replay stream."""
+    for fn in sorted(os.listdir(data_dir)):
+        if not fn.endswith(".aof"):
+            continue
+        name = fn[: -len(".aof")]
+        with open(os.path.join(data_dir, fn)) as f:
+            for line in f:
+                line = line.strip()
+                if line:
+                    yield name, line
 
 
 def save_snapshot(graph: Graph, path: str) -> None:

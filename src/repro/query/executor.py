@@ -14,14 +14,19 @@ server (`repro.engine.server`) drives them directly to answer many
 pattern-compatible queries with one frontier traversal. `execute()` is the
 solo driver over the same context.
 
-Public contract: a context reads one *frozen* Graph (CREATE raises
+Public contract: a context reads one *frozen* Graph (CREATE / DELETE raise
 TypeError — writes go through `engine.Database`); unknown relations raise
-ValueError naming the ones that exist. `impl` and `mesh` are resolved once
-per context, never per call; with `mesh` set every relation handle is
-distributed on first use (`grb.distribute` — which raises TypeError unless
-the graph was frozen as ELL; `engine.Database` freezes sharded-mode graphs
-as ELL for exactly this reason) and traversal hops run as mesh
-collectives. `project` materializes rows host-side by design (results are
+ValueError naming the ones that exist. Frozen means snapshot-consistent,
+not necessarily rebuilt: `engine.Database` serves views whose relation
+handles may be delta-backed (`core.delta.DeltaMatrix` — a frozen base plus
+pending writes), and every grb call here composes those deltas exactly, so
+a context opened before a writer batch never sees its edits and a context
+opened after sees all of them with zero rebuild. `impl` and `mesh` are
+resolved once per context, never per call; with `mesh` set every relation
+handle is distributed on first use (`grb.distribute` — which raises
+TypeError unless the graph was frozen as ELL; `engine.Database` freezes
+sharded-mode graphs as ELL *with deltas compacted* for exactly this
+reason) and traversal hops run as mesh collectives. `project` materializes rows host-side by design (results are
 Python values); `node_mask` evaluates predicates host-side on node
 property columns.
 """
@@ -289,9 +294,10 @@ class ExecutionContext:
     # -- solo driver ---------------------------------------------------------
     def run(self, query) -> Result:
         q = parse(query) if isinstance(query, str) else query
-        if isinstance(q, A.CreateQuery):
-            raise TypeError("CREATE goes through engine.Database, not a read "
-                            "ExecutionContext")
+        if isinstance(q, (A.CreateQuery, A.DeleteQuery)):
+            kw = "CREATE" if isinstance(q, A.CreateQuery) else "DELETE"
+            raise TypeError(f"{kw} goes through engine.Database, not a read "
+                            f"ExecutionContext")
         p = plan(q)
 
         src_mask = self.node_mask(p.src_label, p.var_preds.get(p.src_var))

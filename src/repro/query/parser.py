@@ -19,7 +19,7 @@ _TOKEN = re.compile(r"""
 """, re.VERBOSE)
 
 KEYWORDS = {"MATCH", "WHERE", "RETURN", "LIMIT", "AND", "OR", "NOT", "COUNT",
-            "DISTINCT", "ID", "IN", "CREATE", "AS"}
+            "DISTINCT", "ID", "IN", "CREATE", "DELETE", "AS"}
 
 
 def tokenize(s: str) -> List[tuple]:
@@ -83,6 +83,8 @@ class Parser:
     def parse(self):
         if self.peek() == "CREATE":
             return self.parse_create()
+        if self.peek() == "DELETE":
+            return self.parse_delete()
         return self.parse_match()
 
     # -- CREATE --------------------------------------------------------------
@@ -112,12 +114,38 @@ class Parser:
                     label = self.expect("NAME")[1]
                 props = self.parse_props()
                 self.expect(")")
-                if "id" not in props:
-                    raise SyntaxError("CREATE node needs explicit {id: ...}")
+                # "id" is optional: the engine auto-assigns next_id
                 items.append(A.CreateNode(label, props))
             more = bool(self.accept(",")) or self.peek() == "CREATE"
         self.expect("EOF")
         return A.CreateQuery(items)
+
+    # -- DELETE --------------------------------------------------------------
+    def parse_delete(self):
+        items = []
+        self.expect("DELETE")
+        more = True
+        while more:
+            self.accept("DELETE")
+            self.expect("(")
+            nid = int(self.expect("NUM")[1])
+            self.expect(")")
+            if self.peek() == "-":      # DELETE (3)-[:R]->(5)
+                self.expect("-")
+                self.expect("[")
+                self.expect(":")
+                rel = self.expect("NAME")[1]
+                self.expect("]")
+                self.expect("->")
+                self.expect("(")
+                dst = int(self.expect("NUM")[1])
+                self.expect(")")
+                items.append(A.DeleteEdge(nid, rel, dst))
+            else:                       # DELETE (3): whole-node tombstone
+                items.append(A.DeleteNode(nid))
+            more = bool(self.accept(",")) or self.peek() == "DELETE"
+        self.expect("EOF")
+        return A.DeleteQuery(items)
 
     def parse_props(self):
         props = {}

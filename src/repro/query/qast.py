@@ -6,7 +6,11 @@ Supported:
   WHERE conjunctions of single-variable predicates over node properties,
         id(v) = k / id(v) IN [..] seed selectors; OR/NOT within a predicate
   RETURN v | v.prop | count(v) | count(DISTINCT v)  (+ LIMIT)
-  CREATE (:Label {id: i, prop: v}) | CREATE (i)-[:R]->(j)   (explicit ids)
+  CREATE (:Label {id: i, prop: v}) | CREATE (i)-[:R]->(j)
+         (node ids optional — engine.MutableGraph auto-assigns next_id)
+  DELETE (i)-[:R]->(j) | DELETE (i)   (edge / whole-node forms; node
+         deletion tombstones: incident edges, labels and props go, the id
+         row stays allocated)
 
 Semantics note (DESIGN.md): variable-length expansion uses BFS distinct-vertex
 semantics (the TigerGraph k-hop benchmark definition), not Cypher trail
@@ -76,7 +80,7 @@ class MatchQuery:
 @dataclasses.dataclass
 class CreateNode:
     label: Optional[str]
-    props: dict              # must include "id"
+    props: dict              # "id" optional: the engine auto-assigns next_id
 
 
 @dataclasses.dataclass
@@ -88,4 +92,21 @@ class CreateEdge:
 
 @dataclasses.dataclass
 class CreateQuery:
+    items: list
+
+
+@dataclasses.dataclass
+class DeleteNode:
+    id: int
+
+
+@dataclasses.dataclass
+class DeleteEdge:
+    src: int
+    rel: str
+    dst: int
+
+
+@dataclasses.dataclass
+class DeleteQuery:
     items: list

@@ -1,0 +1,440 @@
+"""Delta-matrix mutation layer (core.delta + the engine write path).
+
+Three layers of guarantees:
+
+  * DeltaMatrix composition is *exact*: every grb op on a delta handle
+    equals the same op on a from-scratch rebuild of the effective matrix
+    (oracle grid below: CREATE/DELETE streams on K4 / C5 / Petersen /
+    RMAT s6-s8 over dense / BSR / ELL bases) — bit-identical for the
+    integer-valued semirings (or_and / min_plus / plus_pair), atol 1e-5 for
+    real-valued pagerank (summation-order rounding, the PR4 precedent).
+  * The engine serves writes with ZERO rebuilds: one base build per format,
+    functional catch-up after, compaction only past AUTO_DELTA_COMPACT.
+  * Snapshot isolation + crash recovery: a reader frozen before a writer
+    batch never sees its edits; AOF replay of interleaved CREATE/DELETE
+    converges to the live run's nvals and query results.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro import algorithms as alg
+from repro.core import grb, semiring as S
+from repro.core.delta import AUTO_DELTA_COMPACT, DeltaMatrix, needs_compaction
+from repro.engine import Database
+from repro.graph.datagen import rmat_edges
+
+pytestmark = pytest.mark.delta
+
+
+# -- fixtures: named graphs + deterministic mutation streams --------------------
+def _dense_of(name: str) -> np.ndarray:
+    if name == "K4":                       # complete digraph on 4 vertices
+        D = np.ones((4, 4), np.float32) - np.eye(4, dtype=np.float32)
+    elif name == "C5":                     # directed 5-cycle
+        D = np.zeros((5, 5), np.float32)
+        D[np.arange(5), (np.arange(5) + 1) % 5] = 1.0
+    elif name == "Petersen":               # both directions of the 15 edges
+        outer = [(i, (i + 1) % 5) for i in range(5)]
+        spokes = [(i, i + 5) for i in range(5)]
+        inner = [(5 + i, 5 + (i + 2) % 5) for i in range(5)]
+        D = np.zeros((10, 10), np.float32)
+        for a, b in outer + spokes + inner:
+            D[a, b] = D[b, a] = 1.0
+    else:                                  # rmat_s6 / rmat_s7 / rmat_s8
+        scale = int(name.split("_s")[1])
+        src, dst, n = rmat_edges(scale, edge_factor=8, seed=scale)
+        keep = src != dst
+        D = np.zeros((n, n), np.float32)
+        D[src[keep], dst[keep]] = 1.0
+    return D
+
+
+def _stream(D: np.ndarray, seed: int = 0, frac: float = 0.15):
+    """Deterministic CREATE/DELETE op stream: ~frac*nnz deletions of
+    existing entries interleaved with as many insertions of currently-absent
+    ones (tracked against the evolving matrix, so a dense graph like K4 can
+    only re-add what it just deleted — the re-add path gets exercised)."""
+    rng = np.random.default_rng(seed)
+    n = D.shape[0]
+    W = D.copy()
+    er, ec = np.nonzero(D)
+    k = max(2, int(frac * len(er)))
+    drop = rng.choice(len(er), size=min(k, len(er)), replace=False)
+    ops = []
+    for i in drop:
+        ops.append(("del", int(er[i]), int(ec[i]), 0.0))
+        W[er[i], ec[i]] = 0.0
+        while True:                        # one absent-pair insertion each
+            a, b = rng.integers(0, n, size=2)
+            if a != b and W[a, b] == 0:
+                break
+        ops.append(("add", int(a), int(b), 1.0))
+        W[a, b] = 1.0
+    return ops
+
+
+def _apply_dense(D: np.ndarray, ops) -> np.ndarray:
+    out = D.copy()
+    for kind, i, j, w in ops:
+        out[i, j] = w if kind == "add" else 0.0
+    return out
+
+
+def _delta_handle(D: np.ndarray, ops, fmt: str,
+                  block: int = 32) -> grb.GBMatrix:
+    """Delta handle over a frozen `fmt` base of D with `ops` pending, the
+    linked transpose twin maintained incrementally (swapped ops) — exactly
+    what engine.MutableGraph serves."""
+    base = grb.GBMatrix.from_dense(D, fmt=fmt, block=block)
+    baseT = grb.GBMatrix.from_dense(D.T, fmt=fmt, block=block)
+    fwd = DeltaMatrix.wrap(base.store).apply_ops(ops)
+    twin = DeltaMatrix.wrap(baseT.store).apply_ops(
+        [(k, j, i, w) for k, i, j, w in ops])
+    h = grb.GBMatrix(fwd, name="A")
+    h.link_transpose(grb.GBMatrix(twin, name="A^T"))
+    return h
+
+
+GRAPHS = ["K4", "C5", "Petersen", "rmat_s6", "rmat_s7", "rmat_s8"]
+FMTS = ["dense", "bsr", "ell"]
+
+
+# -- DeltaMatrix unit behavior ---------------------------------------------------
+class TestDeltaMatrix:
+    def test_wrap_and_effective_algebra(self):
+        D = _dense_of("Petersen")
+        dm = DeltaMatrix.wrap(grb.GBMatrix.from_dense(D, fmt="ell").store)
+        assert dm.nnz == int((D != 0).sum()) and dm.pending == 0
+        ops = [("del", 0, 1, 0.0), ("add", 0, 3, 2.0), ("add", 1, 1, 1.0)]
+        d2 = dm.apply_ops(ops)
+        E = _apply_dense(D, ops)
+        assert np.array_equal(np.asarray(d2.to_dense()), E)
+        assert d2.nnz == int((E != 0).sum())
+        # functional: the pre-batch view is untouched (snapshot isolation)
+        assert np.array_equal(np.asarray(dm.to_dense()), D)
+
+    def test_invariants_zero_add_readd_missing_delete(self):
+        D = _dense_of("C5")
+        dm = DeltaMatrix.wrap(grb.GBMatrix.from_dense(D, fmt="dense").store)
+        # add of explicit 0 == delete (stored iff nonzero, repo-wide)
+        assert dm.apply_ops([("add", 0, 1, 0.0)]).nnz == dm.nnz - 1
+        # deleting an absent entry is a no-op
+        assert dm.apply_ops([("del", 3, 3, 0.0)]).nnz == dm.nnz
+        # delete-then-re-add round-trips; later ops win within a batch
+        d2 = dm.apply_ops([("del", 0, 1, 0.0), ("add", 0, 1, 5.0)])
+        assert d2.nnz == dm.nnz
+        assert float(np.asarray(d2.to_dense())[0, 1]) == 5.0
+        # plus/minus invariant: disjoint, minus inside the base
+        assert len(np.intersect1d(
+            d2.plus_r * 5 + d2.plus_c, d2.minus_r * 5 + d2.minus_c)) == 0
+
+    def test_growth_and_bounds(self):
+        D = _dense_of("K4")
+        dm = DeltaMatrix.wrap(grb.GBMatrix.from_dense(D, fmt="bsr",
+                                                      block=4).store)
+        big = dm.apply_ops([("add", 6, 2, 1.0)], grow_to=(7, 7))
+        assert big.shape == (7, 7) and big.nnz == dm.nnz + 1
+        assert np.asarray(big.to_dense())[6, 2] == 1.0
+        with pytest.raises(ValueError):
+            dm.apply_ops([("add", 9, 0, 1.0)])       # out of bounds
+        with pytest.raises(ValueError):
+            big.resize((4, 4))                       # never shrinks
+
+    @pytest.mark.parametrize("fmt", FMTS)
+    def test_to_coo_transpose_compact(self, fmt):
+        D = _dense_of("rmat_s6")
+        ops = _stream(D, seed=1)
+        dm = DeltaMatrix.wrap(
+            grb.GBMatrix.from_dense(D, fmt=fmt, block=32).store).apply_ops(ops)
+        E = _apply_dense(D, ops)
+        r, c, v = dm.to_coo()
+        R = np.zeros_like(E)
+        R[r, c] = v
+        assert np.array_equal(R, E)
+        assert np.array_equal(np.asarray(dm.transpose().to_dense()), E.T)
+        folded = dm.compact()
+        assert folded.pending == 0 and folded.nnz == dm.nnz
+        assert np.array_equal(np.asarray(folded.to_dense()), E)
+        assert folded.fmt == fmt                    # compacts into base kind
+
+    def test_compaction_policy_threshold(self):
+        D = _dense_of("Petersen")
+        dm = DeltaMatrix.wrap(grb.GBMatrix.from_dense(D, fmt="ell").store)
+        assert not needs_compaction(dm)
+        k = int(AUTO_DELTA_COMPACT * dm.base_nnz) + 1
+        ops = [("add", i % 10, (i * 7 + 3) % 10, 1.0) for i in range(k * 2)]
+        d2 = dm.apply_ops(ops)
+        if d2.pending > AUTO_DELTA_COMPACT * d2.base_nnz:
+            assert needs_compaction(d2)
+        assert not needs_compaction(d2.compact())
+
+
+# -- grb conformance: every op vs the rebuilt-effective oracle -------------------
+@pytest.mark.parametrize("fmt", FMTS)
+def test_grb_ops_match_rebuild(fmt):
+    D = _dense_of("rmat_s6")
+    ops = _stream(D, seed=2)
+    E = _apply_dense(D, ops)
+    h = _delta_handle(D, ops, fmt)
+    o = grb.GBMatrix.from_dense(E, fmt=fmt, block=32)
+    o.link_transpose(grb.GBMatrix.from_dense(E.T, fmt=fmt, block=32))
+    assert h.nvals == o.nvals == int((E != 0).sum())
+    rng = np.random.default_rng(3)
+    B = rng.random((D.shape[0], 9)).astype(np.float32)
+    for sr in (S.OR_AND, S.MIN_PLUS, S.PLUS_PAIR):
+        got = np.asarray(grb.mxm(h, B, sr))
+        want = np.asarray(grb.mxm(o, B, sr))
+        assert np.array_equal(got, want), sr.name     # bit-identical
+        gotT = np.asarray(grb.mxm(h, B, sr, grb.TRANSPOSE_A))
+        wantT = np.asarray(grb.mxm(o, B, sr, grb.TRANSPOSE_A))
+        assert np.array_equal(gotT, wantT), sr.name
+    assert np.allclose(np.asarray(grb.mxm(h, B, S.PLUS_TIMES)),
+                       np.asarray(grb.mxm(o, B, S.PLUS_TIMES)), atol=1e-5)
+    # masked write + accum blend
+    M = (rng.random(B.shape) < 0.5).astype(np.float32)
+    d = grb.Descriptor(mask=M, accum=S.PLUS)
+    got = np.asarray(grb.mxm(h, B, S.OR_AND, d, out=B))
+    want = np.asarray(grb.mxm(o, B, S.OR_AND, d, out=B))
+    assert np.array_equal(got, want)
+    # mxv / vxm (the pagerank pull shapes)
+    x = rng.random(D.shape[0]).astype(np.float32)
+    assert np.allclose(np.asarray(grb.mxv(h, x, S.PLUS_TIMES)),
+                       np.asarray(grb.mxv(o, x, S.PLUS_TIMES)), atol=1e-5)
+    assert np.allclose(np.asarray(grb.vxm(x, h, S.PLUS_TIMES)),
+                       np.asarray(grb.vxm(x, o, S.PLUS_TIMES)), atol=1e-5)
+    # reduce: composed plus/or all axes, min/max materialize fallback
+    for m in (S.PLUS, S.OR, S.MIN, S.MAX):
+        for ax in (None, 0, 1):
+            got = np.asarray(grb.reduce(h, m, axis=ax))
+            want = np.asarray(grb.reduce(o, m, axis=ax))
+            assert np.allclose(got, want), (m.name, ax)
+    # element-wise family through the materialize fallback
+    other = grb.GBMatrix.from_dense((E * 0.5), fmt=fmt, block=32)
+    ga = grb.ewise_add(h, other, S.PLUS)
+    wa = grb.ewise_add(o, other, S.PLUS)
+    assert np.allclose(np.asarray(grb.GBMatrix.wrap(ga).to_dense()),
+                       np.asarray(grb.GBMatrix.wrap(wa).to_dense()))
+    gm = grb.ewise_mult(h, other, S.MIN)
+    wm = grb.ewise_mult(o, other, S.MIN)
+    assert np.allclose(np.asarray(grb.GBMatrix.wrap(gm).to_dense()),
+                       np.asarray(grb.GBMatrix.wrap(wm).to_dense()))
+    gs = grb.select(lambda v: v > 0.5, h)
+    ws = grb.select(lambda v: v > 0.5, o)
+    assert np.array_equal(np.asarray(grb.GBMatrix.wrap(gs).to_dense()),
+                          np.asarray(grb.GBMatrix.wrap(ws).to_dense()))
+    # extract a block through the delta
+    ge = grb.extract(h, rows=np.arange(8), cols=np.arange(8))
+    we = grb.extract(o, rows=np.arange(8), cols=np.arange(8))
+    assert np.array_equal(np.asarray(grb.GBMatrix.wrap(ge).to_dense()),
+                          np.asarray(grb.GBMatrix.wrap(we).to_dense()))
+    # delta handle as a descriptor mask (the triangles shape)
+    t1 = grb.mxm(h, h, S.PLUS_PAIR, grb.Descriptor(mask=h))
+    t2 = grb.mxm(o, o, S.PLUS_PAIR, grb.Descriptor(mask=o))
+    assert np.array_equal(np.asarray(grb.GBMatrix.wrap(t1).to_dense()),
+                          np.asarray(grb.GBMatrix.wrap(t2).to_dense()))
+
+
+# -- the acceptance grid: all five algorithms, delta vs rebuild -----------------
+@pytest.mark.parametrize("gname", GRAPHS)
+@pytest.mark.parametrize("fmt", FMTS)
+def test_algorithms_delta_vs_rebuild(gname, fmt):
+    D = _dense_of(gname)
+    ops = _stream(D, seed=sum(map(ord, gname)))
+    E = _apply_dense(D, ops)
+    h = _delta_handle(D, ops, fmt)
+    o = grb.GBMatrix.from_dense(E, fmt=fmt, block=32)
+    o.link_transpose(grb.GBMatrix.from_dense(E.T, fmt=fmt, block=32))
+    n = D.shape[0]
+    seeds = np.arange(min(8, n))
+    # bfs levels — or_and, bit-identical
+    assert np.array_equal(np.asarray(alg.bfs_levels(h, seeds)),
+                          np.asarray(alg.bfs_levels(o, seeds)))
+    # sssp — min_plus, bit-identical
+    assert np.array_equal(np.asarray(alg.sssp(h, seeds)),
+                          np.asarray(alg.sssp(o, seeds)))
+    # wcc — or_and closures + or-reduce, bit-identical labels
+    assert np.array_equal(np.asarray(alg.wcc(h)), np.asarray(alg.wcc(o)))
+    # triangles — plus_pair under the adjacency mask, exact integer counts
+    assert int(alg.triangle_count(h)) == int(alg.triangle_count(o))
+    # pagerank — real-valued plus_times: summation-order atol (PR4 precedent)
+    assert np.allclose(np.asarray(alg.pagerank(h, iters=20)),
+                       np.asarray(alg.pagerank(o, iters=20)), atol=1e-5)
+
+
+# -- engine: queries on a mutated graph, delta-served vs rebuild ----------------
+def _mutate_db(db: Database, name: str = "g"):
+    """One scripted CREATE/DELETE session with interleaved reads."""
+    db.query(name, "CREATE (:Person {id: 0, age: 30}), "
+                   "(:Person {id: 1, age: 40}), (:Person {id: 2, age: 50}), "
+                   "(:Person {id: 3, age: 60})")
+    db.query(name, "CREATE (0)-[:KNOWS]->(1), (1)-[:KNOWS]->(2), "
+                   "(2)-[:KNOWS]->(3), (3)-[:KNOWS]->(0)")
+    db.query(name, "MATCH (a)-[:KNOWS]->(b) RETURN count(b)")  # freeze a base
+    db.query(name, "DELETE (1)-[:KNOWS]->(2)")
+    db.query(name, "CREATE (1)-[:VISITS]->(3), (0)-[:KNOWS]->(2)")
+    db.query(name, "CREATE (:Person {age: 70})")               # auto-id: 4
+    db.query(name, "CREATE (4)-[:KNOWS]->(0)")
+    db.query(name, "DELETE (3)")                               # tombstone
+
+
+QUERIES = [
+    "MATCH (a)-[:KNOWS*1..3]->(b) WHERE id(a) = 0 RETURN count(DISTINCT b)",
+    "MATCH (a)-[:KNOWS]->(b) RETURN a, b",
+    "MATCH (a:Person)-[:KNOWS]->(b) WHERE b.age > 35 RETURN a, b",
+    "MATCH (a)-[:VISITS]->(b) RETURN count(b)",
+    "MATCH (a)<-[:KNOWS]-(b) WHERE id(a) = 0 RETURN count(DISTINCT b)",
+]
+
+
+def test_queries_delta_vs_rebuild_bit_identical():
+    live, oracle = Database(delta=True), Database(delta=False)
+    _mutate_db(live)
+    _mutate_db(oracle)
+    for q in QUERIES:
+        assert live.query("g", q).rows == oracle.query("g", q).rows, q
+    mg = live._graph("g")
+    assert mg.rebuilds == 1          # the one base build; writes never rebuilt
+    assert oracle._graph("g").rebuilds > 1
+
+
+def test_zero_rebuilds_under_write_stream():
+    db = Database()
+    mg = db._graph("g")
+    db.query("g", "CREATE (:N {id: 0}), (:N {id: 1})")
+    db.query("g", "CREATE (0)-[:R]->(1)")
+    for i in range(2, 20):
+        db.query("g", f"CREATE (:N {{id: {i}}})")
+        db.query("g", f"CREATE ({i - 1})-[:R]->({i})")
+        res = db.query("g", f"MATCH (a)-[:R*1..3]->(b) WHERE id(a) = 0 "
+                            f"RETURN count(DISTINCT b)")
+        assert res.scalar() == min(3, i)
+    assert mg.rebuilds == 1
+
+
+def test_compaction_triggers_and_stays_correct():
+    db = Database()
+    mg = db._graph("g")
+    db.query("g", "CREATE (:N {id: 0}), (:N {id: 1}), (:N {id: 2})")
+    db.query("g", "CREATE (0)-[:R]->(1), (1)-[:R]->(2)")
+    db.query("g", "MATCH (a)-[:R]->(b) RETURN count(b)")   # base: 2 entries
+    # stream enough inserts past AUTO_DELTA_COMPACT * base_nnz to force folds
+    for i in range(3, 40):
+        db.query("g", f"CREATE (:N {{id: {i}}})")
+        db.query("g", f"CREATE (0)-[:R]->({i})")
+        db.query("g", "MATCH (a)-[:R]->(b) WHERE id(a) = 0 RETURN count(b)")
+    assert mg.compactions > 0
+    assert mg.rebuilds == 1
+    res = db.query("g", "MATCH (a)-[:R]->(b) WHERE id(a) = 0 RETURN count(b)")
+    assert res.scalar() == 38        # 1 original + 37 streamed
+
+
+# -- snapshot isolation ----------------------------------------------------------
+def test_snapshot_isolation_reader_never_sees_writer_batch():
+    db = Database()
+    db.query("g", "CREATE (:N {id: 0}), (:N {id: 1}), (:N {id: 2})")
+    db.query("g", "CREATE (0)-[:R]->(1), (1)-[:R]->(2)")
+    reader = db.context("g")                       # frozen pre-batch
+    q = "MATCH (a)-[:R*1..2]->(b) WHERE id(a) = 0 RETURN count(DISTINCT b)"
+    before = reader.run(q).rows
+    # writer streams a batch: the reader's view must not move
+    for i in range(3, 10):
+        db.query("g", f"CREATE (:N {{id: {i}}}), ({i - 1})-[:R]->({i})")
+        db.query("g", "DELETE (0)-[:R]->(1)" if i == 5
+                 else f"MATCH (a)-[:R]->(b) WHERE id(a) = {i - 1} "
+                      f"RETURN count(b)")
+        assert reader.run(q).rows == before
+    # a context opened now sees everything
+    after = db.query("g", q)
+    assert after.rows != before
+    assert after.scalar() == 0                     # (0)->(1) was deleted
+
+
+# -- crash recovery ---------------------------------------------------------------
+def test_aof_replay_interleaved_creates_deletes_converges(tmp_path):
+    q_count = "MATCH (a)-[:R*1..4]->(b) WHERE id(a) = 0 RETURN count(DISTINCT b)"
+    db = Database(data_dir=str(tmp_path))
+    db.query("g", "CREATE (:N {id: 0}), (:N {id: 1}), (:N {id: 2}), "
+                  "(:N {id: 3})")
+    db.query("g", "CREATE (0)-[:R]->(1), (1)-[:R]->(2), (2)-[:R]->(3)")
+    db.query("g", "DELETE (1)-[:R]->(2)")
+    db.query("g", "CREATE (1)-[:R]->(3), (3)-[:R]->(2)")
+    db.query("g", "CREATE (:N)")                   # auto-id: 4
+    db.query("g", "CREATE (2)-[:R]->(4)")
+    db.query("g", "DELETE (3)")                    # node tombstone
+    live_rows = db.query("g", q_count).rows
+    live_nvals = db._graph("g").freeze().relation("R").A.nvals
+    del db                                          # crash
+    db2 = Database(data_dir=str(tmp_path))
+    assert db2.query("g", q_count).rows == live_rows
+    g2 = db2._graph("g").freeze()
+    assert g2.relation("R").A.nvals == live_nvals
+    assert db2._graph("g").rebuilds == 1           # replay coalesced
+
+
+def test_aof_replay_auto_assigned_ids_round_trip(tmp_path):
+    db = Database(data_dir=str(tmp_path))
+    db.query("g", "CREATE (:Person {age: 10})")    # auto -> 0
+    db.query("g", "CREATE (:Person {id: 5, age: 20})")
+    db.query("g", "CREATE (:Person {age: 30})")    # auto -> 6
+    db.query("g", "CREATE (0)-[:R]->(6)")
+    rows = db.query("g", "MATCH (a:Person)-[:R]->(b) WHERE b.age > 25 "
+                         "RETURN a, b").rows
+    assert rows == [(0, 6)]
+    del db
+    db2 = Database(data_dir=str(tmp_path))
+    assert db2._graph("g").next_id == 7
+    assert db2.query("g", "MATCH (a:Person)-[:R]->(b) WHERE b.age > 25 "
+                          "RETURN a, b").rows == rows
+
+
+# -- query surface: DELETE grammar ------------------------------------------------
+def test_delete_parses_and_routes():
+    from repro.query import qast as A
+    from repro.query.parser import parse
+    q = parse("DELETE (3)-[:KNOWS]->(5), (7)")
+    assert isinstance(q, A.DeleteQuery)
+    assert q.items == [A.DeleteEdge(3, "KNOWS", 5), A.DeleteNode(7)]
+    db = Database()
+    db.query("g", "CREATE (:N {id: 0}), (:N {id: 1})")
+    db.query("g", "CREATE (0)-[:R]->(1)")
+    res = db.query("g", "DELETE (0)-[:R]->(1)")
+    assert res.columns == ["nodes_deleted", "edges_deleted"]
+    assert res.rows == [(0, 1)]
+    # deleting an absent edge is a counted no-op, not an error
+    assert db.query("g", "DELETE (0)-[:R]->(1)").rows == [(0, 0)]
+
+
+def test_delete_rejected_by_read_context():
+    from repro.query.executor import ExecutionContext
+    db = Database()
+    db.query("g", "CREATE (:N {id: 0}), (:N {id: 1})")
+    db.query("g", "CREATE (0)-[:R]->(1)")
+    ctx = db.context("g")
+    with pytest.raises(TypeError, match="DELETE goes through"):
+        ctx.run("DELETE (0)-[:R]->(1)")
+
+
+def test_create_without_id_auto_assigns():
+    db = Database()
+    res = db.query("g", "CREATE (:Person {age: 41}), (:Person {age: 42})")
+    assert res.rows == [(2, 0)]
+    rows = db.query("g", "MATCH (a:Person) WHERE a.age > 41 RETURN a").rows
+    assert rows == [(1,)]
+    assert db._graph("g").next_id == 2
+
+
+# -- mesh serving of a mutated graph ----------------------------------------------
+def test_mesh_context_compacts_deltas():
+    """context(mesh=...) must hand grb.distribute plain ELL (no delta
+    lowering exists); with a single-device mesh unavailable in tier-1 we
+    check the compacted freeze directly."""
+    db = Database()
+    db.query("g", "CREATE (:N {id: 0}), (:N {id: 1}), (:N {id: 2})")
+    db.query("g", "CREATE (0)-[:R]->(1)")
+    db.query("g", "MATCH (a)-[:R]->(b) RETURN count(b)")
+    db.query("g", "CREATE (1)-[:R]->(2)")
+    g = db._graph("g").freeze(fmt="ell", compact=True)
+    assert g.relation("R").A.fmt == "ell"          # plain, distribute-ready
+    assert g.relation("R").A.nvals == 2
+    assert g.relation("R").A.T.fmt == "ell"

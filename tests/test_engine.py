@@ -32,6 +32,64 @@ def test_aof_replay_recovers_after_crash(tmp_path):
     assert res.scalar() == 2  # reaches 1 and 2 (0 excluded as seed)
 
 
+def test_delete_edge_and_node_forms(tmp_path):
+    db = Database(data_dir=str(tmp_path))
+    db.query("g", "CREATE (:Person {id: 0}), (:Person {id: 1}), "
+                  "(:Person {id: 2})")
+    db.query("g", "CREATE (0)-[:KNOWS]->(1), (1)-[:KNOWS]->(2), "
+                  "(2)-[:KNOWS]->(0)")
+    res = db.query("g", "DELETE (1)-[:KNOWS]->(2)")
+    assert res.columns == ["nodes_deleted", "edges_deleted"]
+    assert res.rows == [(0, 1)]
+    assert db.query("g", "MATCH (a)-[:KNOWS*1..3]->(b) WHERE id(a) = 0 "
+                         "RETURN count(DISTINCT b)").scalar() == 1
+    # whole-node tombstone takes its incident edges with it
+    res = db.query("g", "DELETE (0)")
+    assert res.rows == [(1, 2)]       # (0)->(1) and (2)->(0)
+    assert db.query("g", "MATCH (a)-[:KNOWS]->(b) "
+                         "RETURN count(b)").scalar() == 0
+    # deletes are AOF-logged: a crash-restart converges to the same state
+    del db
+    db2 = Database(data_dir=str(tmp_path))
+    assert db2.query("g", "MATCH (a)-[:KNOWS]->(b) "
+                          "RETURN count(b)").scalar() == 0
+
+
+def test_create_auto_id_aof_round_trip(tmp_path):
+    """create_node without an explicit {id: ...} auto-assigns next_id (the
+    KeyError regression), and the assignment replays identically."""
+    db = Database(data_dir=str(tmp_path))
+    db.query("g", "CREATE (:Person {age: 30}), (:Person {age: 40})")
+    db.query("g", "CREATE (0)-[:KNOWS]->(1)")
+    rows = db.query("g", "MATCH (a:Person)-[:KNOWS]->(b) WHERE b.age > 35 "
+                         "RETURN a, b").rows
+    assert rows == [(0, 1)]
+    del db
+    db2 = Database(data_dir=str(tmp_path))
+    assert db2._graph("g").next_id == 2
+    assert db2.query("g", "MATCH (a:Person)-[:KNOWS]->(b) WHERE b.age > 35 "
+                          "RETURN a, b").rows == rows
+
+
+def test_snapshot_of_delta_served_graph(tmp_path):
+    """save_snapshot on a mid-write-stream delta view captures the exact
+    effective matrix (DeltaMatrix.to_coo composes it)."""
+    db = Database()
+    db.query("g", "CREATE (:Person {id: 0, age: 30}), "
+                  "(:Person {id: 1, age: 40}), (:Person {id: 2, age: 50})")
+    db.query("g", "CREATE (0)-[:KNOWS]->(1), (1)-[:KNOWS]->(2)")
+    db.query("g", "MATCH (a)-[:KNOWS]->(b) RETURN count(b)")  # freeze a base
+    db.query("g", "DELETE (0)-[:KNOWS]->(1)")
+    db.query("g", "CREATE (2)-[:KNOWS]->(0)")                 # pending deltas
+    g = db._graph("g").freeze()
+    path = str(tmp_path / "snap.npz")
+    save_snapshot(g, path)
+    g2 = load_snapshot(path)
+    q = "MATCH (a)-[:KNOWS*1..3]->(b) WHERE id(a) = 1 RETURN count(DISTINCT b)"
+    assert execute(g2, q).rows == execute(g, q).rows
+    assert g2.relation("KNOWS").A.nvals == 2
+
+
 def test_snapshot_roundtrip(tmp_path):
     g = social_graph(n=128, seed=3)
     path = str(tmp_path / "snap.npz")
