@@ -6,7 +6,7 @@ PY ?= python
 # src for the package, repo root so `benchmarks.*` resolves as a namespace pkg
 export PYTHONPATH := src:.$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast test-ewise test-dist test-delta bench-smoke docs-check
+.PHONY: test test-fast test-ewise test-dist test-delta test-serve bench-smoke docs-check
 
 # tier-1 verification (the command ROADMAP.md pins)
 test:
@@ -35,10 +35,17 @@ test-dist:
 test-delta:
 	$(PY) -m pytest -x -q -m delta
 
-# fast end-to-end benchmark pass: validates the masked plus_pair mxm against
-# the trace(A^3)/6 oracle and prints the CSV row (full suite: benchmarks/run.py)
+# continuous-batching query server: batched-vs-solo differential grid,
+# scheduler regression tests, plan cache, serving metrics
+test-serve:
+	$(PY) -m pytest -x -q -m serve
+
+# fast end-to-end benchmark pass: the masked plus_pair mxm vs the
+# trace(A^3)/6 oracle, plus the Poisson open-loop serving comparison
+# (batched vs solo differentially checked). Full suite: benchmarks/run.py.
 bench-smoke:
 	$(PY) benchmarks/run.py triangles
+	$(PY) benchmarks/run.py throughput
 
 # execute every fenced ```python block in docs/*.md against the current
 # surface (tests/test_docs.py — also part of tier-1, so docs can't drift)

@@ -6,7 +6,9 @@
                 plus the packed-vs-unpacked all-gather payload comparison
   khop-packed — bitmap-packed vs float boolean frontiers per frontier
                 width (the measured AUTO_PACK_MIN_WIDTH crossover)
-  throughput  — paper §II (threadpool/read-scaling claim)
+  throughput  — paper §II (threadpool/read-scaling claim): Poisson
+                open-loop serving, continuous batching vs one-query-at-a-
+                time (qps, p50/p99 latency, plan-cache hit rate)
   kernels     — format-selection crossover (BSR/ELL/dense)
   triangles   — GraphChallenge (paper future-work item)
   ktruss      — Graphulo k-truss, sparse (masked SpGEMM) vs dense

@@ -358,6 +358,14 @@ class Database:
                       compact=mesh is not None)
         return ExecutionContext(g, impl=impl, mesh=mesh)
 
+    def server(self, name: str, **kw) -> "QueryServer":
+        """Continuous-batching server over the named graph — each batch
+        serves the freshest snapshot-consistent freeze, so writes committed
+        through `query()` between batches are visible to the next one
+        (engine.server has the scheduler contract)."""
+        from repro.engine.server import QueryServer
+        return QueryServer(self._graph(name), **kw)
+
     def explain(self, name: str, text: str) -> str:
         return explain(self._graph(name).freeze(), text)
 

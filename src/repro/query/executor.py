@@ -8,11 +8,15 @@ hops. This is the paper's Cypher->linear-algebra translation. Structural
 (or_and) expands over a wide seed batch ride grb's bitmap-packed frontier
 route automatically (docs/API.md §Bitmap) — nothing here opts in.
 
-`ExecutionContext` is the public execution surface: `node_mask`, `expand`,
-and `project` are the three primitives a scheduler composes — the batched
-server (`repro.engine.server`) drives them directly to answer many
-pattern-compatible queries with one frontier traversal. `execute()` is the
-solo driver over the same context.
+`ExecutionContext` is the public execution surface: `node_mask`,
+`seed_frontier`, `expand`, `traverse`, and `project` are the primitives a
+scheduler composes — the continuous-batching server (`repro.engine.server`)
+drives them directly to answer many pattern-compatible queries with one
+frontier traversal (`traverse` returns the frontier unmaterialized, so the
+server overlaps host-side scheduling with device execution). `execute()` is
+the solo driver over the same context; `resolve_seeds` is the ONE seed
+semantics both paths share (or_and dedupes bindings, plus_times keeps the
+seed multiset), so batched and solo answers are definitionally equal.
 
 Public contract: a context reads one *frozen* Graph (CREATE / DELETE raise
 TypeError — writes go through `engine.Database`); unknown relations raise
@@ -50,10 +54,39 @@ from repro.query.planner import Plan, plan
 class Result:
     columns: List[str]
     rows: List[tuple]
+    # serving error isolation: a query that failed inside a batch reports
+    # here ("ValueError: no relation ...") instead of poisoning its batch
+    error: Optional[str] = None
 
     def scalar(self):
         assert len(self.rows) == 1 and len(self.rows[0]) == 1
         return self.rows[0][0]
+
+
+def empty_result(p: Plan) -> Result:
+    """The no-seeds-survived answer — shared by the solo driver and the
+    batched server so an all-masked-out seed list means the same thing
+    (zero rows, NOT a zero-count row) on both paths."""
+    return Result([_colname(r) for r in p.returns], [])
+
+
+def resolve_seeds(p: Plan, src_mask: np.ndarray) -> np.ndarray:
+    """Seed ids a seeded plan actually starts from — the ONE definition the
+    solo driver and the batched server share. or_and (distinct
+    reachability) binds each seed vertex once: sorted, deduped.
+    plus_times counts walks from the seed *multiset*: duplicates are
+    distinct walk sources and written order is kept, so
+    `id(a) IN [3, 3, 5]` contributes vertex 3's walks twice. Seeds failing
+    the source label/predicate mask drop their column entirely."""
+    if p.semiring == "or_and":
+        seeds = np.asarray(sorted(set(p.seeds)), dtype=np.int64)
+    else:
+        seeds = np.asarray(list(p.seeds), dtype=np.int64)
+    n = len(src_mask)
+    if seeds.size and (seeds.min() < 0 or seeds.max() >= n):
+        raise ValueError(f"seed id out of range 0..{n - 1}: "
+                         f"{[int(s) for s in seeds if s < 0 or s >= n]}")
+    return seeds[src_mask[seeds]]
 
 
 # -- predicate evaluation -----------------------------------------------------
@@ -106,8 +139,9 @@ class ExecutionContext:
 
     node_mask  label + predicate scan -> bool (n,) diagonal
     expand     one variable-length traversal step on a frontier matrix
+    traverse   seeds -> final frontier for a plan (unmaterialized device work)
     project    frontier matrix -> Result rows per the plan's RETURN clause
-    run        parse/plan/execute a full read query
+    run        parse/plan/execute a full read query (also accepts a Plan)
 
     The adjacency handles come from the graph's relations; `impl` re-resolves
     their execution policy once per context (not per call). With `mesh` set,
@@ -237,6 +271,20 @@ class ExecutionContext:
             reach = (reach > 0).astype(jnp.float32)
         return reach
 
+    def traverse(self, p: Plan, seeds, keep=None) -> jnp.ndarray:
+        """Seeds -> final (n, F) frontier for a plan: the device half of
+        `run`, and the batch hook the server composes (it concatenates many
+        compatible members' seed columns into one call, padding lanes with
+        keep=False columns). The frontier comes back UNmaterialized — under
+        jax async dispatch the caller keeps scheduling host-side while the
+        device sweeps."""
+        sr = S.get(p.semiring)
+        B = self.seed_frontier(seeds, keep=keep)
+        for e in p.expands:
+            dst_mask = self.node_mask(e.dst_label, p.var_preds.get(e.dst_var))
+            B = self.expand(B, e, sr, dst_mask)
+        return B
+
     def project(self, p: Plan, seeds: np.ndarray, B: jnp.ndarray) -> Result:
         """Materialize RETURN rows from the final frontier matrix."""
         Bn = np.asarray(B)
@@ -293,29 +341,26 @@ class ExecutionContext:
 
     # -- solo driver ---------------------------------------------------------
     def run(self, query) -> Result:
-        q = parse(query) if isinstance(query, str) else query
-        if isinstance(q, (A.CreateQuery, A.DeleteQuery)):
-            kw = "CREATE" if isinstance(q, A.CreateQuery) else "DELETE"
-            raise TypeError(f"{kw} goes through engine.Database, not a read "
-                            f"ExecutionContext")
-        p = plan(q)
+        """Execute a read query: text, MatchQuery AST, or an already-built
+        Plan (the server's cached-plan path — no re-parse)."""
+        if isinstance(query, Plan):
+            p = query
+        else:
+            q = parse(query) if isinstance(query, str) else query
+            if isinstance(q, (A.CreateQuery, A.DeleteQuery)):
+                kw = "CREATE" if isinstance(q, A.CreateQuery) else "DELETE"
+                raise TypeError(f"{kw} goes through engine.Database, not a "
+                                f"read ExecutionContext")
+            p = plan(q)
 
         src_mask = self.node_mask(p.src_label, p.var_preds.get(p.src_var))
         if p.seeds is not None:
-            seeds = np.asarray(sorted(set(p.seeds)), dtype=np.int64)
-            seeds = seeds[src_mask[seeds]]
+            seeds = resolve_seeds(p, src_mask)
         else:
             seeds = np.nonzero(src_mask)[0]
         if len(seeds) == 0:
-            return Result([_colname(r) for r in p.returns], [])
-
-        sr = S.get(p.semiring)
-        B = self.seed_frontier(seeds)
-        for e in p.expands:
-            dst_mask = self.node_mask(e.dst_label, p.var_preds.get(e.dst_var))
-            B = self.expand(B, e, sr, dst_mask)
-
-        return self.project(p, seeds, B)
+            return empty_result(p)
+        return self.project(p, seeds, self.traverse(p, seeds))
 
 
 def _sr_add(sr: S.Semiring, a, b):

@@ -3,11 +3,18 @@
 The plan mirrors RedisGraph's ExecutionPlan: a NodeScan (label diagonal or
 seed one-hots) followed by Expand operators (semiring vxm per hop, masked by
 label/property diagonals), ending in Project/Aggregate.
+
+Serving additions (the RedisGraph execution-plan cache analog):
+`signature(plan)` is the batching-compatibility key — everything about a
+plan except WHICH seed ids it starts from, predicate *content* included —
+and `PlanCache` memoizes parse+plan per normalized query text so a repeat
+shape never re-parses. Both are what `engine.server` schedules with.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from collections import OrderedDict
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -107,3 +114,79 @@ def plan(q: A.MatchQuery) -> Plan:
                               dst.var, dst.label))
     return Plan(src.var, src.label, seeds, var_preds, expands,
                 q.returns, q.limit, semiring)
+
+
+# -- serving: signatures + the plan cache -------------------------------------
+def pred_key(node) -> tuple:
+    """Hashable normal form of one predicate AST node."""
+    if isinstance(node, A.Comparison):
+        return ("cmp", node.op, tuple(node.lhs), tuple(node.rhs))
+    if isinstance(node, A.BoolExpr):
+        return ("bool", node.op, tuple(pred_key(a) for a in node.args))
+    if isinstance(node, A.InSeeds):
+        return ("in", node.var, tuple(node.seeds))
+    raise TypeError(node)
+
+
+def signature(p: Plan) -> tuple:
+    """Batching-compatibility key: two seeded plans with equal signatures
+    answer from ONE shared frontier traversal (their seed columns sit side
+    by side in the same matrix sweep). The key covers the full predicate
+    content — a predicate-count-only key would let queries with different
+    WHERE clauses share one (wrong) node mask — and excludes exactly the
+    seed ids, the batched-over dimension."""
+    return (p.src_var, p.src_label,
+            tuple((e.rel, e.direction, e.min_hops, e.max_hops,
+                   e.dst_var, e.dst_label) for e in p.expands),
+            p.semiring,
+            tuple((r.kind, r.var, r.prop, r.distinct, r.alias)
+                  for r in p.returns),
+            p.limit,
+            tuple(sorted((v, tuple(pred_key(q) for q in ps))
+                         for v, ps in p.var_preds.items())))
+
+
+class PlanCache:
+    """LRU parse+plan cache keyed by whitespace-normalized query text — the
+    RedisGraph execution-plan cache analog. `get` returns a SHARED
+    (plan, signature) pair: callers must treat the plan as immutable
+    (`engine.server` re-binds seeds via `dataclasses.replace`). Repeat
+    query shapes skip tokenize+parse+plan entirely; the parameterized
+    submit form (`QueryServer.submit(text, seeds=...)`) keeps the text
+    seed-free so every seed binding of one shape is a hit."""
+
+    def __init__(self, maxsize: int = 1024):
+        self.maxsize = maxsize
+        self.hits = 0
+        self.misses = 0
+        self._entries: "OrderedDict[str, Tuple[Plan, tuple]]" = OrderedDict()
+
+    @staticmethod
+    def key(text: str) -> str:
+        return " ".join(text.split())
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def hit_rate(self) -> float:
+        seen = self.hits + self.misses
+        return self.hits / seen if seen else 0.0
+
+    def get(self, text: str) -> Tuple[Plan, tuple]:
+        """(plan, signature) for the query text; parse+plan on first sight.
+        Parse/plan errors propagate to the submitter and cache nothing."""
+        from repro.query.parser import parse  # deferred: no import cycle
+        k = self.key(text)
+        entry = self._entries.get(k)
+        if entry is not None:
+            self.hits += 1
+            self._entries.move_to_end(k)
+            return entry
+        p = plan(parse(text))
+        self.misses += 1
+        entry = (p, signature(p))
+        self._entries[k] = entry
+        if len(self._entries) > self.maxsize:
+            self._entries.popitem(last=False)
+        return entry

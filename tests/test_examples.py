@@ -32,7 +32,10 @@ def test_quickstart():
 def test_serve_queries():
     out = run_example("serve_queries.py", ["--scale", "9", "--queries", "64"])
     assert "queries/s" in out
-    assert "batches=1" in out
+    # continuous batching under open-loop arrivals: batch count is timing-
+    # dependent, but the serving metrics must be reported
+    assert "batches=" in out and "pack ratio" in out
+    assert "plan cache" in out and "p99=" in out
 
 
 def test_graph_analytics():

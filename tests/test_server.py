@@ -1,0 +1,387 @@
+"""Continuous-batching query server: batched ≡ solo differential grid plus
+the scheduler regression tests this PR pins.
+
+The contract under test: coalescing signature-compatible queries into one
+packed frontier sweep is a pure latency optimization — every query returns
+exactly what the one-query-at-a-time `execute()` path returns, under mixed
+queues (compatible / incompatible / unseeded), mid-batch error injection,
+duplicate seeds, width-capped chunking, and live writes between flushes.
+
+Regression anchors (each failed on the pre-PR server):
+  * predicate CONTENT is part of the batching signature, not just count
+  * a bad query poisons only itself — the queue always drains
+  * plus_times walk counts keep the seed multiset (dups are distinct users)
+  * admission is by total frontier width, not query count
+  * each flush serves the freshest snapshot, not the construction-time one
+"""
+import numpy as np
+import pytest
+
+from repro.engine import Database, MutableGraph, QueryServer
+from repro.graph.datagen import rmat_graph, social_graph
+from repro.graph.graph import GraphBuilder
+from repro.query.executor import execute
+from repro.query.reference import execute_ref
+
+pytestmark = pytest.mark.serve
+
+K4_EDGES = [(i, j) for i in range(4) for j in range(i + 1, 4)]
+PETERSEN_EDGES = [(0, 1), (1, 2), (2, 3), (3, 4), (4, 0),
+                  (5, 7), (7, 9), (9, 6), (6, 8), (8, 5),
+                  (0, 5), (1, 6), (2, 7), (3, 8), (4, 9)]
+
+
+def _sym_graph(edges, n, fmt="auto"):
+    src = np.array([e[0] for e in edges])
+    dst = np.array([e[1] for e in edges])
+    s, d = np.concatenate([src, dst]), np.concatenate([dst, src])
+    return GraphBuilder(n).add_edges("R", s, d).build(fmt=fmt, block=8)
+
+
+def _grid_graph(name):
+    if name == "K4":
+        return _sym_graph(K4_EDGES, 4), "R"
+    if name == "petersen":
+        return _sym_graph(PETERSEN_EDGES, 10), "R"
+    scale = int(name[-1])
+    return rmat_graph(scale=scale, edge_factor=8, seed=scale,
+                      fmt="ell"), "KNOWS"
+
+
+# -- the differential grid ----------------------------------------------------
+
+@pytest.mark.parametrize("name", ["K4", "petersen", "rmat6", "rmat7", "rmat8"])
+def test_batched_matches_solo_grid(name):
+    """Mixed queue — two compatible signature groups, an unseeded scan —
+    served batched must equal every query served alone."""
+    g, rel = _grid_graph(name)
+    srv = QueryServer(g)
+    texts = {}
+    for s in range(0, g.n, max(1, g.n // 7)):
+        texts[srv.submit(f"MATCH (a)-[:{rel}*1..2]->(b) WHERE id(a) = {s} "
+                         f"RETURN count(DISTINCT b)")] = \
+            f"MATCH (a)-[:{rel}*1..2]->(b) WHERE id(a) = {s} " \
+            f"RETURN count(DISTINCT b)"
+        texts[srv.submit(f"MATCH (a)-[:{rel}*2..3]->(b) WHERE id(a) = {s} "
+                         f"RETURN count(DISTINCT b)")] = \
+            f"MATCH (a)-[:{rel}*2..3]->(b) WHERE id(a) = {s} " \
+            f"RETURN count(DISTINCT b)"
+    scan = f"MATCH (a)-[:{rel}]->(b) RETURN count(DISTINCT b)"
+    texts[srv.submit(scan)] = scan
+    out = srv.flush()
+    assert srv.pending == 0
+    for qid, text in texts.items():
+        assert out[qid].error is None
+        assert out[qid].rows == execute(g, text).rows, text
+    # two signature groups batch, the unseeded scan rides alone
+    assert srv.stats["batches"] == 2
+    assert srv.stats["solo"] == 1
+    assert srv.stats["queries"] == len(texts)
+
+
+@pytest.mark.parametrize("name", ["petersen", "rmat6"])
+def test_batched_matches_reference_oracle(name):
+    """Triangulate against the pure-numpy reference executor, not just the
+    solo engine path (or_and queries only — all execute_ref supports)."""
+    g, rel = _grid_graph(name)
+    srv = QueryServer(g)
+    q = f"MATCH (a)-[:{rel}*1..2]->(b) WHERE id(a) IN [0, 2, 5] " \
+        f"RETURN count(DISTINCT b)"
+    qid = srv.submit(q)
+    other = srv.submit(f"MATCH (a)-[:{rel}*1..2]->(b) WHERE id(a) = 1 "
+                       f"RETURN count(DISTINCT b)")
+    out = srv.flush()
+    assert out[qid].rows == execute_ref(g, q).rows
+    assert out[other].rows != [] and srv.stats["batches"] == 1
+
+
+# -- regression: signature is content-complete --------------------------------
+
+def test_signature_includes_predicate_content():
+    """Two queries differing ONLY in a WHERE constant must not share a
+    sweep (pre-PR the signature hashed predicate COUNTS, silently giving
+    both tenants one of the two filters)."""
+    g = social_graph(n=128, seed=3)
+    srv = QueryServer(g)
+    qa = "MATCH (a)-[:KNOWS*1..2]->(b) WHERE id(a) = 1 AND b.age > 30 " \
+         "RETURN count(DISTINCT b)"
+    qb = "MATCH (a)-[:KNOWS*1..2]->(b) WHERE id(a) = 2 AND b.age > 60 " \
+         "RETURN count(DISTINCT b)"
+    ia, ib = srv.submit(qa), srv.submit(qb)
+    out = srv.flush()
+    assert out[ia].rows == execute(g, qa).rows
+    assert out[ib].rows == execute(g, qb).rows
+    assert srv.stats["batches"] == 2      # incompatible: different filters
+    # same constants DO batch
+    srv2 = QueryServer(g)
+    srv2.submit(qa)
+    srv2.submit(qa.replace("id(a) = 1", "id(a) = 2"))
+    srv2.flush()
+    assert srv2.stats["batches"] == 1
+
+
+# -- regression: error isolation ----------------------------------------------
+
+def test_error_injection_mid_batch():
+    """A query naming an unknown relation, queued between good ones, comes
+    back as an error Result; the good tenants still get answers and the
+    queue drains (pre-PR: flush raised and left the queue poisoned)."""
+    g = social_graph(n=128, seed=1)
+    srv = QueryServer(g)
+    good1 = srv.submit("MATCH (a)-[:KNOWS*1..2]->(b) WHERE id(a) = 3 "
+                       "RETURN count(DISTINCT b)")
+    bad = srv.submit("MATCH (a)-[:NOPE]->(b) WHERE id(a) = 3 "
+                     "RETURN count(DISTINCT b)")
+    good2 = srv.submit("MATCH (a)-[:KNOWS*1..2]->(b) WHERE id(a) = 5 "
+                       "RETURN count(DISTINCT b)")
+    out = srv.flush()
+    assert srv.pending == 0
+    assert out[bad].error is not None and "NOPE" in out[bad].error
+    for qid, s in [(good1, 3), (good2, 5)]:
+        assert out[qid].error is None
+        assert out[qid].rows == execute(
+            g, f"MATCH (a)-[:KNOWS*1..2]->(b) WHERE id(a) = {s} "
+               f"RETURN count(DISTINCT b)").rows
+    assert srv.stats["errors"] == 1
+    # the server stays serviceable after the failure
+    again = srv.submit("MATCH (a)-[:KNOWS]->(b) WHERE id(a) = 3 "
+                       "RETURN count(DISTINCT b)")
+    assert srv.flush()[again].error is None
+
+
+def test_bad_seed_isolated_within_batch():
+    """An out-of-range seed id fails ONLY its own query; signature-equal
+    members sharing the sweep still answer correctly."""
+    g = social_graph(n=128, seed=2)
+    srv = QueryServer(g)
+    ok = srv.submit("MATCH (a)-[:KNOWS*1..2]->(b) WHERE id(a) = 4 "
+                    "RETURN count(DISTINCT b)")
+    bad = srv.submit(f"MATCH (a)-[:KNOWS*1..2]->(b) WHERE id(a) = {10**6} "
+                     f"RETURN count(DISTINCT b)")
+    out = srv.flush()
+    assert out[bad].error is not None and "seed id out of range" in out[bad].error
+    assert out[ok].rows == execute(
+        g, "MATCH (a)-[:KNOWS*1..2]->(b) WHERE id(a) = 4 "
+           "RETURN count(DISTINCT b)").rows
+    assert srv.stats["errors"] == 1
+
+
+def test_submit_rejects_parse_errors_eagerly():
+    g = social_graph(n=64, seed=0)
+    srv = QueryServer(g)
+    with pytest.raises(SyntaxError):
+        srv.submit("MATCH (a)-[:KNOWS->(b RETURN")
+    assert srv.pending == 0               # nothing reached the queue
+
+
+def test_masked_out_seeds_return_empty():
+    """Seeds that fail the source label mask produce zero rows — batched
+    and solo agree (pre-PR the batched path emitted a bogus 0-count row)."""
+    g = social_graph(n=128, seed=4)
+    city = int(np.nonzero(np.asarray(g.label_mask("City")))[0][0])
+    q = f"MATCH (a:Person)-[:KNOWS]->(b) WHERE id(a) = {city} " \
+        f"RETURN count(DISTINCT b)"
+    srv = QueryServer(g)
+    masked = srv.submit(q)
+    live = srv.submit("MATCH (a:Person)-[:KNOWS]->(b) WHERE id(a) = 1 "
+                      "RETURN count(DISTINCT b)")
+    out = srv.flush()
+    assert out[masked].rows == execute(g, q).rows == []
+    assert out[live].rows != []
+
+
+# -- regression: duplicate-seed walk counts -----------------------------------
+
+def test_duplicate_seeds_keep_walk_multiplicity():
+    """count(b) without DISTINCT is plus_times walk counting: `id(a) IN
+    [3, 3, 5]` means seed 3 contributes TWICE (two users who happen to
+    start at the same vertex). Pre-PR both paths collapsed the multiset
+    through sorted(set(...)))."""
+    g = _sym_graph(PETERSEN_EDGES, 10)
+    q = "MATCH (a)-[:R*2..2]->(b) WHERE id(a) IN [3, 3, 5] RETURN count(b)"
+    A = np.zeros((10, 10))
+    for s, d in PETERSEN_EDGES:
+        A[s, d] = A[d, s] = 1
+    A2 = A @ A
+    want = int(2 * A2[3].sum() + A2[5].sum())
+    assert execute(g, q).rows == [(want,)]              # solo path
+    srv = QueryServer(g)
+    dup = srv.submit(q)
+    mate = srv.submit("MATCH (a)-[:R*2..2]->(b) WHERE id(a) IN [0, 1] "
+                      "RETURN count(b)")
+    out = srv.flush()
+    assert out[dup].rows == [(want,)]                   # batched ≡ solo
+    assert out[mate].rows == [(int(A2[0].sum() + A2[1].sum()),)]
+    assert srv.stats["batches"] == 1                    # dups still coalesce
+    # or_and reachability stays deduped: same seeds, DISTINCT count
+    qd = "MATCH (a)-[:R*2..2]->(b) WHERE id(a) IN [3, 3, 5] " \
+         "RETURN count(DISTINCT b)"
+    srv2 = QueryServer(g)
+    did = srv2.submit(qd)
+    assert srv2.flush()[did].rows == execute_ref(g, qd).rows
+
+
+# -- regression: width-based admission control --------------------------------
+
+def test_chunking_is_by_total_frontier_width():
+    """8 compatible queries x 16 seeds = 128 columns. max_width=64 must
+    split them into 2 sweeps (pre-PR chunking counted queries, flattening
+    all 128 columns into one frontier)."""
+    g = social_graph(n=256, seed=5)
+    srv = QueryServer(g, max_width=64)
+    t = "MATCH (a)-[:KNOWS*1..2]->(b) RETURN count(DISTINCT b)"
+    qids = {}
+    for i in range(8):
+        seeds = list(range(16 * i, 16 * i + 16))
+        qids[srv.submit(t, seeds=seeds)] = seeds
+    out = srv.flush()
+    assert srv.stats["batches"] == 2
+    assert srv.stats["batch_width_max"] <= 64
+    for qid, seeds in qids.items():
+        seed_list = ", ".join(map(str, seeds))
+        assert out[qid].rows == execute(
+            g, f"MATCH (a)-[:KNOWS*1..2]->(b) WHERE id(a) IN [{seed_list}] "
+               f"RETURN count(DISTINCT b)").rows
+    # one query wider than the cap still runs — alone
+    srv2 = QueryServer(g, max_width=64)
+    wide = srv2.submit(t, seeds=list(range(100)))
+    srv2.submit(t, seeds=[1])
+    out2 = srv2.flush()
+    assert srv2.stats["batches"] == 2
+    assert out2[wide].error is None
+
+
+def test_max_batch_caps_member_count():
+    g = social_graph(n=128, seed=6)
+    srv = QueryServer(g, max_batch=3)
+    t = "MATCH (a)-[:KNOWS*1..2]->(b) RETURN count(DISTINCT b)"
+    for s in range(7):
+        srv.submit(t, seeds=[s])
+    srv.flush()
+    assert srv.stats["batches"] == 3      # 3 + 3 + 1
+
+
+# -- plan cache ---------------------------------------------------------------
+
+def test_plan_cache_hit_accounting():
+    g = social_graph(n=128, seed=7)
+    srv = QueryServer(g)
+    t = "MATCH (a)-[:KNOWS*1..2]->(b) RETURN count(DISTINCT b)"
+    for s in range(10):
+        srv.submit(t, seeds=[s])          # parameterized: one cache entry
+    srv.submit("MATCH  (a)-[:KNOWS*1..2]->(b)   RETURN count(DISTINCT b)",
+               seeds=[3])                 # whitespace-normalized: still a hit
+    srv.submit("MATCH (a)-[:VISITS]->(b) RETURN count(DISTINCT b)")  # miss
+    out = srv.flush()
+    assert srv.stats["plan_cache_misses"] == 2
+    assert srv.stats["plan_cache_hits"] == 10
+    assert srv.stats["plan_cache_hit_rate"] == pytest.approx(10 / 12)
+    assert all(r.error is None for r in out.values())
+    # the 11 parameterized submissions share one signature -> one sweep
+    assert srv.stats["batches"] == 1
+
+
+def test_parameterized_seeds_do_not_leak_between_queries():
+    """dataclasses.replace on the cached Plan: two bindings of one template
+    must not see each other's seeds."""
+    g = _sym_graph(K4_EDGES, 4)
+    srv = QueryServer(g)
+    t = "MATCH (a)-[:R*1..1]->(b) RETURN count(DISTINCT b)"
+    q0 = srv.submit(t, seeds=[0])
+    q1 = srv.submit(t, seeds=[0, 1, 2, 3])
+    out = srv.flush()
+    assert out[q0].rows == [(3,)]         # K4: one seed reaches the other 3
+    assert out[q1].rows == [(12,)]        # 4 seed columns x 3 reachable each
+
+
+# -- regression: snapshot freshness -------------------------------------------
+
+def test_flush_serves_fresh_snapshot():
+    """Writes committed after the server is constructed are visible to the
+    next flush (pre-PR the server froze its graph once, at construction,
+    and served stale reads forever)."""
+    mg = MutableGraph()
+    mg.create_node("Person", {"id": 0})
+    mg.create_node("Person", {"id": 1})
+    mg.create_node("Person", {"id": 2})
+    mg.create_edge(0, "KNOWS", 1)
+    mg.create_edge(1, "KNOWS", 2)
+    srv = QueryServer(mg)
+    q = "MATCH (a)-[:KNOWS*1..3]->(b) WHERE id(a) = 0 " \
+        "RETURN count(DISTINCT b)"
+    first = srv.submit(q)
+    assert srv.flush()[first].rows == [(2,)]
+    mg.create_node("Person", {"id": 3})
+    mg.create_edge(2, "KNOWS", 3)         # create AFTER first flush
+    second = srv.submit(q)
+    assert srv.flush()[second].rows == [(3,)]          # not stale
+
+
+def test_database_server_tracks_creates():
+    db = Database()
+    db.query("g", "CREATE (:Person {id: 0}), (:Person {id: 1}), "
+                  "(:Person {id: 2})")
+    db.query("g", "CREATE (0)-[:KNOWS]->(1)")
+    srv = db.server("g")
+    q = "MATCH (a)-[:KNOWS*1..2]->(b) WHERE id(a) = 0 " \
+        "RETURN count(DISTINCT b)"
+    first = srv.submit(q)
+    assert srv.flush()[first].rows == [(1,)]
+    db.query("g", "CREATE (1)-[:KNOWS]->(2)")
+    second = srv.submit(q)
+    assert srv.flush()[second].rows == [(2,)]
+
+
+def test_callable_source_is_a_refresh_hook():
+    graphs = [_sym_graph(K4_EDGES, 4), _sym_graph(PETERSEN_EDGES, 10)]
+    srv = QueryServer(lambda: graphs[0])
+    q = "MATCH (a)-[:R*1..1]->(b) WHERE id(a) = 0 RETURN count(DISTINCT b)"
+    a = srv.submit(q)
+    assert srv.flush()[a].rows == [(3,)]               # K4 degree
+    graphs[0] = graphs[1]
+    b = srv.submit(q)
+    assert srv.flush()[b].rows == [(3,)]               # Petersen: also 3
+    c = srv.submit("MATCH (a)-[:R*1..2]->(b) WHERE id(a) = 0 "
+                   "RETURN count(DISTINCT b)")
+    assert srv.flush()[c].rows == [(9,)]               # Petersen diameter 2
+
+
+def test_database_source_requires_graph_name():
+    db = Database()
+    db.query("g", "CREATE (:Person {id: 0})")
+    with pytest.raises(TypeError):
+        QueryServer(db)
+    with pytest.raises(TypeError):
+        QueryServer(42)                   # not a servable source at all
+
+
+# -- serving metrics ----------------------------------------------------------
+
+def test_serving_metrics_recorded():
+    g = social_graph(n=128, seed=8)
+    srv = QueryServer(g)
+    t = "MATCH (a)-[:KNOWS*1..2]->(b) RETURN count(DISTINCT b)"
+    for s in range(6):
+        srv.submit(t, seeds=[s])
+    srv.flush()
+    # 6 lanes pad to AUTO_PACK_MIN_WIDTH-aligned 8 slots
+    assert srv.stats["pack_lanes"] == 6
+    assert srv.stats["pack_slots"] == 8
+    assert srv.stats["pack_ratio"] == pytest.approx(0.75)
+    assert srv.stats["batch_width_max"] == 6
+    assert srv.stats["queue_wait_s_total"] > 0.0
+    assert len(srv.log) == 6
+    for m in srv.log:
+        assert m.result is not None
+        assert 0.0 <= m.wait_s <= m.latency_s
+
+
+def test_unaligned_mode_packs_exact_width():
+    g = social_graph(n=128, seed=8)
+    srv = QueryServer(g, align=False)
+    t = "MATCH (a)-[:KNOWS*1..2]->(b) RETURN count(DISTINCT b)"
+    for s in range(6):
+        srv.submit(t, seeds=[s])
+    srv.flush()
+    assert srv.stats["pack_slots"] == 6
+    assert srv.stats["pack_ratio"] == pytest.approx(1.0)
