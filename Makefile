@@ -6,7 +6,7 @@ PY ?= python
 # src for the package, repo root so `benchmarks.*` resolves as a namespace pkg
 export PYTHONPATH := src:.$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast test-ewise test-dist test-delta test-serve bench-smoke docs-check
+.PHONY: test test-fast test-ewise test-dist test-delta test-serve test-transfers bench-smoke calibrate docs-check
 
 # tier-1 verification (the command ROADMAP.md pins)
 test:
@@ -40,12 +40,28 @@ test-delta:
 test-serve:
 	$(PY) -m pytest -x -q -m serve
 
+# transfer-accounting suite: shard-local ewise vs the gather oracle, BSR
+# device ewise vs the XLA reference, zero-host-transfer pins on the sharded
+# and word-resident hot loops (the distributed half needs the forced
+# topology, so this runs on it; tier-1 covers the same tests via the
+# subprocess wrapper)
+test-transfers:
+	REPRO_FORCE_DEVICES=8 $(PY) -m pytest -x -q -m "transfers and not hypothesis"
+
 # fast end-to-end benchmark pass: the masked plus_pair mxm vs the
 # trace(A^3)/6 oracle, plus the Poisson open-loop serving comparison
-# (batched vs solo differentially checked). Full suite: benchmarks/run.py.
+# (batched vs solo differentially checked), each archived as a
+# machine-readable BENCH_*.json next to the CSV. Full suite:
+# benchmarks/run.py.
 bench-smoke:
-	$(PY) benchmarks/run.py triangles
-	$(PY) benchmarks/run.py throughput
+	$(PY) benchmarks/run.py triangles --json BENCH_triangles.json
+	$(PY) benchmarks/run.py throughput --json BENCH_throughput.json
+
+# re-measure every AUTO_* crossover constant on this host and print the
+# drift vs the committed values (benchmarks/calibrate.py — report only,
+# never fails; re-run the full calibrating benchmark before editing one)
+calibrate:
+	$(PY) benchmarks/calibrate.py
 
 # execute every fenced ```python block in docs/*.md against the current
 # surface (tests/test_docs.py — also part of tier-1, so docs can't drift)

@@ -1,0 +1,154 @@
+"""Mesh/device-resident element-wise microbench (docs §Transfer-accounting).
+
+Two comparisons, both on the paths this repo keeps off the host:
+
+  bsr_*   — BSR union/intersect/mask through the Pallas gathered-tile
+            kernel vs the XLA gather reference vs the pre-refactor host
+            round-trip (pull every tile to numpy, merge there, reassemble
+            through `BSR.from_blocks`). The derived column carries the
+            speedup over the host baseline and the host-numpy call count
+            per call (device paths: 0).
+  shard_* — shard-local slot-aligned ewise on identically-meshed
+            ShardedELL operands vs the gather oracle (to_ell both sides,
+            merge on host, redistribute). Only runs with >= 2 local
+            devices (`REPRO_FORCE_DEVICES=8` matches the dist suite); the
+            derived column carries `grb.host_transfers()` per call —
+            shard-local: 0, gather oracle: 2.
+
+CPU timings are indicative (interpret-mode Pallas); the structural claims —
+zero host-numpy calls, zero host transfers — hold on any backend.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import bsr as bsrmod, grb, semiring as S
+from repro.core.bsr import BSR
+from repro.core.shard import ShardedELL
+from repro.kernels import ops as kops
+
+_ADD = lambda a, b: a + b                                  # noqa: E731
+_MUL = lambda a, b: a * b                                  # noqa: E731
+
+
+def _timeit(fn, reps: int = 3) -> float:
+    fn()                                    # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+def _pattern(n: int, seed: int, density: float = 0.08) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    pat = (rng.uniform(size=(n, n)) < density).astype(np.float32)
+    return pat * rng.uniform(0.5, 2.0, size=(n, n)).astype(np.float32)
+
+
+def _host_roundtrip_union(A: BSR, B: BSR, op) -> BSR:
+    """The pre-refactor shape of BSR ewise: every tile crosses to host
+    numpy, the merge runs there, and `from_blocks` reassembles (one
+    host-numpy call per op). Kept here as the benchmark baseline only."""
+    nbc = A.nbcols
+    ka = np.asarray(A.block_rows)[np.asarray(A.valid) > 0].astype(np.int64) \
+        * nbc + np.asarray(A.block_cols)[np.asarray(A.valid) > 0]
+    kb = np.asarray(B.block_rows)[np.asarray(B.valid) > 0].astype(np.int64) \
+        * nbc + np.asarray(B.block_cols)[np.asarray(B.valid) > 0]
+    ta = np.asarray(A.blocks)[np.asarray(A.valid) > 0]
+    tb = np.asarray(B.blocks)[np.asarray(B.valid) > 0]
+    keys = np.union1d(ka, kb)
+    blocks = np.zeros((len(keys), A.block, A.block), np.float32)
+    pa = np.searchsorted(keys, ka)
+    pb = np.searchsorted(keys, kb)
+    blocks[pa] += ta
+    blocks[pb] += tb                       # op == add: union accumulates
+    return BSR.from_blocks((keys // nbc).astype(np.int32),
+                           (keys % nbc).astype(np.int32),
+                           blocks, A.shape, A.block)
+
+
+def _bench_bsr(rows):
+    # CPU note: the Pallas cells run in interpret mode here (a Python loop
+    # over tiles), so their absolute numbers are meaningless off-TPU — the
+    # XLA-vs-host-roundtrip cells carry the CPU story, the host_numpy_calls
+    # column carries the structural one.
+    n, block = 1024, 32
+    A = BSR.from_dense(_pattern(n, seed=1), block=block)
+    B = BSR.from_dense(_pattern(n, seed=2), block=block)
+    ref = np.asarray(A.to_dense()) + np.asarray(B.to_dense())
+
+    t_host = _timeit(lambda: _host_roundtrip_union(A, B, _ADD))
+    for impl, call in (
+            ("xla", lambda: bsrmod.ewise_add(A, B, _ADD)),
+            ("pallas", lambda: kops.bsr_ewise(A, B, "union", _ADD))):
+        h0 = bsrmod.host_numeric_calls()
+        out = call()
+        per_call = bsrmod.host_numeric_calls() - h0
+        np.testing.assert_allclose(np.asarray(out.to_dense()), ref,
+                                   rtol=1e-5, err_msg=impl)
+        t = _timeit(call)
+        rows.append((f"bsr_union_{impl}_n{n}b{block}", t * 1e6,
+                     f"vs_host_roundtrip={t_host / t:.2f}x_"
+                     f"host_numpy_calls={per_call}"))
+    rows.append((f"bsr_union_hostloop_n{n}b{block}", t_host * 1e6,
+                 "host_numpy_calls=1"))
+
+    for mode, op in (("intersect", _MUL), ("mask", None)):
+        t_x = _timeit(lambda: kops.bsr_ewise(A, B, mode, op))
+        t_r = _timeit(lambda: (bsrmod.ewise_mult(A, B, _MUL) if
+                               mode == "intersect" else
+                               bsrmod.mask_keep(A, B)))
+        rows.append((f"bsr_{mode}_pallas_n{n}b{block}", t_x * 1e6,
+                     f"vs_xla={t_r / t_x:.2f}x_host_numpy_calls=0"))
+    return rows
+
+
+def _bench_sharded(rows):
+    ndev = jax.device_count()
+    if ndev < 2:
+        return rows                        # needs REPRO_FORCE_DEVICES>=2
+    d = min(ndev, 8)
+    mesh = jax.sharding.Mesh(
+        np.array(jax.devices()[:d]).reshape(d, 1, 1),
+        ("data", "pod", "model"))
+    n = 2048
+    ea = grb.GBMatrix.from_dense(_pattern(n, seed=3, density=0.01),
+                                 fmt="ell")
+    eb = grb.GBMatrix.from_dense(_pattern(n, seed=4, density=0.01),
+                                 fmt="ell")
+    sa, sb = grb.distribute(ea, mesh), grb.distribute(eb, mesh)
+
+    def shard_local():
+        return jax.block_until_ready(grb.ewise_add(sa, sb, S.PLUS).store.values)
+
+    def gather_oracle():
+        # the fallback this PR retired for same-mesh operands: gather both
+        # shards to host ELL, merge there, push the result back out
+        merged = grb.ewise_add(grb.GBMatrix(sa.store.to_ell()),
+                               grb.GBMatrix(sb.store.to_ell()), S.PLUS)
+        return jax.block_until_ready(
+            ShardedELL.from_ell(merged.store, mesh).values)
+
+    x0 = grb.host_transfers()
+    shard_local()
+    local_xfers = grb.host_transfers() - x0
+    x0 = grb.host_transfers()
+    gather_oracle()
+    gather_xfers = grb.host_transfers() - x0
+    t_local = _timeit(shard_local)
+    t_gather = _timeit(gather_oracle)
+    rows.append((f"shard_ewise_local_n{n}d{d}", t_local * 1e6,
+                 f"vs_gather={t_gather / t_local:.2f}x_"
+                 f"host_transfers={local_xfers}"))
+    rows.append((f"shard_ewise_gather_n{n}d{d}", t_gather * 1e6,
+                 f"host_transfers={gather_xfers}"))
+    return rows
+
+
+def run(rows):
+    _bench_bsr(rows)
+    _bench_sharded(rows)
+    return rows

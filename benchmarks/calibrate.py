@@ -1,0 +1,188 @@
+"""Re-measure the AUTO_* crossover constants on this host (`make calibrate`).
+
+Every `AUTO_*` policy constant in the tree was measured once on the
+XLA-CPU reference host and committed with its provenance next to the
+definition (`core.grb` for the format/packing crossovers, `core.delta` for
+the compaction ratio). Hardware moves; this sweep re-runs each measurement
+small-scale and prints
+
+    constant,committed,measured,status
+
+where ``status`` is ``ok`` when the measured crossover lands within one
+sweep step of the committed value and ``drift`` otherwise. Drift is a
+prompt to re-run the full calibrating benchmark named in the constant's
+comment (bench_triangles / bench_khop.run_packed / bench_mutations) and
+update the constant, never an error — exit code is always 0.
+
+Criteria per constant:
+  AUTO_MIN_GRID        first block-grid (block-rows) where the sparse
+                       kernel formulation beats one dense matmul
+  AUTO_MAX_FILL        first stored-tile fill where dense wins back
+  AUTO_MIN_WIDTH       first B width where the sparse kernel wins
+  AUTO_PACK_MIN_WIDTH  first frontier width where the packed boolean
+                       route beats the float route
+  AUTO_DELTA_COMPACT   first pending-ratio whose composed-read overhead
+                       exceeds 1.2x the compacted read
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import BSR, grb, ops, semiring as S
+from repro.core.delta import AUTO_DELTA_COMPACT, DeltaMatrix
+from repro.graph.datagen import rmat_edges, rmat_graph
+
+
+def _timeit(fn, reps: int = 3) -> float:
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+def _sparse_pattern(n: int, nnz: int, seed: int):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, n, size=nnz), rng.integers(0, n, size=nnz)
+
+
+def _bsr_vs_dense(n: int, nnz: int, f: int, seed: int = 0):
+    """(t_sparse, t_dense) for one or_and traversal step, XLA paths only
+    (the committed constants' provenance host is XLA-CPU)."""
+    r, c = _sparse_pattern(n, nnz, seed)
+    X = jnp.asarray((np.random.default_rng(seed + 1)
+                     .uniform(size=(n, f)) < 0.05).astype(np.float32))
+    bsr = BSR.from_coo(r, c, None, (n, n), block=128)
+    dense = jnp.asarray(bsr.to_dense())
+    fs = jax.jit(lambda x: ops.mxm(bsr, x, S.OR_AND))
+    fd = jax.jit(lambda x: ops.mxm(dense, x, S.OR_AND))
+    np.testing.assert_allclose(np.asarray(fs(X)), np.asarray(fd(X)))
+    return (_timeit(lambda: np.asarray(fs(X))),
+            _timeit(lambda: np.asarray(fd(X))),
+            bsr.fill_ratio)
+
+
+def _first(pairs, pred, default):
+    for key, val in pairs:
+        if pred(val):
+            return key
+    return default
+
+
+def _status(committed, measured, steps) -> str:
+    steps = sorted(steps)
+    if measured == committed:
+        return "ok"
+    try:
+        i, j = steps.index(committed), steps.index(measured)
+        return "ok" if abs(i - j) <= 1 else "drift"
+    except ValueError:
+        return "drift"
+
+
+def calibrate_min_grid(rows):
+    sweep = []
+    for nbr in (2, 4, 8):
+        n = nbr * 128
+        ts, td, _ = _bsr_vs_dense(n, nnz=2 * n, f=128, seed=nbr)
+        sweep.append((nbr, ts < td))
+    measured = _first(sweep, bool, default=16)
+    rows.append(("AUTO_MIN_GRID", grb.AUTO_MIN_GRID, measured,
+                 _status(grb.AUTO_MIN_GRID, measured, [s for s, _ in sweep])))
+
+
+def calibrate_max_fill(rows):
+    n = 8 * 128
+    sweep = []
+    for nnz in (2 * n, 16 * n, 64 * n, 256 * n):
+        ts, td, fill = _bsr_vs_dense(n, nnz=nnz, f=128, seed=17)
+        sweep.append((round(fill, 3), td < ts))
+    measured = _first(sweep, bool, default=1.0)
+    # committed 0.25 sits between sweep points; nearest-step tolerance
+    steps = [s for s, _ in sweep] + [grb.AUTO_MAX_FILL]
+    rows.append(("AUTO_MAX_FILL", grb.AUTO_MAX_FILL, measured,
+                 _status(grb.AUTO_MAX_FILL, measured, steps)))
+
+
+def calibrate_min_width(rows):
+    n = 8 * 128
+    sweep = []
+    for f in (2, 4, 8, 16, 32):
+        ts, td, _ = _bsr_vs_dense(n, nnz=2 * n, f=f, seed=23)
+        sweep.append((f, ts < td))
+    measured = _first(sweep, bool, default=64)
+    rows.append(("AUTO_MIN_WIDTH", grb.AUTO_MIN_WIDTH, measured,
+                 _status(grb.AUTO_MIN_WIDTH, measured, [s for s, _ in sweep])))
+
+
+def calibrate_pack_min_width(rows):
+    from repro import algorithms as alg
+    g = rmat_graph(scale=8, edge_factor=8, seed=3, fmt="ell")
+    rel = g.relations["KNOWS"]
+    rng = np.random.default_rng(0)
+    sweep = []
+    for f in (1, 2, 4, 8, 16, 32):
+        seeds = rng.integers(0, g.n, size=f)
+        times = {}
+        for mode in ("off", "on"):
+            with grb.packed_frontiers(mode):
+                fn = jax.jit(lambda s: alg.khop_counts(rel, s, k=2))
+                times[mode] = _timeit(lambda: np.asarray(fn(seeds)))
+        sweep.append((f, times["on"] < times["off"]))
+    measured = _first(sweep, bool, default=64)
+    rows.append(("AUTO_PACK_MIN_WIDTH", grb.AUTO_PACK_MIN_WIDTH, measured,
+                 _status(grb.AUTO_PACK_MIN_WIDTH, measured,
+                         [s for s, _ in sweep])))
+
+
+def calibrate_delta_compact(rows):
+    src, dst, n = rmat_edges(10, edge_factor=8, seed=11)
+    keep = src != dst
+    r, c = src[keep], dst[keep]
+    base = grb.GBMatrix.from_coo(r, c, np.ones(len(r), np.float32),
+                                 (n, n), fmt="ell")
+    x = np.random.default_rng(0).random(n).astype(np.float32)
+    compacted_t = _timeit(lambda: np.asarray(grb.mxv(base, x, S.PLUS_TIMES)))
+    live = {(int(a), int(b)) for a, b in zip(r, c)}
+    sweep = []
+    for ratio in (0.02, 0.05, 0.1, 0.2):
+        k = max(1, int(ratio * base.nvals))
+        rng = np.random.default_rng(int(ratio * 100))
+        ops_ = []
+        while len(ops_) < k:
+            a, b = int(rng.integers(0, n)), int(rng.integers(0, n))
+            if a != b and (a, b) not in live:
+                ops_.append(("add", a, b, 1.0))
+        dm = DeltaMatrix.wrap(base.store).apply_ops(ops_)
+        h = grb.GBMatrix(dm)
+        dm.patch()
+        delta_t = _timeit(lambda: np.asarray(grb.mxv(h, x, S.PLUS_TIMES)))
+        sweep.append((ratio, delta_t / compacted_t > 1.2))
+    measured = _first(sweep, bool, default=1.0)
+    rows.append(("AUTO_DELTA_COMPACT", AUTO_DELTA_COMPACT, measured,
+                 _status(AUTO_DELTA_COMPACT, measured, [s for s, _ in sweep])))
+
+
+def main() -> None:
+    rows: list = []
+    calibrate_min_grid(rows)
+    calibrate_max_fill(rows)
+    calibrate_min_width(rows)
+    calibrate_pack_min_width(rows)
+    calibrate_delta_compact(rows)
+    print("constant,committed,measured,status")
+    drifted = [r for r in rows if r[3] == "drift"]
+    for name, committed, measured, status in rows:
+        print(f"{name},{committed},{measured},{status}")
+    if drifted:
+        print(f"# {len(drifted)} constant(s) drifted on this host — re-run "
+              f"the full calibrating benchmark named beside each constant "
+              f"before editing it")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,17 +10,23 @@
                 open-loop serving, continuous batching vs one-query-at-a-
                 time (qps, p50/p99 latency, plan-cache hit rate)
   kernels     — format-selection crossover (BSR/ELL/dense)
+  ewise       — mesh/device-resident element-wise: BSR Pallas vs XLA vs
+                the pre-refactor host round-trip; shard-local vs gather
   triangles   — GraphChallenge (paper future-work item)
   ktruss      — Graphulo k-truss, sparse (masked SpGEMM) vs dense
   mutations   — query latency under a live Poisson insert/delete stream
                 (delta serving vs rebuild-on-freeze) + the delta-vs-rebuild
                 crossover sweep calibrating AUTO_DELTA_COMPACT
 
-Prints ``name,us_per_call,derived`` CSV. Roofline terms come from the
-dry-run artifacts: ``python -m benchmarks.roofline``.
+Prints ``name,us_per_call,derived`` CSV. ``--json out.json`` additionally
+writes the rows as machine-readable records
+(``{"suite", "metric", "value", "derived"}``) — what `make bench-smoke`
+archives as ``BENCH_*.json`` and CI diffs run-over-run. Roofline terms come
+from the dry-run artifacts: ``python -m benchmarks.roofline``.
 """
 from __future__ import annotations
 
+import json
 import os
 import sys
 
@@ -35,21 +41,35 @@ if os.environ.get("REPRO_FORCE_DEVICES"):
             + os.environ["REPRO_FORCE_DEVICES"]).strip()
 
 
-def main() -> None:
-    from benchmarks import bench_khop, bench_kernels, bench_ktruss, \
-        bench_mutations, bench_throughput, bench_triangles
-    rows: list = []
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+def main(argv=None) -> None:
+    from benchmarks import bench_ewise, bench_khop, bench_kernels, \
+        bench_ktruss, bench_mutations, bench_throughput, bench_triangles
+    argv = list(sys.argv[1:] if argv is None else argv)
+    json_path = None
+    if "--json" in argv:
+        i = argv.index("--json")
+        try:
+            json_path = argv[i + 1]
+        except IndexError:
+            raise SystemExit("--json needs an output path")
+        del argv[i:i + 2]
+    only = argv[0] if argv else None
     suites = {
         "khop": bench_khop.run,
         "khop-dist": bench_khop.run_dist,
         "khop-packed": bench_khop.run_packed,
         "throughput": bench_throughput.run,
         "kernels": bench_kernels.run,
+        "ewise": bench_ewise.run,
         "triangles": bench_triangles.run,
         "ktruss": bench_ktruss.run,
         "mutations": bench_mutations.run,
     }
+    if only and only not in suites:
+        raise SystemExit(f"unknown suite {only!r}; one of "
+                         f"{', '.join(suites)}")
+    rows: list = []
+    records: list = []
     print("name,us_per_call,derived")
     for name, fn in suites.items():
         if only and name != only:
@@ -58,6 +78,13 @@ def main() -> None:
         fn(rows)
         for r in rows[start:]:
             print(f"{r[0]},{r[1]:.1f},{r[2]}")
+            records.append({"suite": name, "metric": r[0],
+                            "value": float(r[1]), "derived": str(r[2])})
+    if json_path:
+        with open(json_path, "w") as fh:
+            json.dump(records, fh, indent=1)
+        print(f"# wrote {len(records)} records to {json_path}",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -14,19 +14,22 @@ distributed — each hop's mxm lowers to one frontier all-gather plus local
 gather-reduce (distr.graph2d), with zero sharding arguments here.
 
 Frontiers wider than `grb.AUTO_PACK_MIN_WIDTH` ride the bitmap-packed
-boolean form automatically (or_and is this module's only semiring): each
-hop packs the frontier into uint32 words, ORs neighbor words, blends the
-complemented visited mask word-wise, and unpacks — bit-identical results,
-32x less frontier traffic, and on a mesh a 32x smaller per-hop all-gather
-(core.bitmap, docs/API.md §Bitmap). Nothing here opts in; the loops below
-are written against plain 0/1 float frontiers.
+boolean form *word-resident*: the loops below thread the packed uint32
+frontier (and visited mask) straight through the hop ``while_loop`` carry
+via `grb.mxm_words` — one pack at loop entry, word-wise visited blends
+per hop, one unpack at exit — instead of packing/unpacking at every
+`grb.mxm` call boundary. Bit-identical results, 32x less frontier traffic,
+and on a mesh a 32x smaller per-hop all-gather that never touches the host
+(core.bitmap, docs/API.md §Bitmap, §Transfer-accounting). Narrow frontiers
+and BSR/delta adjacency (no packed lowering) keep the plain 0/1 float
+loop — `grb.words_route_ok` is the gate.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import grb, semiring as S
+from repro.core import bitmap, grb, semiring as S
 from repro.core.grb import Descriptor
 
 
@@ -42,12 +45,39 @@ def bfs_step(A, frontier: jnp.ndarray, visited: jnp.ndarray) -> jnp.ndarray:
     return grb.mxm(A, frontier, S.OR_AND, d)
 
 
+def _bfs_levels_words(A, frontier: jnp.ndarray, iters: int) -> jnp.ndarray:
+    """Word-resident BFS: the frontier and visited set live as packed uint32
+    words across hops; the only per-hop unpack is the level stamp (a device
+    op — nothing crosses to the host)."""
+    f = frontier.shape[1]
+    fw = bitmap.pack(frontier)
+    vw = fw
+    levels = jnp.where(frontier > 0, 0.0, jnp.inf).astype(jnp.float32)
+
+    def cond(state):
+        t, fw, _, _ = state
+        return jnp.logical_and(t < iters, jnp.any(fw != 0))
+
+    def body(state):
+        t, fw, vw, levels = state
+        nw = bitmap.word_andnot(
+            grb.mxm_words(A, fw, transpose_a=True), vw)
+        levels = jnp.where(bitmap.unpack(nw, f) > 0, t + 1.0, levels)
+        return t + 1.0, nw, bitmap.word_or(vw, nw), levels
+
+    _, _, _, levels = jax.lax.while_loop(
+        cond, body, (jnp.float32(0.0), fw, vw, levels))
+    return levels
+
+
 def bfs_levels(A, seeds, max_iter: int = 0, rel=None):
     """Levels (n, F): hop distance from each seed column; +inf if unreached."""
     A = grb.matrix(A, rel)
     n = A.shape[0]
     iters = max_iter or n
     frontier = seeds_to_frontier(seeds, n)
+    if grb.words_route_ok(A, frontier.shape[1]):
+        return _bfs_levels_words(A, frontier, iters)
     levels = jnp.where(frontier > 0, 0.0, jnp.inf).astype(jnp.float32)
 
     def cond(state):
@@ -66,8 +96,44 @@ def bfs_levels(A, seeds, max_iter: int = 0, rel=None):
     return levels
 
 
+def _reach_words(A, fw: jnp.ndarray, iters: int,
+                 both_directions: bool = False) -> jnp.ndarray:
+    """Visited words after up-to-``iters`` or_and hops from packed frontier
+    ``fw`` — the fully word-resident reachability loop k-hop and WCC share:
+    no unpack anywhere in the carry, so a sharded adjacency runs the whole
+    closure on the mesh."""
+    def cond(state):
+        t, fw, _ = state
+        return jnp.logical_and(t < iters, jnp.any(fw != 0))
+
+    def body(state):
+        t, fw, vw = state
+        nw = grb.mxm_words(A, fw, transpose_a=True)
+        if both_directions:
+            # (a & ~v) | (b & ~v) == (a | b) & ~v: one visited blend serves
+            # both edge directions
+            nw = bitmap.word_or(nw, grb.mxm_words(A, fw))
+        nw = bitmap.word_andnot(nw, vw)
+        return t + 1, nw, bitmap.word_or(vw, nw)
+
+    _, _, vw = jax.lax.while_loop(cond, body, (jnp.int32(0), fw, fw))
+    return vw
+
+
 def khop_counts(A, seeds, k: int, rel=None) -> jnp.ndarray:
     """TigerGraph k-hop benchmark semantics: |{v : 1 <= dist(seed, v) <= k}|."""
+    A = grb.matrix(A, rel)
+    n = A.shape[0]
+    frontier = seeds_to_frontier(seeds, n)
+    f = frontier.shape[1]
+    if grb.words_route_ok(A, f):
+        # reached-within-k minus the seed itself: levels never stamp a seed
+        # above 0, so the seed column contributes exactly its own bit
+        fw = bitmap.pack(frontier)
+        vw = _reach_words(A, fw, k)
+        counts = (bitmap.reduce_or_columns(vw, f)
+                  - bitmap.reduce_or_columns(fw, f))
+        return counts.astype(jnp.int32)
     levels = bfs_levels(A, seeds, max_iter=k, rel=rel)
     inrange = jnp.logical_and(levels >= 1.0, levels <= float(k))
     return jnp.sum(inrange.astype(jnp.int32), axis=0)

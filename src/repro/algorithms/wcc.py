@@ -27,18 +27,24 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import grb, semiring as S
+from repro.core import bitmap, grb, semiring as S
 from repro.core.grb import Descriptor
-from repro.algorithms.traverse import seeds_to_frontier
+from repro.algorithms.traverse import _reach_words, seeds_to_frontier
 
 
 def _closure(A: grb.GBMatrix, seeds, max_iter: int) -> jnp.ndarray:
     """(n, F) 0/1 closure: column j is everything weakly reachable from
     seeds[j] (seed included) — or_and hops in both edge directions until
-    the frontier empties."""
+    the frontier empties. Wide-enough closures run word-resident: the
+    packed frontier/visited words thread straight through the hop loop
+    (one pack in, one unpack out — `traverse._reach_words`)."""
     n = A.shape[0]
     iters = max_iter or n
     frontier = seeds_to_frontier(seeds, n)
+    if grb.words_route_ok(A, frontier.shape[1]):
+        vw = _reach_words(A, bitmap.pack(frontier), iters,
+                          both_directions=True)
+        return bitmap.unpack(vw, frontier.shape[1])
 
     def cond(state):
         t, fr, _ = state

@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import xfer
+
 
 # ---------------------------------------------------------------------------
 # densification accounting
@@ -36,6 +38,19 @@ _densify_calls = [0]
 def densify_calls() -> int:
     """Total BSR.to_dense() materializations so far (monotonic)."""
     return _densify_calls[0]
+
+
+# Every numeric-phase round-trip through host numpy bumps this counter:
+# `BSR.from_blocks` (the host assembler that takes a *host* payload array)
+# is the choke point. The element-wise family and the SpGEMM numeric phase
+# promise zero bumps — their payloads go through `BSR.from_blocks_device`
+# and never leave the device (tests/test_transfers.py pins the delta).
+_host_numeric = [0]
+
+
+def host_numeric_calls() -> int:
+    """Total host-numpy numeric-phase assemblies so far (monotonic)."""
+    return _host_numeric[0]
 
 
 @jax.tree_util.register_pytree_node_class
@@ -87,44 +102,46 @@ class BSR:
 
     # -- construction --------------------------------------------------------
     @staticmethod
-    def _assemble(blocks, b_r, b_c, shape, block: int, nnz: int,
-                  dtype=jnp.float32, pad_to: int = 8) -> "BSR":
-        """Build a BSR from a host-side list of *valid* tiles with unique,
-        unsorted (block_row, block_col) coordinates, establishing every
-        kernel-steering invariant (padding rows, sort order, first/last
-        flags, row_ptr, grid padding)."""
-        n, m = shape
-        nbr, nbc = -(-n // block), -(-m // block)
-        if nbr == 0:          # zero-row shapes (an empty extract): no tiles
-            z32 = jnp.zeros(0, dtype=jnp.int32)
-            return BSR(shape=(n, m), block=block,
-                       blocks=jnp.zeros((0, block, block), dtype=dtype),
-                       block_rows=z32, block_cols=z32, first=z32, last=z32,
-                       valid=z32, row_ptr=jnp.zeros(1, dtype=jnp.int32),
-                       nnz=nnz)
+    def _empty(shape, block: int, nnz: int, dtype=jnp.float32) -> "BSR":
+        """Zero-row shapes (an empty extract): no tiles at all."""
+        z32 = jnp.zeros(0, dtype=jnp.int32)
+        return BSR(shape=shape, block=block,
+                   blocks=jnp.zeros((0, block, block), dtype=dtype),
+                   block_rows=z32, block_cols=z32, first=z32, last=z32,
+                   valid=z32, row_ptr=jnp.zeros(1, dtype=jnp.int32),
+                   nnz=nnz)
+
+    @staticmethod
+    def _assemble_meta(b_r, b_c, nbr: int, nbc: int, pad_to: int = 8):
+        """Structural phase shared by the host and device assemblers.
+
+        From unique, unsorted valid-tile coordinates, establish every
+        kernel-steering invariant — padding rows, sort order, first/last
+        flags, row_ptr, grid padding — on *coordinates only*. Returns
+        ``(a_r, a_c, valid, first, last, row_ptr, src)`` where ``src`` maps
+        each output slot to its position in the caller's valid-tile list
+        (-1 = an all-zero padding tile), so the payload gather can run on
+        either side of the device boundary."""
+        b_r = np.asarray(b_r, dtype=np.int32)
+        b_c = np.asarray(b_c, dtype=np.int32)
+        nv = len(b_r)
 
         # ensure every block-row has >= 1 tile: add invalid padding tiles
         present = np.zeros(nbr, dtype=bool)
         present[b_r] = True
         missing = np.nonzero(~present)[0].astype(np.int32)
-
-        nv = len(b_r)
         tot = nv + len(missing)
-        allb = np.zeros((tot, block, block), dtype=np.float32)
-        allb[:nv] = blocks
-        a_r = np.empty(tot, dtype=np.int32)
-        a_c = np.empty(tot, dtype=np.int32)
-        valid = np.empty(tot, dtype=np.int32)
-        a_r[:nv] = b_r
-        a_c[:nv] = b_c
-        valid[:nv] = 1
-        a_r[nv:] = missing
-        a_c[nv:] = 0
-        valid[nv:] = 0
+
+        a_r = np.concatenate([b_r, missing])
+        a_c = np.concatenate([b_c, np.zeros(len(missing), np.int32)])
+        valid = np.concatenate([np.ones(nv, np.int32),
+                                np.zeros(len(missing), np.int32)])
+        src = np.concatenate([np.arange(nv, dtype=np.int32),
+                              np.full(len(missing), -1, np.int32)])
 
         # sort with padding tiles interleaved
-        order = np.argsort(a_r * nbc + a_c, kind="stable")
-        allb, a_r, a_c, valid = allb[order], a_r[order], a_c[order], valid[order]
+        order = np.argsort(a_r.astype(np.int64) * nbc + a_c, kind="stable")
+        a_r, a_c, valid, src = a_r[order], a_c[order], valid[order], src[order]
 
         first = np.zeros(tot, dtype=np.int32)
         last = np.zeros(tot, dtype=np.int32)
@@ -137,15 +154,35 @@ class BSR:
         np.add.at(row_ptr, a_r + 1, 1)
         row_ptr = np.cumsum(row_ptr).astype(np.int32)
 
-        # pad nnzb to a grid-friendly multiple; pads repeat the final tile
+        # pad nnzb to a grid-friendly multiple; pads repeat the final tile's
+        # coordinates with an all-zero payload
         pad = (-tot) % pad_to
         if pad:
-            allb = np.concatenate([allb, np.zeros((pad, block, block), np.float32)])
             a_r = np.concatenate([a_r, np.full(pad, a_r[-1], np.int32)])
             a_c = np.concatenate([a_c, np.full(pad, a_c[-1], np.int32)])
             valid = np.concatenate([valid, np.zeros(pad, np.int32)])
             first = np.concatenate([first, np.zeros(pad, np.int32)])
             last = np.concatenate([last, np.zeros(pad, np.int32)])
+            src = np.concatenate([src, np.full(pad, -1, np.int32)])
+        return a_r, a_c, valid, first, last, row_ptr, src
+
+    @staticmethod
+    def _assemble(blocks, b_r, b_c, shape, block: int, nnz: int,
+                  dtype=jnp.float32, pad_to: int = 8) -> "BSR":
+        """Build a BSR from a host-side list of *valid* tiles with unique,
+        unsorted (block_row, block_col) coordinates (the structural phase
+        runs in :meth:`_assemble_meta`; this gathers the payload in numpy)."""
+        n, m = shape
+        nbr, nbc = -(-n // block), -(-m // block)
+        if nbr == 0:
+            return BSR._empty((n, m), block, nnz, dtype)
+
+        a_r, a_c, valid, first, last, row_ptr, src = BSR._assemble_meta(
+            b_r, b_c, nbr, nbc, pad_to)
+        allb = np.zeros((len(a_r), block, block), dtype=np.float32)
+        pos = src >= 0
+        if pos.any():
+            allb[pos] = np.asarray(blocks, dtype=np.float32)[src[pos]]
 
         return BSR(
             shape=(n, m), block=block,
@@ -194,6 +231,7 @@ class BSR:
         phase). All-zero tiles — masked-out or numerically cancelled output
         blocks — are pruned so `nvals`/`fill_ratio` report stored structure,
         not kernel artifacts; `nnz` counts the surviving nonzero entries."""
+        _host_numeric[0] += 1
         blocks = np.asarray(blocks, dtype=np.float32)
         b_r = np.asarray(block_rows, dtype=np.int32)
         b_c = np.asarray(block_cols, dtype=np.int32)
@@ -205,6 +243,52 @@ class BSR:
                              dtype=dtype, pad_to=pad_to)
 
     @staticmethod
+    def from_blocks_device(block_rows, block_cols, blocks, shape, block: int,
+                           dtype=jnp.float32, pad_to: int = 8,
+                           prune: bool = True) -> "BSR":
+        """Device-side counterpart of :meth:`from_blocks`: the structural
+        phase (pruning decisions, sort, padding rows) runs on the host
+        *coordinate* lists, but the tile payloads never leave the device —
+        only one (nt,) tile-occupancy pull and one nnz scalar cross the
+        boundary (structural metadata, the same class as ShardedELL's nnz;
+        not a counted host transfer)."""
+        n, m = shape
+        nbr, nbc = -(-n // block), -(-m // block)
+        b_r = np.asarray(block_rows, dtype=np.int32)
+        b_c = np.asarray(block_cols, dtype=np.int32)
+        if nbr == 0:
+            return BSR._empty((n, m), block, 0, dtype)
+        if len(b_r) == 0:
+            return BSR._assemble(np.zeros((0, block, block), np.float32),
+                                 b_r, b_c, (n, m), block, nnz=0,
+                                 dtype=dtype, pad_to=pad_to)
+        blocks = jnp.asarray(blocks).astype(jnp.float32)
+        nnz = int(jnp.count_nonzero(blocks))
+        if prune:
+            occupied = np.asarray(jnp.any(blocks != 0, axis=(1, 2)))
+            keep_idx = np.nonzero(occupied)[0].astype(np.int32)
+            b_r, b_c = b_r[occupied], b_c[occupied]
+        else:
+            keep_idx = np.arange(len(b_r), dtype=np.int32)
+        if len(b_r) == 0:       # everything cancelled / masked out
+            return BSR._assemble(np.zeros((0, block, block), np.float32),
+                                 b_r, b_c, (n, m), block, nnz=0,
+                                 dtype=dtype, pad_to=pad_to)
+        a_r, a_c, valid, first, last, row_ptr, src = BSR._assemble_meta(
+            b_r, b_c, nbr, nbc, pad_to)
+        gather = jnp.asarray(keep_idx[np.clip(src, 0, None)])
+        payload = jnp.where(jnp.asarray(src >= 0)[:, None, None],
+                            blocks[gather],
+                            jnp.float32(0.0)).astype(dtype)
+        return BSR(
+            shape=(n, m), block=block, blocks=payload,
+            block_rows=jnp.asarray(a_r), block_cols=jnp.asarray(a_c),
+            first=jnp.asarray(first), last=jnp.asarray(last),
+            valid=jnp.asarray(valid), row_ptr=jnp.asarray(row_ptr),
+            nnz=nnz,
+        )
+
+    @staticmethod
     def from_dense(A, block: int = 128, dtype=jnp.float32) -> "BSR":
         A = np.asarray(A)
         r, c = np.nonzero(A)
@@ -212,6 +296,7 @@ class BSR:
 
     def to_dense(self) -> jnp.ndarray:
         _densify_calls[0] += 1
+        xfer.record("bsr_densify")
         n, m = self.shape
         block = self.block
         nbr, nbc = self.nbrows, self.nbcols
@@ -240,6 +325,7 @@ class BSR:
 
     def to_coo(self):
         """Host-side COO extraction (snapshot/persistence path)."""
+        xfer.record("bsr_to_coo")
         b = self.block
         blocks = np.asarray(self.blocks, dtype=np.float32)
         br = np.asarray(self.block_rows)
@@ -419,9 +505,10 @@ def spgemm(A: "BSR", B: "BSR", sr, mask: Optional["BSR"] = None,
     shape = (A.shape[0], B.shape[1])
     plan = spgemm_symbolic(A, B, mask=mask, complement=complement)
     if plan.ntasks == 0:
-        return BSR.from_blocks(plan.c_rows, plan.c_cols,
-                               np.zeros((0, A.block, A.block), np.float32),
-                               shape, A.block)
+        return BSR.from_blocks_device(plan.c_rows, plan.c_cols,
+                                      np.zeros((0, A.block, A.block),
+                                               np.float32),
+                                      shape, A.block)
 
     from repro.kernels import bsr_spgemm as _k   # lazy: kernels import core
     mask_blocks = None
@@ -433,8 +520,9 @@ def spgemm(A: "BSR", B: "BSR", sr, mask: Optional["BSR"] = None,
     cblocks = _k.spgemm_blocks(A.blocks, B.blocks, plan, sr,
                                mask_blocks=mask_blocks, complement=complement,
                                impl=impl, interpret=interpret)
-    return BSR.from_blocks(plan.c_rows, plan.c_cols, np.asarray(cblocks),
-                           shape, A.block)
+    # device-side assembly: the numeric-phase output tiles never visit host
+    return BSR.from_blocks_device(plan.c_rows, plan.c_cols, cblocks,
+                                  shape, A.block)
 
 
 def bsr_union(A: "BSR", B: "BSR") -> "BSR":
@@ -456,12 +544,14 @@ def bsr_union(A: "BSR", B: "BSR") -> "BSR":
 # GrB_apply / GxB_select), never materializing a dense operand
 # ---------------------------------------------------------------------------
 # Stored == nonzero (the repo-wide structural convention); an absent entry
-# renders as 0 when densified. All ops therefore work on the *valid* tile
-# lists: one host-side coordinate plan (union / intersection of block keys,
-# the element-wise analog of the SpGEMM symbolic phase) plus one vectorized
-# gather over tile payloads. Results go through BSR.from_blocks, so tiles
-# that end up all-zero (a select that empties a tile, a cancelled add) are
-# pruned and nvals/fill_ratio stay truthful.
+# renders as 0 when densified. All ops therefore split into a host-side
+# coordinate plan (union / intersection of block keys, the element-wise
+# analog of the SpGEMM symbolic phase) and a *device-resident* numeric phase:
+# the gathered-tile map in kernels/bsr_ewise.py (Pallas on TPU, an XLA
+# gather reference elsewhere). Results go through BSR.from_blocks_device, so
+# tiles that end up all-zero (a select that empties a tile, a cancelled add)
+# are pruned and nvals/fill_ratio stay truthful — and the payloads never
+# round-trip through host numpy (`host_numeric_calls()` pins this).
 
 def reblock(A: "BSR", block: int) -> "BSR":
     """Rebuild at a different tile size (sparse: COO round-trip, no dense)."""
@@ -503,24 +593,19 @@ def _key_select(wanted: np.ndarray, keys: np.ndarray,
     return out
 
 
-def _gather_tiles(blocks: np.ndarray, sel: np.ndarray,
-                  block: int) -> np.ndarray:
-    """Stack the selected tiles; sel == -1 yields an all-zero tile."""
-    if len(sel) == 0:
-        return np.zeros((0, block, block), dtype=np.float32)
-    out = blocks[np.clip(sel, 0, None)].astype(np.float32, copy=True)
-    out *= (sel >= 0).astype(np.float32)[:, None, None]
-    return out
+def _map_tiles(Ablocks, sel_a, Bblocks, sel_b, mode, op, impl):
+    from repro.kernels import bsr_ewise as _k   # lazy: kernels import core
+    return _k.map_tiles(Ablocks, sel_a, Bblocks, sel_b, mode, op, impl=impl)
 
 
-def ewise_add(A: "BSR", B: "BSR", op) -> "BSR":
+def ewise_add(A: "BSR", B: "BSR", op, impl: str = "xla") -> "BSR":
     """C = A (+) B — GraphBLAS *union* semantics over stored entries.
 
     Pattern(C) = pattern(A) | pattern(B). Where both sides store an entry
     the value is op(a, b); where only one side does, the stored value passes
     through *unchanged* — the absent side is never fed to op, so
     non-zero-preserving monoids (min, max with negatives) stay correct.
-    Block-aligned: one gathered tile pair per union tile.
+    Block-aligned: one gathered tile pair per union tile, numerics on device.
     """
     _check_same_shape(A, B, "bsr.ewise_add")
     B = reblock(B, A.block)
@@ -530,20 +615,14 @@ def ewise_add(A: "BSR", B: "BSR", op) -> "BSR":
     ka = _tile_keys(ra, ca, nbc)
     kb = _tile_keys(rb, cb, nbc)
     keys = np.union1d(ka, kb)
-    Ta = _gather_tiles(np.asarray(A.blocks, dtype=np.float32),
-                       _key_select(keys, ka, ia), A.block)
-    Tb = _gather_tiles(np.asarray(B.blocks, dtype=np.float32),
-                       _key_select(keys, kb, ib), A.block)
-    both = (Ta != 0) & (Tb != 0)
-    # where only one side is stored the other tile holds 0, so Ta + Tb is
-    # exactly "the stored value" there (and 0 where neither side stores)
-    res = np.where(both, np.asarray(op(Ta, Tb), dtype=np.float32), Ta + Tb)
-    return BSR.from_blocks((keys // nbc).astype(np.int32),
-                           (keys % nbc).astype(np.int32),
-                           res, A.shape, A.block)
+    res = _map_tiles(A.blocks, _key_select(keys, ka, ia),
+                     B.blocks, _key_select(keys, kb, ib), "union", op, impl)
+    return BSR.from_blocks_device((keys // nbc).astype(np.int32),
+                                  (keys % nbc).astype(np.int32),
+                                  res, A.shape, A.block)
 
 
-def ewise_mult(A: "BSR", B: "BSR", op) -> "BSR":
+def ewise_mult(A: "BSR", B: "BSR", op, impl: str = "xla") -> "BSR":
     """C = A (.*) B — GraphBLAS *intersection* semantics over stored entries.
 
     Pattern(C) = pattern(A) & pattern(B); values op(a, b) on the
@@ -558,46 +637,40 @@ def ewise_mult(A: "BSR", B: "BSR", op) -> "BSR":
     ka = _tile_keys(ra, ca, nbc)
     kb = _tile_keys(rb, cb, nbc)
     keys = np.intersect1d(ka, kb)
-    Ta = _gather_tiles(np.asarray(A.blocks, dtype=np.float32),
-                       _key_select(keys, ka, ia), A.block)
-    Tb = _gather_tiles(np.asarray(B.blocks, dtype=np.float32),
-                       _key_select(keys, kb, ib), A.block)
-    both = (Ta != 0) & (Tb != 0)
-    res = np.where(both, np.asarray(op(Ta, Tb), dtype=np.float32),
-                   np.float32(0.0))
-    return BSR.from_blocks((keys // nbc).astype(np.int32),
-                           (keys % nbc).astype(np.int32),
-                           res, A.shape, A.block)
+    res = _map_tiles(A.blocks, _key_select(keys, ka, ia),
+                     B.blocks, _key_select(keys, kb, ib), "intersect", op,
+                     impl)
+    return BSR.from_blocks_device((keys // nbc).astype(np.int32),
+                                  (keys % nbc).astype(np.int32),
+                                  res, A.shape, A.block)
 
 
-def apply_stored(A: "BSR", f) -> "BSR":
+def apply_stored(A: "BSR", f, impl: str = "xla") -> "BSR":
     """GrB_apply over stored entries only: C[i,j] = f(A[i,j]) where stored.
 
     f runs on the valid tile payloads; zero lanes inside a stored tile are
     *absent* entries and stay zero regardless of f(0) — structural
     semantics, not a dense map."""
     ia, ra, ca = A.valid_tiles()
-    blk = np.asarray(A.blocks, dtype=np.float32)[ia]
-    res = np.where(blk != 0, np.asarray(f(blk), dtype=np.float32),
-                   np.float32(0.0))
-    return BSR.from_blocks(ra, ca, res, A.shape, A.block)
+    res = _map_tiles(A.blocks, ia, None, None, "apply", f, impl)
+    return BSR.from_blocks_device(ra, ca, res, A.shape, A.block)
 
 
-def select_stored(A: "BSR", pred) -> "BSR":
+def select_stored(A: "BSR", pred, impl: str = "xla") -> "BSR":
     """GxB_select: keep stored entries where pred(value); drop the rest.
-    Tiles the predicate empties entirely are pruned (from_blocks)."""
+    Tiles the predicate empties entirely are pruned (from_blocks_device)."""
     ia, ra, ca = A.valid_tiles()
-    blk = np.asarray(A.blocks, dtype=np.float32)[ia]
-    keep = (blk != 0) & np.asarray(pred(blk), dtype=bool)
-    res = np.where(keep, blk, np.float32(0.0))
-    return BSR.from_blocks(ra, ca, res, A.shape, A.block)
+    res = _map_tiles(A.blocks, ia, None, None, "select", pred, impl)
+    return BSR.from_blocks_device(ra, ca, res, A.shape, A.block)
 
 
-def mask_keep(A: "BSR", M: "BSR", complement: bool = False) -> "BSR":
+def mask_keep(A: "BSR", M: "BSR", complement: bool = False,
+              impl: str = "xla") -> "BSR":
     """A restricted to M's stored element pattern (<M>), or to its absent
     pattern (<!M>) — the sparse building block of the descriptor blend.
     Non-complemented masks drop A tiles with no mask tile without gathering
-    them; complemented masks keep those tiles whole."""
+    them; complemented masks keep those tiles whole (an absent mask tile
+    reads as all-zero, which `mask_c` keeps in full)."""
     _check_same_shape(A, M, "bsr.mask_keep")
     M = reblock(M, A.block)
     ia, ra, ca = A.valid_tiles()
@@ -608,17 +681,15 @@ def mask_keep(A: "BSR", M: "BSR", complement: bool = False) -> "BSR":
         keep_tile = sel_m >= 0          # block-level prune, SpGEMM-style
         ia, ra, ca, sel_m = ia[keep_tile], ra[keep_tile], ca[keep_tile], \
             sel_m[keep_tile]
-    blk = np.asarray(A.blocks, dtype=np.float32)[ia] if len(ia) else \
-        np.zeros((0, A.block, A.block), np.float32)
-    Mt = _gather_tiles(np.asarray(M.blocks, dtype=np.float32), sel_m, A.block)
-    keep = (Mt == 0) if complement else (Mt != 0)
-    res = np.where(keep, blk, np.float32(0.0))
-    return BSR.from_blocks(ra, ca, res, A.shape, A.block)
+    res = _map_tiles(A.blocks, ia, M.blocks, sel_m,
+                     "mask_c" if complement else "mask", None, impl)
+    return BSR.from_blocks_device(ra, ca, res, A.shape, A.block)
 
 
 def extract_ranges(A: "BSR", r0: int, r1: int, c0: int, c1: int) -> "BSR":
     """Block-aligned GrB_extract fast path: A[r0:r1, c0:c1] with r0/c0 on
-    tile boundaries — pure tile-list surgery, no element movement."""
+    tile boundaries — tile-list surgery on host coordinates; the payload
+    gather and boundary cropping stay on device."""
     if r0 % A.block or c0 % A.block:
         raise ValueError("extract_ranges needs block-aligned starts "
                          f"(got {r0}, {c0} for block {A.block})")
@@ -628,12 +699,15 @@ def extract_ranges(A: "BSR", r0: int, r1: int, c0: int, c1: int) -> "BSR":
     ia, ra, ca = A.valid_tiles()
     keep = (ra >= br0) & (ra < br1) & (ca >= bc0) & (ca < bc1)
     ia, ra, ca = ia[keep], ra[keep] - br0, ca[keep] - bc0
-    blk = np.asarray(A.blocks, dtype=np.float32)[ia] if len(ia) else \
-        np.zeros((0, b, b), np.float32)
     out_n, out_m = r1 - r0, c1 - c0
     if len(ia):
-        # crop boundary tiles that extend past the slice end
+        blk = jnp.asarray(A.blocks).astype(jnp.float32)[jnp.asarray(ia)]
+        # crop boundary tiles that extend past the slice end (the crop
+        # pattern is host structural metadata; the multiply runs on device)
         rows_ok = (ra[:, None] * b + np.arange(b)[None, :]) < out_n
         cols_ok = (ca[:, None] * b + np.arange(b)[None, :]) < out_m
-        blk = blk * rows_ok[:, :, None] * cols_ok[:, None, :]
-    return BSR.from_blocks(ra, ca, blk, (out_n, out_m), b)
+        blk = blk * jnp.asarray((rows_ok[:, :, None]
+                                 & cols_ok[:, None, :]).astype(np.float32))
+    else:
+        blk = jnp.zeros((0, b, b), jnp.float32)
+    return BSR.from_blocks_device(ra, ca, blk, (out_n, out_m), b)

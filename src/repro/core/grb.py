@@ -28,9 +28,13 @@ row layout laid out over a mesh ("data" axis rows, pod x model frontier
 columns). :func:`distribute` re-homes an ELL handle onto a mesh; mxm/mxv/
 reduce then lower to the explicit-collective shard_map bodies in
 `repro.distr.graph2d` (all-gather frontier in row form, psum_scatter row
-blocks in transposed form), apply/select run shard-local, and the rest of
-the family falls back to a documented gather-to-host round trip
-(docs/API.md §Sharded).
+blocks in transposed form), and the element-wise family — eWiseAdd/Mult,
+apply/select with full descriptor blending, column extract/assign, min/max
+reduce — runs *shard-local* through the slot-aligned merge lowering
+(`graph2d.ewise_2d`): rows live whole on one shard, so COO set algebra
+never needs a collective, let alone a gather. The few genuinely
+cross-shard requests (row-subset extract/assign, cross-mesh masks) gather
+to host and bump :func:`host_transfers` (docs/API.md §Sharded).
 
 The fifth storage kind is the *delta* form (`core.delta.DeltaMatrix`,
 docs/API.md §Delta): a frozen base plus pending plus/minus COO deltas, the
@@ -59,10 +63,14 @@ Public contract (what raises, what moves data):
     :func:`distribute`; sharded `out=` under unsharded operands.
   * ValueError — shape mismatches (operands, masks vs result, assign
     regions) and invalid/duplicate index vectors.
-  * Gathers to host (documented, correct, not mesh-resident) — eWise on
-    two same-mesh sharded operands, assign/extract, apply/select under a
-    descriptor blend, min/max reduce, and sparse descriptor *masks* on
-    sharded ops. Everything else on a sharded handle stays on the mesh.
+  * Gathers to host (documented, correct, *counted* by
+    :func:`host_transfers`) — only genuinely cross-shard requests:
+    row-subset assign/extract (rows re-partition the "data" axis) and a
+    sparse mask sharded on a *different* mesh. Everything else on a
+    sharded handle stays on the mesh: eWiseAdd/Mult, apply/select under
+    any descriptor blend, column extract/assign, and min/max reduce all
+    run shard-local through the slot-aligned merge in
+    `distr.graph2d.ewise_2d` (docs/API.md §Sharded).
 
 Algorithms (`repro.algorithms`), the query executor (`repro.query.executor`),
 and the batched server (`repro.engine.server`) all dispatch through here —
@@ -93,6 +101,7 @@ from repro.core import coo as _coo
 from repro.core import ops as _ops
 from repro.core import semiring as S
 from repro.core import shard as _shard
+from repro.core import xfer as _xfer
 from repro.core.bsr import BSR, SPGEMM_MODES as _SPGEMM_MODES
 from repro.core.delta import AUTO_DELTA_COMPACT, DeltaMatrix  # noqa: F401
 from repro.core.ell import ELL
@@ -704,6 +713,67 @@ def mxm(A, B, sr: S.Semiring, d: Descriptor = NULL,
     return finalize(d, y, out, sr.identity)
 
 
+def host_transfers() -> int:
+    """Device->host gathers inside op dispatch since process start — the
+    transfer-accounting sibling of ``densify_calls()`` / ``pack_calls()``
+    (core.xfer). Sharded gathers (``ShardedELL.to_ell`` and everything that
+    routes through it) and BSR host materializations bump it; materializing
+    a final algorithm *result* does not. "Zero host transfers in any
+    sharded hot loop" is pinned as a delta of this counter plus the
+    structural HLO scan in ``distr.graph2d.scan_host_transfers``."""
+    return _xfer.host_transfers()
+
+
+def mxm_words(A, Bw: Array, transpose_a: bool = False) -> Array:
+    """or_and mxm with the frontier already bitmap-packed: (k, W) uint32
+    words in, (rows, W) words out — the packed-in/packed-out entry that
+    word-resident hop loops (BFS / k-hop / WCC / executor sweeps) thread
+    through a ``while_loop`` carry, so nothing packs, unpacks, or gathers
+    at the per-hop call boundary.
+
+    No descriptor: the or_and identity is 0, so callers blend masks
+    word-wise themselves (``bitmap.word_and`` / ``word_andnot`` — exactly
+    what the visited-complement mask of a traversal is). Dense, ELL, and
+    sharded operands lower natively packed; BSR/delta operands have no
+    packed route (their or_and path is the MXU indicator matmul) and
+    detour through the float mxm *on device*, re-packing the result —
+    gate callers with :func:`words_route_ok` to avoid that.
+    """
+    A = GBMatrix.wrap(A)
+    if A.fmt == "sharded":
+        transposed = False
+        if transpose_a:
+            if A._T is not None:
+                A = A.T
+            else:
+                transposed = True
+        return _shard.mxm_words(A.store, Bw, transposed=transposed)
+    if transpose_a:
+        A = A.T
+    if A.fmt == "ell":
+        if jax.default_backend() == "tpu":
+            from repro.kernels import ops as kops   # lazy: kernels import core
+            return kops.ell_mxv_packed(A.store, Bw)
+        return _ops.ell_mxm_packed(A.store, Bw)
+    if A.fmt == "dense":
+        return _ops.dense_mxm_packed(A.store, Bw)
+    f = Bw.shape[1] * _bitmap.WORD_BITS
+    y = mxm(A, _bitmap.unpack(Bw, f), S.OR_AND)
+    if isinstance(y, GBMatrix):
+        y = y.to_dense()
+    return _bitmap.pack(y)
+
+
+def words_route_ok(A, f: int) -> bool:
+    """Trace-time gate for word-resident hop loops: True when
+    :func:`mxm_words` lowers natively packed for this operand (dense / ELL /
+    sharded storage) and the packing policy wants a width-``f`` frontier
+    packed (``packed_frontiers`` / AUTO_PACK_MIN_WIDTH). BSR and delta
+    operands keep the float hop loop."""
+    A = GBMatrix.wrap(A)
+    return A.fmt in ("dense", "ell", "sharded") and _pack_wanted(f)
+
+
 def _columnize(v) -> Optional[Array]:
     # sparse GBMatrix/BSR masks have no ndim and pass through to mxm's
     # mask conversion untouched; (n,) vectors become width-1 columns
@@ -806,6 +876,74 @@ def _sharded_pair_mesh(fn: str, a, b, out=None):
         raise TypeError(f"grb.{fn}: out= lives on a different mesh than the "
                         f"operands — distribute all three onto one mesh")
     return mesh
+
+
+# stable-identity ops for the shard-local merge (graph2d.ewise_2d lru-caches
+# its shard_map per (mesh, mode, op) — module-level callables keep it warm)
+def _take_second(a, b):           # mask restricts never consult the op
+    del a
+    return b
+
+
+def _disjoint_concat(a, b):       # unions of provably disjoint patterns
+    return a + b
+
+
+def _sharded_restrict(res: ShardedELL, mask, complement: bool) -> ShardedELL:
+    """Mask restrict on a sharded result, shard-local whenever possible:
+    a same-mesh sharded mask merges through the slot-aligned pass; any
+    dense/host-sparse mask takes the per-slot dense gather. Only a mask
+    sharded on a *different* mesh still gathers (counted via to_ell)."""
+    m = mask.store if isinstance(mask, GBMatrix) else mask
+    if isinstance(m, ShardedELL) and m.mesh == res.mesh:
+        if m.shape != res.shape:
+            raise ValueError(f"descriptor mask shape {tuple(m.shape)} != "
+                             f"result {tuple(res.shape)}")
+        return _shard.merge_stored(res, m, _take_second,
+                                   "mask_c" if complement else "mask")
+    md = _mask_storage(mask)
+    dense = md if isinstance(md, (jnp.ndarray, np.ndarray)) else md.to_dense()
+    if tuple(dense.shape) != tuple(res.shape):
+        raise ValueError(f"descriptor mask shape {tuple(dense.shape)} != "
+                         f"result {tuple(res.shape)}")
+    return _shard.restrict_dense(res, dense, complement)
+
+
+def _sharded_blend(d: Descriptor, res: ShardedELL,
+                   out: Optional[ShardedELL]) -> ShardedELL:
+    """The structural blend rule (union-accum, empty outside the mask) on
+    ShardedELL storage — the mesh-resident sibling of
+    _structural_finalize_bsr, composed entirely from shard-local merges."""
+    if d.accum is not None and out is not None:
+        res = _shard.merge_stored(out, res, d.accum.op, "union")
+    if d.mask is None:
+        return res
+    z_in = _sharded_restrict(res, d.mask, d.complement)
+    if out is None or d.replace:
+        return z_in
+    old = _sharded_restrict(out, d.mask, not d.complement)
+    return _shard.merge_stored(z_in, old, _disjoint_concat, "union")
+
+
+def _sharded_out(out, fn: str, mesh, shape) -> Optional[ShardedELL]:
+    """Coerce an out= operand for the shard-local blend. A same-mesh sharded
+    out passes through; host-sparse outs re-home onto the mesh (a host->
+    device put, not a gather); dense outs raise the family's TypeError."""
+    if out is None:
+        return None
+    kind, store = _operand_kind(out)
+    if kind == "dense":
+        raise TypeError(f"grb.{fn}: sparse operands need a sparse out= "
+                        f"(GBMatrix/BSR/ELL) or None (got a dense array); "
+                        f"wrap it with GBMatrix.from_dense(out, fmt='ell')")
+    if tuple(store.shape) != tuple(shape):
+        raise ValueError(f"grb.{fn}: out shape {store.shape} != result "
+                         f"{shape}")
+    if kind == "sharded":
+        return store                      # same mesh: _sharded_pair_mesh ran
+    if kind == "bsr":
+        store = ELL.from_coo(*store.to_coo(), store.shape)
+    return ShardedELL.from_ell(store, mesh)
 
 
 def _ewise_pair(a, b, fn: str):
@@ -962,9 +1100,14 @@ def ewise_add(a, b, monoid: S.Monoid, d: Descriptor = NULL, out=None):
     TypeError. ``monoid`` may be a Monoid or a raw binary callable.
     """
     mesh = _sharded_pair_mesh("ewise_add", a, b, out)
-    if mesh is not None:                 # gather-to-host (docs/API.md §Sharded)
-        res = ewise_add(_unshard(a), _unshard(b), monoid, d, _unshard(out))
-        return distribute(res, mesh)
+    if mesh is not None:                 # mesh-resident slot-aligned merge
+        op = getattr(monoid, "op", monoid)
+        A, B = _operand_kind(a)[1], _operand_kind(b)[1]
+        if A.shape != B.shape:
+            raise ValueError(f"grb.ewise_add shapes: {A.shape} vs {B.shape}")
+        res = _shard.merge_stored(A, B, op, "union")
+        C = _sharded_out(out, "ewise_add", mesh, A.shape)
+        return _wrap_sparse(_sharded_blend(d, res, C), a, b, out)
     op = getattr(monoid, "op", monoid)
     kind, A, B = _ewise_pair(a, b, "ewise_add")
     if kind == "dense":
@@ -989,9 +1132,14 @@ def ewise_mult(a, b, op: Callable[[Array, Array], Array],
     element work). ``op`` may be a Monoid or a raw binary callable.
     """
     mesh = _sharded_pair_mesh("ewise_mult", a, b, out)
-    if mesh is not None:                 # gather-to-host (docs/API.md §Sharded)
-        res = ewise_mult(_unshard(a), _unshard(b), op, d, _unshard(out))
-        return distribute(res, mesh)
+    if mesh is not None:                 # mesh-resident slot-aligned merge
+        op2 = getattr(op, "op", op)
+        A, B = _operand_kind(a)[1], _operand_kind(b)[1]
+        if A.shape != B.shape:
+            raise ValueError(f"grb.ewise_mult shapes: {A.shape} vs {B.shape}")
+        res = _shard.merge_stored(A, B, op2, "intersect")
+        C = _sharded_out(out, "ewise_mult", mesh, A.shape)
+        return _wrap_sparse(_sharded_blend(d, res, C), a, b, out)
     op = getattr(op, "op", op)
     kind, A, B = _ewise_pair(a, b, "ewise_mult")
     if kind == "dense":
@@ -1014,16 +1162,16 @@ def apply(f: Callable[[Array], Array], x, d: Descriptor = NULL, out=None):
 
     Zero entries of a dense operand (and zero lanes inside stored BSR
     tiles) are absent and stay zero regardless of f(0). On a sharded
-    operand the plain call (no mask/accum/out) is collective-free — the
-    value map runs on each row shard in place; descriptor blends take the
-    gather-to-host path (docs/API.md §Sharded).
+    operand every call is mesh-resident: the value map runs on each row
+    shard in place, and descriptor blends compose shard-local merges
+    (docs/API.md §Sharded).
     """
     _sharded_pair_mesh("apply", x, None, out)       # mixed-out contract
     kind, X = _operand_kind(x)
     if kind == "sharded":
-        if d.mask is None and d.accum is None and out is None:
-            return _wrap_sparse(X.apply_stored(f), x)
-        return distribute(apply(f, _unshard(x), d, _unshard(out)), X.mesh)
+        res = X.apply_stored(f)
+        C = _sharded_out(out, "apply", X.mesh, X.shape)
+        return _wrap_sparse(_sharded_blend(d, res, C), x, out)
     if kind == "dense":
         raw = jnp.where(X != 0, f(X), jnp.zeros_like(X))
         return _structural_finalize_dense(d, raw, _dense_out(out, "apply"))
@@ -1044,16 +1192,15 @@ def select(pred: Callable[[Array], Array], x, d: Descriptor = NULL,
     Same signature and descriptor semantics as :func:`apply` (the mask /
     accum / out path goes through the same finalize); sparse results prune
     tiles the predicate emptied, so nvals/fill_ratio stay truthful. Sharded
-    dispatch mirrors :func:`apply`: shard-local when undecorated, gather-to-
-    host under a descriptor blend.
+    dispatch mirrors :func:`apply`: shard-local mask surgery, with
+    descriptor blends composed from shard-local merges.
     """
     _sharded_pair_mesh("select", x, None, out)      # mixed-out contract
     kind, X = _operand_kind(x)
     if kind == "sharded":
-        if d.mask is None and d.accum is None and out is None:
-            return _wrap_sparse(X.select_stored(pred), x)
-        return distribute(select(pred, _unshard(x), d, _unshard(out)),
-                          X.mesh)
+        res = X.select_stored(pred)
+        C = _sharded_out(out, "select", X.mesh, X.shape)
+        return _wrap_sparse(_sharded_blend(d, res, C), x, out)
     if kind == "dense":
         raw = jnp.where((X != 0) & pred(X), X, jnp.zeros_like(X))
         return _structural_finalize_dense(d, raw, _dense_out(out, "select"))
@@ -1150,9 +1297,10 @@ def reduce(x, monoid: S.Monoid, axis=None) -> Array:
     and or monoids — full reduction, axis=0 (per column) and axis=1 (per
     row); "or" means "any stored entry", correct for negative values. Other
     monoids need the absent entries (dense zeros) and fall back through
-    to_dense(). Sharded operands reduce on the mesh (per-row sums are
-    shard-local, full/per-column sums psum partials over "data"); the
-    min/max fallback gathers to host like the ELL one densifies. Delta
+    to_dense(). Sharded operands reduce on the mesh for plus/or (per-row
+    sums shard-local, full/per-column sums psum partials over "data") *and*
+    for min/max (stored-entry pmin/pmax + a stored-count compare folds the
+    implicit zeros back in — graph2d.reduce_minmax_2d, no gather). Delta
     operands compose (plus/or) with zero rebuild — see _reduce_delta."""
     s = x.store if isinstance(x, GBMatrix) else x
     if isinstance(s, DeltaMatrix):
@@ -1166,7 +1314,9 @@ def reduce(x, monoid: S.Monoid, axis=None) -> Array:
     if kind == "sharded":
         if monoid.name in ("plus", "or") and axis in (None, 0, 1):
             return _shard.reduce_stored(X, monoid, axis)
-        return monoid.reduce(X.to_dense(), axis=axis)
+        if monoid.name in ("min", "max") and axis in (None, 0, 1):
+            return _shard.reduce_minmax(X, monoid, axis)
+        return monoid.reduce(X.to_dense(), axis=axis)   # counted gather
     return monoid.reduce(X, axis=axis)
 
 
@@ -1201,11 +1351,21 @@ def extract(A, rows=None, cols=None, d: Descriptor = NULL, out=None):
     operands return dense arrays; sparse operands stay sparse (BSR uses
     pure tile-list surgery when the ranges are contiguous and block-aligned,
     COO relabeling otherwise) and return a GBMatrix. The descriptor applies
-    to the extracted (len(rows), len(cols)) result. Sharded operands gather
-    to host and re-shard the extracted result (docs/API.md §Sharded).
+    to the extracted (len(rows), len(cols)) result. Sharded operands stay
+    mesh-resident for column subsets (rows=None — a shard-local LUT
+    relabel); row subsets re-partition the "data" axis and take the counted
+    gather fallback (docs/API.md §Sharded).
     """
     mesh = _sharded_pair_mesh("extract", A, None, out)
     if mesh is not None:
+        SA = _operand_kind(A)[1]
+        n, m = SA.shape
+        I = _norm_index(rows, n, "extract")
+        J = _norm_index(cols, m, "extract")
+        if rows is None or (len(I) == n and np.array_equal(I, np.arange(n))):
+            sub = _shard.extract_cols(SA, J)
+            C = _sharded_out(out, "extract", mesh, sub.shape)
+            return _wrap_sparse(_sharded_blend(d, sub, C), A, out)
         return distribute(extract(_unshard(A), rows, cols, d, _unshard(out)),
                           mesh)
     kind, SA = _operand_kind(A)
@@ -1233,6 +1393,43 @@ def extract(A, rows=None, cols=None, d: Descriptor = NULL, out=None):
                                  (len(I), len(J))), A, out)
 
 
+def _assign_sharded_cols(C, sc: ShardedELL, A, J: np.ndarray,
+                         d: Descriptor):
+    """C(:, J)<M> accum= A with C sharded — fully mesh-resident: the region
+    (all rows x J) splits from the rest of C by shard-local column LUTs, the
+    blend runs on the (n, len(J)) region in local coordinates, and the
+    result relabels back into global columns and unions with the untouched
+    entries (disjoint patterns, so the merge never consults the op)."""
+    n, m = sc.shape
+    ka, sa = _operand_kind(A)
+    if sa.shape != (n, len(J)):
+        raise ValueError(f"grb.assign: A shape {sa.shape} != region "
+                         f"{(n, len(J))}")
+    if len(J) == 0:
+        return C if isinstance(C, GBMatrix) else sc
+    if ka == "sharded":
+        if sa.mesh != sc.mesh:
+            raise TypeError("grb.assign: sharded operands live on different "
+                            "meshes — distribute both onto one mesh")
+    else:
+        # re-home the region operand onto C's mesh (host->device put)
+        if ka == "dense":
+            e = ELL.from_dense(np.asarray(sa))
+        elif isinstance(sa, ELL):
+            e = sa
+        else:
+            e = ELL.from_coo(*sa.to_coo(), sa.shape)
+        sa = ShardedELL.from_ell(e, sc.mesh)
+    lut_out = np.arange(m, dtype=np.int32)
+    lut_out[J] = -1
+    c_out = _shard.relabel_cols(sc, lut_out, m)     # entries outside region
+    c_in = _shard.extract_cols(sc, J)               # region, local coords
+    blended = _sharded_blend(d, sa, c_in)
+    back = _shard.relabel_cols(blended, np.asarray(J, np.int32), m)
+    res = _shard.merge_stored(c_out, back, _disjoint_concat, "union")
+    return _wrap_sparse(res, C)
+
+
 def assign(C, A, rows=None, cols=None, d: Descriptor = NULL):
     """C(rows, cols)<M> accum= A — the GrB_assign analog (functional: C is
     not mutated; a new handle/array of C's kind is returned).
@@ -1242,8 +1439,11 @@ def assign(C, A, rows=None, cols=None, d: Descriptor = NULL):
     region's pattern is *replaced* by A's (entries of C absent in A are
     deleted). Sparse C stays sparse: entries are re-split by region
     host-side and the blend runs on COO entry sets — no densification.
-    Sharded C gathers to host and re-shards the blended result
-    (docs/API.md §Sharded); A may be sharded alongside it.
+    Sharded C stays mesh-resident for column regions (rows=None): region
+    split, blend, and reassembly are shard-local LUT relabels + merges;
+    row subsets re-partition the "data" axis and take the counted gather
+    fallback (docs/API.md §Sharded). A may be sharded alongside C (same
+    mesh) or host-side (re-homed onto the mesh, a host->device put).
     """
     if "sharded" in (_operand_kind(C)[0], _operand_kind(A)[0]):
         kc, sc = _operand_kind(C)
@@ -1252,6 +1452,11 @@ def assign(C, A, rows=None, cols=None, d: Descriptor = NULL):
                 "grb.assign: A is sharded but C is not — operand kinds must "
                 "match; distribute C (grb.distribute) or gather A "
                 "(A.to_ell())")
+        n, m = sc.shape
+        I = _norm_index(rows, n, "assign")
+        J = _norm_index(cols, m, "assign")
+        if rows is None or (len(I) == n and np.array_equal(I, np.arange(n))):
+            return _assign_sharded_cols(C, sc, A, J, d)
         return distribute(assign(_unshard(C), _unshard(A), rows, cols, d),
                           sc.mesh)
     kindC, SC = _operand_kind(C)

@@ -19,15 +19,21 @@ or_and frontiers cross the mesh bitmap-packed (``core.bitmap`` uint32
 words — 32x less all-gather payload; grb sets ``packed=`` from its policy,
 this module only pads/packs/unpacks at the lowering boundary).
 ``apply``/``select`` are embarrassingly local (stored-entry value maps) and
-run right on the sharded arrays below. Everything else (eWise, assign,
-extract, non-plus/or reductions) falls back to a documented gather-to-host
-round trip — see docs/API.md §Sharded.
+run right on the sharded arrays below. eWiseAdd/Mult, mask restricts,
+column extract/assign, and min/max reduce are *also* mesh-resident now:
+two identically-meshed operands merge shard-locally through the
+slot-alignment pass in ``distr.graph2d.ewise_2d`` (rows live whole on one
+shard, so COO set algebra is row-local). Only genuinely cross-shard
+requests — row-subset extract/assign, a mask sharded on a *different*
+mesh — still gather to host, and every such gather bumps
+``core.xfer.host_transfers()`` (surfaced as ``grb.host_transfers()``).
 
 Public contract: construction needs a Mesh with a "data" axis (TypeError /
 ValueError otherwise); ``to_ell``/``to_dense``/``to_coo``/``transpose``
-gather to host by design; everything in the "local stored-entry ops"
-section is collective-free. Mixed sharded/unsharded operand TypeErrors are
-raised one layer up, in ``repro.core.grb``, which owns the pairing rules.
+gather to host by design *and are counted*; everything in the "local
+stored-entry ops" section is collective-free. Mixed sharded/unsharded
+operand TypeErrors are raised one layer up, in ``repro.core.grb``, which
+owns the pairing rules.
 
 Handles over this storage are host-side objects like every GBMatrix; the
 sharded jnp arrays are what flows through jit. The padded row block is an
@@ -42,6 +48,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import xfer
 from repro.core.ell import ELL
 
 ROW_AXIS = "data"                      # adjacency rows shard over this axis
@@ -135,7 +142,11 @@ class ShardedELL:
 
     # -- gather-to-host conversions ------------------------------------------
     def to_ell(self) -> ELL:
-        """Gather the row shards back to one host-side ELL (drops padding)."""
+        """Gather the row shards back to one host-side ELL (drops padding).
+        Counted: this is *the* device->host choke point (to_dense/to_coo/
+        transpose all route through it), so every remaining gather fallback
+        shows up in grb.host_transfers()."""
+        xfer.record("sharded_gather")
         n, m = self.shape
         return ELL(shape=(n, m),
                    indices=jnp.asarray(np.asarray(self.indices)[:n]),
@@ -242,10 +253,51 @@ def mxm(s: ShardedELL, X: jnp.ndarray, sr, transposed: bool = False,
     return Y[:out_rows, :X.shape[1]]
 
 
+def _pad_words(s: ShardedELL, Xw: jnp.ndarray, x_rows: int):
+    """Pad an already-packed (x_rows, W) word frontier to the mesh: rows to
+    the "data" axis, words to the frontier shard count. Device-side jnp.pad —
+    word-resident loops never bounce through pack/unpack here."""
+    r_pad = (-x_rows) % s.data_size
+    w_pad = (-Xw.shape[1]) % s.frontier_size
+    if r_pad or w_pad:
+        Xw = jnp.pad(Xw, ((0, r_pad), (0, w_pad)))
+    return Xw
+
+
+def mxm_words(s: ShardedELL, Xw: jnp.ndarray, transposed: bool = False):
+    """or_and mxm with the frontier already in uint32 words: words in, words
+    out — the packed-in/packed-out entry word-resident hop loops thread
+    through (no pack/unpack at the call boundary, grb.mxm_words dispatches
+    here). Beyond bitmap.NIBBLE_MAX_SHARDS row shards the transposed nibble
+    psum would carry, so that case detours through the float lowering
+    *on device* (unpack -> float mxm -> pack, still mesh-resident)."""
+    from repro.core import bitmap
+    from repro.core import semiring as S
+    from repro.distr import graph2d
+    n, m = s.shape
+    dsz = s.data_size
+    if transposed and dsz > bitmap.NIBBLE_MAX_SHARDS:
+        f = Xw.shape[1] * bitmap.WORD_BITS
+        Y = mxm(s, bitmap.unpack(Xw, f), S.OR_AND, transposed=True,
+                packed=False)
+        return bitmap.pack(Y)
+    if transposed:
+        fn = graph2d.mxm_2d(s.mesh, S.OR_AND, transposed=True,
+                            out_rows=m + (-m) % dsz, packed=True)
+        Xp = _pad_words(s, Xw, n)
+        out_rows = m
+    else:
+        fn = graph2d.mxm_2d(s.mesh, S.OR_AND, packed=True)
+        Xp = _pad_words(s, Xw, m)
+        out_rows = n
+    Y = fn(s.indices, s.mask, s.values, Xp)
+    return Y[:out_rows, :Xw.shape[1]]
+
+
 def reduce_stored(s: ShardedELL, monoid, axis):
-    """plus/or stored-entry reduction via the graph2d psum lowering; other
-    monoids need absent entries and go through the gather-to-host dense
-    fallback in grb.reduce."""
+    """plus/or stored-entry reduction via the graph2d psum lowering; min/max
+    go through :func:`reduce_minmax` (dense semantics, still mesh-resident);
+    anything else gathers via the counted dense fallback in grb.reduce."""
     from repro.distr import graph2d
     n, m = s.shape
     fn = graph2d.reduce_2d(s.mesh, monoid.name, axis, m)
@@ -253,3 +305,81 @@ def reduce_stored(s: ShardedELL, monoid, axis):
     if axis == 1:
         return out[:n]
     return out
+
+
+def reduce_minmax(s: ShardedELL, monoid, axis):
+    """min/max reduction with dense semantics (absent entries render 0),
+    mesh-resident: stored-entry pmin/pmax over "data" + a stored-count
+    compare to fold the implicit zeros back in (graph2d.reduce_minmax_2d).
+    Replaces the old gather-to-host special case in grb.reduce."""
+    from repro.distr import graph2d
+    n, m = s.shape
+    fn = graph2d.reduce_minmax_2d(s.mesh, monoid.name, axis, n, m)
+    out = fn(s.indices, s.mask, s.values)
+    if axis == 1:
+        return out[:n]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# shard-local element-wise family — the slot-aligned merge grb dispatches to
+# ---------------------------------------------------------------------------
+def _pair_check(a: ShardedELL, b: ShardedELL, what: str):
+    if a.shape != b.shape:
+        raise ValueError(f"{what}: shape mismatch {a.shape} vs {b.shape}")
+    if a.mesh is not b.mesh and a.mesh != b.mesh:
+        raise TypeError(f"{what}: operands live on different meshes")
+
+
+def merge_stored(a: ShardedELL, b: ShardedELL, op, mode: str) -> ShardedELL:
+    """Shard-local merge of two identically-meshed operands (see
+    graph2d._ewise_merge for the slot-alignment pass and mode semantics).
+    Same shape + mesh implies the same padded row count, so the row blocks
+    align shard-for-shard; the merged layout is the concatenated slot width.
+    """
+    from repro.distr import graph2d
+    _pair_check(a, b, f"merge_stored[{mode}]")
+    fn = graph2d.ewise_2d(a.mesh, mode, op)
+    idx, msk, val = fn(a.indices, a.mask, a.values,
+                       b.indices, b.mask, b.values)
+    return ShardedELL(a.shape, a.mesh, idx, msk, val, nnz=int(jnp.sum(msk)))
+
+
+def restrict_dense(a: ShardedELL, dense_mask, complement: bool) -> ShardedELL:
+    """Keep a's stored entries where a dense (n, m) mask is nonzero (or zero,
+    complemented) — shard-local per-slot gather (graph2d.restrict_dense_2d).
+    The mask row block is padded to the mesh like every operand."""
+    from repro.distr import graph2d
+    dm = jnp.asarray(dense_mask)
+    r_pad = a.n_pad - dm.shape[0]
+    if r_pad:
+        dm = jnp.pad(dm, ((0, r_pad), (0, 0)))
+    fn = graph2d.restrict_dense_2d(a.mesh, bool(complement))
+    idx, msk, val = fn(a.indices, a.mask, a.values, dm)
+    return ShardedELL(a.shape, a.mesh, idx, msk, val, nnz=int(jnp.sum(msk)))
+
+
+def extract_cols(a: ShardedELL, cols) -> ShardedELL:
+    """Column-subset extract (rows stay put): relabel stored columns through
+    a replicated LUT, shard-local. Row subsets re-partition the "data" axis
+    and stay on the counted gather fallback in grb.extract."""
+    from repro.distr import graph2d
+    cols = np.asarray(cols, np.int64)
+    lut = np.full((a.shape[1],), -1, np.int32)
+    lut[cols] = np.arange(len(cols), dtype=np.int32)
+    fn = graph2d.extract_cols_2d(a.mesh)
+    idx, msk, val = fn(a.indices, a.mask, a.values, jnp.asarray(lut))
+    return ShardedELL((a.shape[0], len(cols)), a.mesh, idx, msk, val,
+                      nnz=int(jnp.sum(msk)))
+
+
+def relabel_cols(a: ShardedELL, new_cols, ncols_out: int) -> ShardedELL:
+    """Map every stored column j -> new_cols[j] (all >= 0), producing an
+    (n, ncols_out) operand — the inverse relabel assign(:, J) needs to put a
+    region operand back into global coordinates. Shard-local LUT gather."""
+    from repro.distr import graph2d
+    lut = np.asarray(new_cols, np.int32)
+    fn = graph2d.extract_cols_2d(a.mesh)
+    idx, msk, val = fn(a.indices, a.mask, a.values, jnp.asarray(lut))
+    return ShardedELL((a.shape[0], ncols_out), a.mesh, idx, msk, val,
+                      nnz=int(jnp.sum(msk)))

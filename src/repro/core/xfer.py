@@ -1,0 +1,32 @@
+"""Host-transfer accounting: the counter behind ``grb.host_transfers()``.
+
+Sibling of the ``densify_calls()`` / ``pack_calls()`` policy counters: every
+device->host *gather inside op dispatch* bumps it — ``ShardedELL.to_ell``
+(which ``to_dense``/``to_coo``/``transpose`` route through) and the BSR
+host materializations (``BSR.to_dense``/``to_coo``). Pulling a final
+*dense* result (``np.asarray(levels)``, ``project`` rows) never touches
+those gathers and is deliberately outside scope — but ``to_dense()`` on a
+sharded/BSR result handle routes through them and does count, so tests
+measure their delta *before* materializing results for comparison. The
+contract this counter pins is "no sharded or BSR *hot loop* ever leaves
+the device", not "nobody ever reads an answer". Structural metadata pulls
+(an ``nvals`` scalar, tile-occupancy flags — host-side planning, not
+payload) are likewise not counted.
+
+Lives in its own leaf module so ``core.shard`` and ``core.bsr`` can bump it
+without importing ``core.grb`` (which imports both).
+"""
+from __future__ import annotations
+
+_host_transfers = [0]
+
+
+def record(tag: str = "") -> None:
+    """Count one device->host gather (tag is documentation only)."""
+    del tag
+    _host_transfers[0] += 1
+
+
+def host_transfers() -> int:
+    """Device->host gathers since process start (see module doc for scope)."""
+    return _host_transfers[0]

@@ -252,6 +252,197 @@ def reduce_2d(mesh: Mesh, monoid_name: str, axis, ncols: int):
 
 
 # ---------------------------------------------------------------------------
+# shard-local element-wise lowerings — the slot-aligned COO set algebra grb's
+# sharded ewise/assign/extract dispatch to (no collectives: rows live whole
+# on one shard, so union/intersect/mask surgery is embarrassingly row-local)
+# ---------------------------------------------------------------------------
+# sentinel sort key for invalid slots; real keys are col*2 + source, so this
+# is unreachable for any column count below ~2^30 (document, don't check:
+# the int32 ELL index arrays cap columns well before that).
+_MERGE_SENT = np.int32(np.iinfo(np.int32).max)
+
+
+def _ewise_merge(ia, ma, va, ib, mb, vb, mode, op):
+    """Row-local merge of two ELL row blocks into one (idx, mask, val) block.
+
+    The *slot-alignment pass*: concatenate the two slot layouts (static width
+    wa+wb), sort each row by (column, source) — source breaks ties so an A
+    entry always immediately precedes its B partner at the same column — and
+    pair adjacent equal columns. Each side stores at most one entry per
+    (row, col) (the ELL invariant), so runs of equal columns have length <= 2
+    and one shifted compare finds every pair.
+
+    mode: "union"     op(a,b) where both, pass-through singletons (eWiseAdd)
+          "intersect" op(a,b) where both, singletons dropped     (eWiseMult)
+          "mask"      A entries where B stored (mask restrict)
+          "mask_c"    A entries where B absent (complemented restrict)
+
+    Zero results are dropped (stored == nonzero, the repo-wide convention).
+    Pure row-local jnp — callers run it under shard_map (ewise_2d) or on
+    plain host arrays (the differential oracle in tests does exactly that).
+    """
+    rows, wa = ia.shape
+    col = jnp.concatenate([ia, ib], axis=1).astype(jnp.int32)
+    src = jnp.concatenate(
+        [jnp.zeros((rows, wa), jnp.int32),
+         jnp.ones((rows, ib.shape[1]), jnp.int32)], axis=1)
+    valid_in = jnp.concatenate([ma, mb], axis=1)
+    val = jnp.concatenate([va, vb], axis=1).astype(jnp.float32)
+    key = jnp.where(valid_in, col * 2 + src, _MERGE_SENT)
+    key, col, src, val = jax.lax.sort((key, col, src, val),
+                                      dimension=1, num_keys=1)
+    valid = key != _MERGE_SENT
+    same = valid[:, :-1] & valid[:, 1:] & (col[:, :-1] == col[:, 1:])
+    pair_first = jnp.pad(same, ((0, 0), (0, 1)))     # slot i pairs with i+1
+    pair_second = jnp.pad(same, ((0, 0), (1, 0)))
+    val_nxt = jnp.pad(val[:, 1:], ((0, 0), (0, 1)))
+    if mode == "union":
+        out_val = jnp.where(pair_first, op(val, val_nxt), val)
+        out_ok = valid & ~pair_second
+    elif mode == "intersect":
+        out_val = op(val, val_nxt)
+        out_ok = pair_first
+    elif mode == "mask":
+        out_val = val
+        out_ok = pair_first                           # slot i is the A entry
+    elif mode == "mask_c":
+        out_val = val
+        out_ok = valid & (src == 0) & ~pair_first
+    else:
+        raise ValueError(f"unknown merge mode {mode!r}")
+    out_ok = out_ok & (out_val != 0)
+    return (jnp.where(out_ok, col, 0),
+            out_ok,
+            jnp.where(out_ok, out_val, 0.0))
+
+
+@functools.lru_cache(maxsize=None)
+def ewise_2d(mesh: Mesh, mode: str, op):
+    """Shard-local element-wise merge over the mesh:
+    (ia, ma, va, ib, mb, vb) -> (idx, mask, val), all (n_pad, w) row blocks
+    "data"-sharded. No collectives — the shard_map is here so the lowering
+    is structurally mesh-resident (scan_host_transfers proves it empty).
+
+    lru-cached per (mesh, mode, op); monoid ops are module-level singletons
+    so algorithm loops hit the cache, ad-hoc lambdas retrace per identity.
+    """
+    def body(ia, ma, va, ib, mb, vb):
+        return _ewise_merge(ia, ma, va, ib, mb, vb, mode, op)
+
+    return jax.jit(_smap(body, mesh, in_specs=(P("data", None),) * 6,
+                         out_specs=(P("data", None),) * 3))
+
+
+@functools.lru_cache(maxsize=None)
+def restrict_dense_2d(mesh: Mesh, complement: bool):
+    """Keep stored entries where a *dense* (n_pad, m) mask row block is
+    nonzero (or zero, complemented) — one shard-local take_along_axis, the
+    dense-mask side of the descriptor blend."""
+    def body(idx_l, msk_l, val_l, dm_l):
+        keep = jnp.take_along_axis(dm_l != 0, idx_l, axis=1)
+        if complement:
+            keep = ~keep
+        m = msk_l & keep
+        return (jnp.where(m, idx_l, 0), m,
+                jnp.where(m, val_l, 0.0))
+
+    return jax.jit(_smap(body, mesh,
+                         in_specs=(P("data", None),) * 4,
+                         out_specs=(P("data", None),) * 3))
+
+
+@functools.lru_cache(maxsize=None)
+def extract_cols_2d(mesh: Mesh):
+    """Column-subset extract: relabel stored columns through a replicated
+    (m,) LUT (new column id, or -1 to drop). Row-local — extracting columns
+    never crosses row shards; row subsets do, and stay on the counted
+    gather fallback in grb."""
+    def body(idx_l, msk_l, val_l, lut):
+        nc = lut[idx_l]
+        m = msk_l & (nc >= 0)
+        return (jnp.where(m, nc, 0).astype(jnp.int32), m,
+                jnp.where(m, val_l, 0.0))
+
+    return jax.jit(_smap(body, mesh,
+                         in_specs=(P("data", None),) * 3 + (P(None),),
+                         out_specs=(P("data", None),) * 3))
+
+
+@functools.lru_cache(maxsize=None)
+def reduce_minmax_2d(mesh: Mesh, monoid_name: str, axis, nrows: int,
+                     ncols: int):
+    """min/max reduction with *dense* semantics on the mesh: absent entries
+    render as 0 and participate (grb.reduce's contract for non-plus/or
+    monoids). Stored entries reduce under a +/-inf identity; one stored-count
+    compare folds the implicit zeros back in. axis=1 is collective-free;
+    axis=0/None combine shards with pmin/pmax + a psum of stored counts.
+
+    nrows/ncols are the *logical* shape — padded rows are all mask-false and
+    only ever contribute the identity."""
+    if monoid_name not in ("min", "max"):
+        raise NotImplementedError(monoid_name)
+    big = np.float32(np.inf if monoid_name == "min" else -np.inf)
+    comb = jnp.minimum if monoid_name == "min" else jnp.maximum
+    seg = (jax.ops.segment_min if monoid_name == "min"
+           else jax.ops.segment_max)
+    pcomb = jax.lax.pmin if monoid_name == "min" else jax.lax.pmax
+
+    def body(idx_l, msk_l, val_l):
+        w = jnp.where(msk_l, val_l, big)
+        if axis == 1:
+            stored = (jnp.min if monoid_name == "min" else jnp.max)(w, axis=1)
+            absent = jnp.sum(msk_l, axis=1) < ncols
+            return jnp.where(absent, comb(stored, 0.0), stored)
+        if axis is None:
+            stored = pcomb(
+                (jnp.min if monoid_name == "min" else jnp.max)(w), "data")
+            total = jax.lax.psum(jnp.sum(msk_l.astype(jnp.int32)), "data")
+            return jnp.where(total < nrows * ncols, comb(stored, 0.0), stored)
+        ids = jnp.where(msk_l, idx_l, ncols).reshape(-1)
+        part = seg(w.reshape(-1), ids, num_segments=ncols + 1)[:ncols]
+        stored = pcomb(part, "data")
+        cnt = jax.lax.psum(
+            jax.ops.segment_sum(msk_l.astype(jnp.int32).reshape(-1), ids,
+                                num_segments=ncols + 1)[:ncols], "data")
+        return jnp.where(cnt < nrows, comb(stored, 0.0), stored)
+
+    return jax.jit(_smap(body, mesh, in_specs=(P("data", None),) * 3,
+                         out_specs=P("data") if axis == 1 else P()))
+
+
+# ---------------------------------------------------------------------------
+# transfer-count inspection — the HLO side of the host_transfers() regression
+# ---------------------------------------------------------------------------
+# Lowered-text markers that indicate a device->host hop. Pure mesh-resident
+# programs (every lowering above) contain none of them.
+_TRANSFER_TOKENS = ("infeed", "outfeed", "is_host_transfer=true",
+                    "cpu_callback", "host_callback",
+                    "annotate_device_placement")
+
+
+def scan_host_transfers(fn, *args, **kwargs):
+    """Lower ``fn(*args, **kwargs)`` and return every StableHLO/HLO line that
+    marks a device->host transfer (infeed/outfeed/host callbacks/placement
+    annotations). An empty list certifies the traced program is
+    device-resident end to end — the structural half of the
+    ``grb.host_transfers()`` regression (the counter pins the Python-level
+    gathers the tracer can't see)."""
+    lowered = jax.jit(fn).lower(*args, **kwargs)
+    texts = [lowered.as_text()]
+    try:
+        texts.append(lowered.compile().as_text())
+    except Exception:            # pragma: no cover - backend-dependent
+        pass
+    hits = []
+    for txt in texts:
+        for ln in txt.splitlines():
+            low = ln.lower()
+            if any(tok in low for tok in _TRANSFER_TOKENS):
+                hits.append(ln.strip())
+    return hits
+
+
+# ---------------------------------------------------------------------------
 # dry-run probes — fused whole-algorithm loops for lowering/roofline analysis
 # ---------------------------------------------------------------------------
 def khop_counts_2d(mesh: Mesh, n: int, k: int, packed: bool = False,

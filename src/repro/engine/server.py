@@ -133,7 +133,12 @@ class QueryServer:
             "plan_cache_hit_rate": 0.0,
             "pack_lanes": 0, "pack_slots": 0, "pack_ratio": 1.0,
             "queue_wait_s_total": 0.0,
+            # device->host gathers attributable to serving (grb.host_transfers
+            # delta since server construction); the batched or_and sweep
+            # promises this stays 0 — tests/test_transfers.py pins it
+            "host_transfers": 0,
         }
+        self._xfer0 = grb.host_transfers()
         self._refresh()                     # fail fast on a bad source
 
     # -- submission -----------------------------------------------------------
@@ -353,3 +358,4 @@ class QueryServer:
                 self.stats["errors"] += 1
             out[m.qid] = m.result
             self.log.append(m)
+        self.stats["host_transfers"] = grb.host_transfers() - self._xfer0

@@ -44,6 +44,29 @@ def ell_mxv_packed(A, Xw: jnp.ndarray, *,
     return _bm.ell_mxv_packed(store, Xw, interpret=interpret)
 
 
+def bsr_ewise(A, B, mode: str, op=None) -> BSR:
+    """BSR element-wise family through the Pallas gathered-tile kernel
+    (interpret mode off-TPU; the XLA reference is the ``impl="xla"`` default
+    on the `core.bsr` functions). ``mode`` is one of
+    union | intersect | apply | select | mask | mask_c; the unary modes
+    (apply/select) ignore ``B``."""
+    from repro.core import bsr as _b
+    A = A.store if not isinstance(A, BSR) else A
+    if B is not None and not isinstance(B, BSR):
+        B = getattr(B, "store", B)
+    if mode == "union":
+        return _b.ewise_add(A, B, op, impl="pallas")
+    if mode == "intersect":
+        return _b.ewise_mult(A, B, op, impl="pallas")
+    if mode == "apply":
+        return _b.apply_stored(A, op, impl="pallas")
+    if mode == "select":
+        return _b.select_stored(A, op, impl="pallas")
+    if mode in ("mask", "mask_c"):
+        return _b.mask_keep(A, B, complement=mode == "mask_c", impl="pallas")
+    raise ValueError(f"bsr_ewise mode {mode!r}")
+
+
 def bsr_spgemm(A, B, sr: S.Semiring, *, mask=None, complement: bool = False,
                interpret: bool | None = None) -> BSR:
     """BSR x BSR -> BSR through the Pallas SpGEMM kernel (symbolic phase on

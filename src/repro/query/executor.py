@@ -42,7 +42,7 @@ from typing import Dict, List, Optional
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import grb, semiring as S
+from repro.core import bitmap as _bitmap, grb, semiring as S
 from repro.core.grb import Descriptor
 from repro.graph.graph import Graph
 from repro.query import qast as A
@@ -249,6 +249,25 @@ class ExecutionContext:
                             Descriptor(mask=seeds0, complement=True))
             reach = reach * jnp.asarray(dst_mask, dtype=jnp.float32)[:, None]
             return (reach > 0).astype(jnp.float32)
+        if structural and grb.words_route_ok(M, B.shape[1]):
+            # word-resident hop loop: pack once, hop on uint32 words with
+            # word-wise visited blends ((a & ~v) | (b & ~v) == (a | b) & ~v),
+            # unpack once at the end — no per-hop pack/unpack/gather
+            f = B.shape[1]
+            fw = _bitmap.pack(B)
+            vw = fw
+            reach_w = jnp.zeros_like(fw)
+            for h in range(1, e.max_hops + 1):
+                nw = None
+                for t in transposes:
+                    step = grb.mxm_words(M, fw, transpose_a=t)
+                    nw = step if nw is None else _bitmap.word_or(nw, step)
+                fw = _bitmap.word_andnot(nw, vw)
+                vw = _bitmap.word_or(vw, fw)
+                if h >= e.min_hops:
+                    reach_w = _bitmap.word_or(reach_w, fw)
+            reach = _bitmap.unpack(reach_w, f)
+            return reach * jnp.asarray(dst_mask, dtype=jnp.float32)[:, None]
         reach = jnp.zeros_like(B)
         frontier = B
         visited = (B > 0).astype(jnp.float32)
