@@ -56,6 +56,7 @@ test-transfers:
 bench-smoke:
 	$(PY) benchmarks/run.py triangles --json BENCH_triangles.json
 	$(PY) benchmarks/run.py throughput --json BENCH_throughput.json
+	$(PY) benchmarks/run.py bitadj --json BENCH_bitadj.json
 
 # re-measure every AUTO_* crossover constant on this host and print the
 # drift vs the committed values (benchmarks/calibrate.py — report only,

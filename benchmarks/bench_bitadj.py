@@ -1,0 +1,84 @@
+"""Bit-packed adjacency (BitELL) vs the float ELL route: memory + speed.
+
+The storage claim: a boolean adjacency spends 32 words on a 32x32 edge tile
+(4 B per potential edge -> 1 *bit*), so anywhere tiles are reasonably filled
+the structural payload undercuts ELL's ~9 B/edge and the or_and traversal
+moves words instead of floats. Three measurements per RMAT scale:
+
+  payload    — resident adjacency bytes, BitELL vs ELL vs dense float
+  triangles  — AND + popcount over tile pairs vs the masked plus_pair mxm
+  bfs        — packed-frontier BFS on the bit route vs the ELL route
+
+Every speed row is validated bit-identical against the ELL result first —
+a fast wrong kernel is worthless. Rows land in BENCH_bitadj.json via
+`make bench-smoke`; the AUTO_BITADJ_* constants this suite informs are
+re-checked host-side by `make calibrate`.
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro import algorithms as alg
+from repro.algorithms import triangle_count
+from repro.core import grb
+from repro.core.bitadj import BitELL
+from repro.core.ell import ELL
+from repro.graph.datagen import rmat_edges
+
+SCALES = (7, 8, 9)
+EDGE_FACTOR = 8
+
+
+def _time(fn):
+    fn()                                  # warmup: exclude trace/compile time
+    t0 = time.perf_counter()
+    got = fn()
+    return got, (time.perf_counter() - t0) * 1e6
+
+
+def _pair(scale: int):
+    src, dst, n = rmat_edges(scale=scale, edge_factor=EDGE_FACTOR, seed=scale)
+    s = np.concatenate([src, dst])        # symmetrize: undirected traversal
+    d = np.concatenate([dst, src])
+    key = s.astype(np.int64) * n + d
+    _, idx = np.unique(key, return_index=True)
+    s, d = s[idx], d[idx]
+    e = ELL.from_coo(s, d, None, (n, n))
+    b = BitELL.from_coo(s, d, None, (n, n))
+    return grb.GBMatrix(e), grb.GBMatrix(b), n
+
+
+def _ell_bytes(e: ELL) -> int:
+    return int(e.indices.nbytes + e.mask.nbytes + e.values.nbytes)
+
+
+def run(rows):
+    rng = np.random.default_rng(0)
+    for scale in SCALES:
+        he, hb, n = _pair(scale)
+        bit_b = hb.store.payload_bytes
+        ell_b = _ell_bytes(he.store)
+        dense_b = n * n * 4
+        rows.append((f"bitadj_payload_s{scale}", 0.0,
+                     f"bit={bit_b}B ell={ell_b}B dense={dense_b}B "
+                     f"vs_ell={ell_b / max(bit_b, 1):.2f}x"))
+
+        want_t, us_e = _time(lambda: int(np.asarray(triangle_count(he))))
+        got_t, us_b = _time(lambda: int(np.asarray(triangle_count(hb))))
+        assert got_t == want_t, (scale, got_t, want_t)
+        rows.append((f"bitadj_triangles_s{scale}", us_b,
+                     f"count={got_t} ell_us={us_e:.0f} "
+                     f"speedup={us_e / max(us_b, 1e-9):.2f}x"))
+
+        seeds = rng.integers(0, n, size=64)
+        with grb.packed_frontiers("on"):
+            want_l, us_e = _time(lambda: np.asarray(alg.bfs_levels(he, seeds)))
+            got_l, us_b = _time(lambda: np.asarray(alg.bfs_levels(hb, seeds)))
+        np.testing.assert_array_equal(got_l, want_l)
+        rows.append((f"bitadj_bfs_s{scale}", us_b,
+                     f"ell_us={us_e:.0f} "
+                     f"speedup={us_e / max(us_b, 1e-9):.2f}x"))
+    return rows

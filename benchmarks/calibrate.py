@@ -23,6 +23,11 @@ Criteria per constant:
                        route beats the float route
   AUTO_DELTA_COMPACT   first pending-ratio whose composed-read overhead
                        exceeds 1.2x the compacted read
+  AUTO_BITADJ_MIN_FILL first occupied-tile fill where the bit-packed
+                       adjacency (BitELL word route) beats the ELL or_and
+                       traversal
+  AUTO_BITADJ_MAX_SLOTS first widest-panel slot count where the ELL route
+                       wins back (slot padding outgrows the bit payload)
 """
 from __future__ import annotations
 
@@ -167,6 +172,69 @@ def calibrate_delta_compact(rows):
                  _status(AUTO_DELTA_COMPACT, measured, [s for s, _ in sweep])))
 
 
+def _bitadj_vs_ell(r, c, n, f: int = 64, seed: int = 0):
+    """(t_bit, t_ell) for one or_and mxm on the same boolean structure."""
+    from repro.core.bitadj import BitELL
+    from repro.core.ell import ELL
+
+    hb = grb.GBMatrix(BitELL.from_coo(r, c, None, (n, n)))
+    he = grb.GBMatrix(ELL.from_coo(r, c, None, (n, n)))
+    X = jnp.asarray((np.random.default_rng(seed + 1)
+                     .uniform(size=(n, f)) < 0.1).astype(np.float32))
+    fb = jax.jit(lambda x: grb.mxm(hb, x, S.OR_AND))
+    fe = jax.jit(lambda x: grb.mxm(he, x, S.OR_AND))
+    np.testing.assert_array_equal(np.asarray(fb(X)), np.asarray(fe(X)))
+    return (_timeit(lambda: np.asarray(fb(X))),
+            _timeit(lambda: np.asarray(fe(X))))
+
+
+def calibrate_bitadj_fill(rows):
+    from repro.core import bitadj
+    n = 64 * 32
+    rng = np.random.default_rng(5)
+    sweep = []
+    # edges clustered into a fixed set of tiles: the tile count holds the
+    # slot geometry steady while edges-per-tile sweeps the fill axis
+    tiles = rng.integers(0, (n // 32) ** 2, size=n // 2)
+    for per_tile in (2, 8, 32, 128):
+        t = np.repeat(tiles, per_tile)
+        lr = rng.integers(0, 32, size=t.size)
+        lc = rng.integers(0, 32, size=t.size)
+        r = (t // (n // 32)) * 32 + lr
+        c = (t % (n // 32)) * 32 + lc
+        fill, _ = bitadj._tile_stats(r, c, (n, n))
+        tb, te = _bitadj_vs_ell(r, c, n, seed=per_tile)
+        sweep.append((round(fill, 3), tb < te))
+    measured = _first(sweep, bool, default=1.0)
+    steps = [s for s, _ in sweep] + [bitadj.AUTO_BITADJ_MIN_FILL]
+    rows.append(("AUTO_BITADJ_MIN_FILL", bitadj.AUTO_BITADJ_MIN_FILL,
+                 measured,
+                 _status(bitadj.AUTO_BITADJ_MIN_FILL, measured, steps)))
+
+
+def calibrate_bitadj_slots(rows):
+    from repro.core import bitadj
+    n = 256 * 32                 # column-tile grid wide enough for the sweep
+    rng = np.random.default_rng(7)
+    sweep = []
+    # a dense-ish body plus one hub panel whose occupied column tiles sweep
+    # the slot axis: every panel pads to the hub's width
+    body_r = rng.integers(0, n, size=8 * n)
+    body_c = (body_r + rng.integers(1, 64, size=8 * n)) % n
+    for slots in (16, 64, 128, 256):
+        hub_c = rng.integers(0, slots * 32, size=slots * 4)
+        r = np.concatenate([body_r, np.zeros_like(hub_c)])
+        c = np.concatenate([body_c, hub_c])
+        _, got_slots = bitadj._tile_stats(r, c, (n, n))
+        tb, te = _bitadj_vs_ell(r, c, n, seed=slots)
+        sweep.append((got_slots, te < tb))
+    measured = _first(sweep, bool, default=1024)
+    steps = [s for s, _ in sweep] + [bitadj.AUTO_BITADJ_MAX_SLOTS]
+    rows.append(("AUTO_BITADJ_MAX_SLOTS", bitadj.AUTO_BITADJ_MAX_SLOTS,
+                 measured,
+                 _status(bitadj.AUTO_BITADJ_MAX_SLOTS, measured, steps)))
+
+
 def main() -> None:
     rows: list = []
     calibrate_min_grid(rows)
@@ -174,6 +242,8 @@ def main() -> None:
     calibrate_min_width(rows)
     calibrate_pack_min_width(rows)
     calibrate_delta_compact(rows)
+    calibrate_bitadj_fill(rows)
+    calibrate_bitadj_slots(rows)
     print("constant,committed,measured,status")
     drifted = [r for r in rows if r[3] == "drift"]
     for name, committed, measured, status in rows:

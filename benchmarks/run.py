@@ -14,6 +14,9 @@
                 the pre-refactor host round-trip; shard-local vs gather
   triangles   — GraphChallenge (paper future-work item)
   ktruss      — Graphulo k-truss, sparse (masked SpGEMM) vs dense
+  bitadj      — bit-packed adjacency (BitELL): resident bytes + triangle
+                and BFS speed vs the float ELL route, validated
+                bit-identical first (AUTO_BITADJ_* provenance)
   mutations   — query latency under a live Poisson insert/delete stream
                 (delta serving vs rebuild-on-freeze) + the delta-vs-rebuild
                 crossover sweep calibrating AUTO_DELTA_COMPACT
@@ -42,8 +45,9 @@ if os.environ.get("REPRO_FORCE_DEVICES"):
 
 
 def main(argv=None) -> None:
-    from benchmarks import bench_ewise, bench_khop, bench_kernels, \
-        bench_ktruss, bench_mutations, bench_throughput, bench_triangles
+    from benchmarks import bench_bitadj, bench_ewise, bench_khop, \
+        bench_kernels, bench_ktruss, bench_mutations, bench_throughput, \
+        bench_triangles
     argv = list(sys.argv[1:] if argv is None else argv)
     json_path = None
     if "--json" in argv:
@@ -64,6 +68,7 @@ def main(argv=None) -> None:
         "triangles": bench_triangles.run,
         "ktruss": bench_ktruss.run,
         "mutations": bench_mutations.run,
+        "bitadj": bench_bitadj.run,
     }
     if only and only not in suites:
         raise SystemExit(f"unknown suite {only!r}; one of "

@@ -1,7 +1,13 @@
 """Single-source shortest paths = Bellman-Ford over the min_plus semiring.
 
-Tropical-format caveat (documented in DESIGN.md): edge weights of exactly 0.0
-are indistinguishable from "absent" in tile storage; generators use w >= 0.5.
+Zero-weight edges are carried correctly by every *structural* storage kind:
+ELL stores them mask-true, and BSR builds a per-entry structural mask
+(``emask``) whenever explicit 0.0 values occur, so the tropical matmul
+relaxes through them instead of rendering them as the +inf identity (the
+historical tile-storage caveat, now closed — tests/test_sssp.py pins a
+zero-weight golden). Only a *dense* adjacency array inherently cannot
+express a stored 0.0 (dense 0.0 == absent by convention); build sparse for
+zero-weight graphs.
 
 Takes the graph's adjacency (Graph / Relation / GBMatrix / raw); relaxation
 pulls along in-edges through the handle's cached transpose. Sharded handles

@@ -5,18 +5,25 @@ Requires a symmetric (undirected) adjacency. Both operands stay sparse: for
 BSR-backed handles `grb.mxm` routes through the two-phase BSR x BSR SpGEMM
 kernel with the structural mask <A> applied block-wise during accumulation,
 so C never materializes as a dense product (dense/ELL handles still take the
-dense pipeline inside `grb.mxm`). `benchmarks/bench_triangles.py` reports
-the dense-vs-SpGEMM crossover.
+dense pipeline inside `grb.mxm`). BitELL-backed handles skip the semiring
+surface entirely: the masked plus_pair product is a neighborhood
+intersection, which on bit-tiles is word-AND + SWAR popcount over tile
+pairs (`core.bitadj.triangle_count`) — no float product at any size.
+`benchmarks/bench_triangles.py` reports the dense-vs-SpGEMM crossover and
+`benchmarks/bench_bitadj.py` the bit-route speedup.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.core import bitadj as _bitadj
 from repro.core import grb, semiring as S
 from repro.core.grb import Descriptor
 
 
 def triangle_count(A, rel=None) -> jnp.ndarray:
     A = grb.matrix(A, rel)
+    if A.fmt in ("bitadj", "bitshard"):
+        return _bitadj.triangle_count(A.store).astype(jnp.int32)
     C = grb.mxm(A, A, S.PLUS_PAIR, Descriptor(mask=A))
     return (grb.reduce(C, S.PLUS) / 6.0).astype(jnp.int32)

@@ -4,12 +4,14 @@
 # `ops` keeps the legacy kwargs spelling over raw storage; `shard` holds the
 # mesh-sharded storage kind behind the same GBMatrix handle; `bitmap` is the
 # packed boolean frontier form or_and traversals ride (docs/API.md §Bitmap).
-from repro.core import bitmap, grb, ops, semiring
+from repro.core import bitadj, bitmap, grb, ops, semiring
+from repro.core.bitadj import BitELL, ShardedBitELL
 from repro.core.bsr import BSR
 from repro.core.delta import DeltaMatrix
 from repro.core.ell import ELL
 from repro.core.grb import Descriptor, GBMatrix
 from repro.core.shard import ShardedELL
 
-__all__ = ["bitmap", "grb", "ops", "semiring", "BSR", "ELL", "ShardedELL",
-           "DeltaMatrix", "Descriptor", "GBMatrix"]
+__all__ = ["bitadj", "bitmap", "grb", "ops", "semiring", "BSR", "ELL",
+           "ShardedELL", "DeltaMatrix", "BitELL", "ShardedBitELL",
+           "Descriptor", "GBMatrix"]

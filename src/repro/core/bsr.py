@@ -68,18 +68,29 @@ class BSR:
     row_ptr: jnp.ndarray     # (nbrows+1,) i32 CSR-style pointers over tiles
     # static metadata ------------------------------------------------------
     nnz: int                 # scalar element count (pre-blocking)
+    # optional per-entry structural mask (nnzb, block, block) bool: present
+    # ONLY when the build saw explicit 0.0-valued entries, which the dense
+    # tile payload cannot distinguish from absent-within-tile. The tropical
+    # (bcast) matmul, to_coo, and transpose consult it so a stored
+    # zero-weight edge participates (min_plus relaxes through it) instead
+    # of vanishing — the sssp.py zero-weight caveat, closed. None (the
+    # common case, no explicit zeros) keeps the `blocks != 0` convention
+    # and is zero-cost.
+    emask: Optional[jnp.ndarray] = None
 
     # -- pytree ------------------------------------------------------------
     def tree_flatten(self):
         children = (self.blocks, self.block_rows, self.block_cols,
-                    self.first, self.last, self.valid, self.row_ptr)
+                    self.first, self.last, self.valid, self.row_ptr,
+                    self.emask)
         aux = (self.shape, self.block, self.nnz)
         return children, aux
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         shape, block, nnz = aux
-        return cls(shape, block, *children, nnz=nnz)
+        *arrs, emask = children
+        return cls(shape, block, *arrs, nnz=nnz, emask=emask)
 
     # -- properties ----------------------------------------------------------
     @property
@@ -168,10 +179,13 @@ class BSR:
 
     @staticmethod
     def _assemble(blocks, b_r, b_c, shape, block: int, nnz: int,
-                  dtype=jnp.float32, pad_to: int = 8) -> "BSR":
+                  dtype=jnp.float32, pad_to: int = 8,
+                  emask=None) -> "BSR":
         """Build a BSR from a host-side list of *valid* tiles with unique,
         unsorted (block_row, block_col) coordinates (the structural phase
-        runs in :meth:`_assemble_meta`; this gathers the payload in numpy)."""
+        runs in :meth:`_assemble_meta`; this gathers the payload in numpy).
+        ``emask`` (same tile list, bool) rides the same gather when the
+        caller carries explicit-zero structure."""
         n, m = shape
         nbr, nbc = -(-n // block), -(-m // block)
         if nbr == 0:
@@ -183,6 +197,11 @@ class BSR:
         pos = src >= 0
         if pos.any():
             allb[pos] = np.asarray(blocks, dtype=np.float32)[src[pos]]
+        allm = None
+        if emask is not None:
+            allm = np.zeros((len(a_r), block, block), dtype=bool)
+            if pos.any():
+                allm[pos] = np.asarray(emask, dtype=bool)[src[pos]]
 
         return BSR(
             shape=(n, m), block=block,
@@ -191,6 +210,7 @@ class BSR:
             first=jnp.asarray(first), last=jnp.asarray(last),
             valid=jnp.asarray(valid), row_ptr=jnp.asarray(row_ptr),
             nnz=nnz,
+            emask=None if allm is None else jnp.asarray(allm),
         )
 
     @staticmethod
@@ -212,16 +232,23 @@ class BSR:
         ubrow, ubcol = (ukey // nbc).astype(np.int32), (ukey % nbc).astype(np.int32)
 
         blocks = np.zeros((len(ukey), block, block), dtype=np.float32)
+        # explicit 0.0-weighted entries are structure the dense tile payload
+        # cannot carry — track them in a per-entry mask, but only when they
+        # actually occur (the emask stays None on every all-nonzero build)
+        emask = (np.zeros((len(ukey), block, block), dtype=bool)
+                 if np.any(vals == 0.0) else None)
         for i in range(len(ukey)):
             s, e = starts[i], starts[i + 1]
             lr = (rows[s:e] - ubrow[i] * block).astype(np.int64)
             lc = (cols[s:e] - ubcol[i] * block).astype(np.int64)
             np.add.at(blocks[i], (lr, lc), 0.0)  # touch
             blocks[i][lr, lc] = vals[s:e]
+            if emask is not None:
+                emask[i][lr, lc] = True
 
         return BSR._assemble(blocks, ubrow, ubcol, (n, m), block,
                              nnz=int(rows.shape[0]), dtype=dtype,
-                             pad_to=pad_to)
+                             pad_to=pad_to, emask=emask)
 
     @staticmethod
     def from_blocks(block_rows, block_cols, blocks, shape, block: int,
@@ -312,7 +339,13 @@ class BSR:
         return jnp.asarray(out[:n, :m])
 
     def transpose(self) -> "BSR":
-        """Host-side rebuild (RedisGraph also maintains explicit transposes)."""
+        """Host-side rebuild (RedisGraph also maintains explicit transposes).
+        With explicit-zero structure (emask) the rebuild goes through COO —
+        a dense round-trip would drop the zero-weight entries."""
+        if self.emask is not None:
+            r, c, v = self.to_coo()
+            return BSR.from_coo(c, r, v, (self.shape[1], self.shape[0]),
+                                block=self.block, dtype=self.blocks.dtype)
         dense = np.asarray(self.to_dense()).T
         return BSR.from_dense(dense, block=self.block, dtype=self.blocks.dtype)
 
@@ -331,11 +364,12 @@ class BSR:
         br = np.asarray(self.block_rows)
         bc = np.asarray(self.block_cols)
         va = np.asarray(self.valid)
+        em = None if self.emask is None else np.asarray(self.emask)
         rows, cols, vals = [], [], []
         for i in range(blocks.shape[0]):
             if not va[i]:
                 continue
-            lr, lc = np.nonzero(blocks[i])
+            lr, lc = np.nonzero(blocks[i] if em is None else em[i])
             rows.append(lr + br[i] * b)
             cols.append(lc + bc[i] * b)
             vals.append(blocks[i][lr, lc])

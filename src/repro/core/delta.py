@@ -164,6 +164,12 @@ class DeltaMatrix:
         the matrix (new rows/cols served purely from future deltas)."""
         if isinstance(store, DeltaMatrix):
             return store if shape is None else store.resize(shape)
+        from repro.core.bitadj import BitELL
+        if isinstance(store, BitELL):
+            # bit-tiles have no row-patch composition (a delta write lands
+            # mid-word): mutate over the cached ELL materialization — the
+            # same fallback the weighted-semiring dispatch takes
+            store = store.to_ell()
         if not isinstance(store, (BSR, ELL)):
             store = jnp.asarray(store)
         bshape = _shape_of(store)

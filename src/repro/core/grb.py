@@ -95,6 +95,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import bitadj as _bitadj
 from repro.core import bitmap as _bitmap
 from repro.core import bsr as _bsr
 from repro.core import coo as _coo
@@ -102,13 +103,16 @@ from repro.core import ops as _ops
 from repro.core import semiring as S
 from repro.core import shard as _shard
 from repro.core import xfer as _xfer
+from repro.core.bitadj import (AUTO_BITADJ_MAX_SLOTS,  # noqa: F401
+                               AUTO_BITADJ_MIN_FILL, BitELL, ShardedBitELL)
 from repro.core.bsr import BSR, SPGEMM_MODES as _SPGEMM_MODES
 from repro.core.delta import AUTO_DELTA_COMPACT, DeltaMatrix  # noqa: F401
 from repro.core.ell import ELL
 from repro.core.shard import ShardedELL
 
 Array = jnp.ndarray
-Storage = Union[BSR, ELL, ShardedELL, DeltaMatrix, Array]
+Storage = Union[BSR, ELL, ShardedELL, DeltaMatrix, BitELL, ShardedBitELL,
+                Array]
 
 
 # ---------------------------------------------------------------------------
@@ -185,6 +189,10 @@ def _fmt_of(store: Storage) -> str:
         return "sharded"
     if isinstance(store, DeltaMatrix):
         return "delta"
+    if isinstance(store, BitELL):
+        return "bitadj"
+    if isinstance(store, ShardedBitELL):
+        return "bitshard"
     return "dense"
 
 
@@ -268,8 +276,8 @@ def _resolve_impl(requested: str, fmt: str, store: Optional[BSR] = None) -> str:
 
 
 class GBMatrix:
-    """One matrix handle over dense / BSR / ELL / ShardedELL / DeltaMatrix
-    storage.
+    """One matrix handle over dense / BSR / ELL / ShardedELL / DeltaMatrix /
+    BitELL (+ its ShardedBitELL mesh twin) storage.
 
     The handle carries everything per-call kwargs used to: the storage format,
     the resolved execution policy (``impl``), and a lazily-built, cached
@@ -285,7 +293,8 @@ class GBMatrix:
     def __init__(self, store: Storage, impl: str = "auto", name: str = ""):
         if isinstance(store, GBMatrix):
             store = store.store
-        if not isinstance(store, (BSR, ELL, ShardedELL, DeltaMatrix)):
+        if not isinstance(store, (BSR, ELL, ShardedELL, DeltaMatrix,
+                                  BitELL, ShardedBitELL)):
             store = jnp.asarray(store)
         self.store = store
         self.fmt = _fmt_of(store)
@@ -319,6 +328,8 @@ class GBMatrix:
             store = BSR.from_coo(rows, cols, vals, shape, block=block)
         elif fmt == "ell":
             store = ELL.from_coo(rows, cols, vals, shape)
+        elif fmt == "bitadj":
+            store = BitELL.from_coo(rows, cols, vals, shape)
         elif fmt == "dense":
             d = np.zeros(shape, dtype=np.float32)
             d[np.asarray(rows), np.asarray(cols)] = (
@@ -437,18 +448,22 @@ def matrix(obj, rel: Optional[str] = None,
 
 
 def distribute(obj, mesh, rel: Optional[str] = None) -> GBMatrix:
-    """Re-home an ELL handle onto a mesh: the sharded-storage constructor.
+    """Re-home an ELL or BitELL handle onto a mesh: the sharded-storage
+    constructor.
 
     Takes anything :func:`matrix` takes (Graph + rel, Relation, GBMatrix,
-    raw ELL). Returns a GBMatrix whose storage is a row-sharded
-    ``core.shard.ShardedELL``; a linked ELL transpose is sharded and linked
-    too, so ``A.T`` / ``transpose_a`` descriptors keep resolving to stored
-    transposes on the mesh. Every later `grb` call on the handle lowers to
-    the mesh collectives — call sites carry zero sharding arguments.
+    raw ELL/BitELL). Returns a GBMatrix whose storage is a row-sharded
+    ``core.shard.ShardedELL`` (or ``core.bitadj.ShardedBitELL`` for
+    bit-packed structural adjacency — its transpose twin is force-built and
+    linked, since the bit route has no transposed scatter lowering); a
+    linked transpose is sharded and linked too, so ``A.T`` / ``transpose_a``
+    descriptors keep resolving to stored transposes on the mesh. Every
+    later `grb` call on the handle lowers to the mesh collectives — call
+    sites carry zero sharding arguments.
 
-    Non-ELL storage raises a TypeError naming the expected kinds (the mesh
-    layout row-shards ELL's padded neighbor lists; BSR tiles and dense
-    arrays have no row-block layout here).
+    Other storage raises a TypeError naming the expected kinds (the mesh
+    layout row-shards ELL's padded neighbor lists / BitELL's word panels;
+    BSR tiles and dense arrays have no row-block layout here).
 
     Distributed twins are cached on the source handle per mesh (like the
     transpose cache), so per-query contexts re-resolving the same relation
@@ -462,6 +477,14 @@ def distribute(obj, mesh, rel: Optional[str] = None) -> GBMatrix:
         if h._T is not None and h._T.fmt == "sharded":
             hh.link_transpose(GBMatrix(h._T.store.to_ell(), name=h._T.name))
         h = hh
+    if h.fmt == "bitshard":
+        if h.store.mesh == mesh:
+            return h
+        hh = GBMatrix(h.store.to_bitell(), name=h.name)
+        if h._T is not None and h._T.fmt == "bitshard":
+            hh.link_transpose(GBMatrix(h._T.store.to_bitell(),
+                                       name=h._T.name))
+        h = hh
     if h.fmt == "delta":
         # the mesh layout has no delta lowering: compact into the base
         # format first (engine.Database freezes mesh-served graphs with
@@ -471,12 +494,29 @@ def distribute(obj, mesh, rel: Optional[str] = None) -> GBMatrix:
             hh.link_transpose(GBMatrix(h._T.store.materialize(),
                                        name=h._T.name))
         h = hh
+    if h.fmt == "bitadj":
+        # bit-packed panels shard like ELL rows do — but transpose_a on the
+        # mesh is always served from a stored twin (there is no transposed
+        # bit-scatter lowering), so force-build + link it here, once
+        cache = h._sharded if h._sharded is not None else {}
+        m = cache.get(mesh)
+        if m is None:
+            hT = h.T                      # host rebuild, cached on the handle
+            m = GBMatrix(ShardedBitELL.from_bitell(h.store, mesh),
+                         name=h.name)
+            m.link_transpose(
+                GBMatrix(ShardedBitELL.from_bitell(hT.store, mesh),
+                         name=hT.name))
+            cache[mesh] = m
+            h._sharded = cache
+        return m
     if h.fmt != "ell":
         raise TypeError(
-            f"grb.distribute: sharded dispatch needs ELL row storage, got "
-            f"{h.fmt!r} — rebuild with fmt='ell' (GBMatrix.from_dense(x, "
-            f"fmt='ell') / GraphBuilder.build(fmt='ell')) before "
-            f"distributing onto a mesh")
+            f"grb.distribute: sharded dispatch needs ELL or BitELL row "
+            f"storage, got {h.fmt!r} — rebuild with fmt='ell' "
+            f"(GBMatrix.from_dense(x, fmt='ell') / "
+            f"GraphBuilder.build(fmt='ell')) before distributing onto a "
+            f"mesh")
     cache = h._sharded if h._sharded is not None else {}
     m = cache.get(mesh)
     if m is None:
@@ -500,6 +540,9 @@ def _dispatch_mxm(A: GBMatrix, B: Array, sr: S.Semiring,
         impl = A.impl
         if impl == "pallas" and A.auto and B.shape[1] < AUTO_MIN_WIDTH:
             impl = "xla"   # auto policy: narrow frontier can't fill the MXU
+        if (impl == "pallas" and sr.mode == "bcast"
+                and A.store.emask is not None):
+            impl = "xla"   # explicit-zero structure: kernel has no emask lane
         if impl == "pallas":
             from repro.kernels import ops as kops   # lazy: kernels import core
             if fuse_mask:
@@ -521,7 +564,7 @@ def _mask_storage(mask) -> Optional[Storage]:
     happens host/dense-side."""
     if isinstance(mask, GBMatrix):
         mask = mask.store
-    if isinstance(mask, ShardedELL):
+    if isinstance(mask, (ShardedELL, ShardedBitELL, BitELL)):
         mask = mask.to_ell()
     if isinstance(mask, DeltaMatrix):
         mask = mask.materialize()
@@ -629,12 +672,15 @@ def _mxm_delta(A: GBMatrix, B: Array, sr: S.Semiring, d: Descriptor,
 
 def _packed_route_ok(A: GBMatrix, B, sr: S.Semiring) -> bool:
     """Static (trace-time) gate for the bitmap-packed or_and route: boolean
-    semiring, dense frontier B, dense/ELL storage (BSR keeps the MXU
-    indicator matmul), frontier wide enough per the measured crossover."""
-    return (sr.mode == "dot_indicator"
-            and A.fmt in ("dense", "ell")
-            and getattr(B, "ndim", 0) == 2
-            and _pack_wanted(B.shape[1]))
+    semiring, dense frontier B, dense/ELL/BitELL storage (BSR keeps the MXU
+    indicator matmul), frontier wide enough per the measured crossover.
+    BitELL is exempt from the width floor — its adjacency side is packed
+    whatever the frontier width, so the word route never loses."""
+    if sr.mode != "dot_indicator" or getattr(B, "ndim", 0) != 2:
+        return False
+    if A.fmt == "bitadj":
+        return True                          # structural: words always win
+    return A.fmt in ("dense", "ell") and _pack_wanted(B.shape[1])
 
 
 def _mxm_packed(A: GBMatrix, B: Array, sr: S.Semiring, d: Descriptor,
@@ -646,7 +692,13 @@ def _mxm_packed(A: GBMatrix, B: Array, sr: S.Semiring, d: Descriptor,
     the float indicator route (the unpack renders exactly {0.0, 1.0})."""
     f = B.shape[1]
     Bw = _bitmap.pack(B)
-    if A.fmt == "ell":
+    if A.fmt == "bitadj":
+        if jax.default_backend() == "tpu":
+            from repro.kernels import ops as kops   # lazy: kernels import core
+            Yw = kops.bitadj_mxv_packed(A.store, Bw)
+        else:
+            Yw = _bitadj.mxm_words(A.store, Bw)
+    elif A.fmt == "ell":
         if jax.default_backend() == "tpu":
             from repro.kernels import ops as kops   # lazy: kernels import core
             Yw = kops.ell_mxv_packed(A.store, Bw)
@@ -664,6 +716,54 @@ def _mxm_packed(A: GBMatrix, B: Array, sr: S.Semiring, d: Descriptor,
     return finalize(d, _bitmap.unpack(Yw, f), out, sr.identity)
 
 
+def _mxm_bitshard(A: GBMatrix, B, sr: S.Semiring, d: Descriptor,
+                  out: Optional[Array]) -> Array:
+    """Mesh dispatch for bit-packed adjacency: or_and/any_pair calls run
+    fully bit-level (pack at the boundary, `bitadj.sharded_mxm_words` — one
+    packed all-gather per call, word-AND + OR locally, zero float
+    intermediates; the route is taken for *every* dot_indicator call, so
+    results never depend on the packing policy). transpose_a always serves
+    from the linked twin grb.distribute force-built. Other semirings take
+    the cached ShardedELL materialization and the regular sharded route."""
+    if isinstance(B, GBMatrix) and B.fmt == "dense":
+        B = B.store
+    if isinstance(B, (GBMatrix, BSR, ELL, ShardedELL, BitELL,
+                      ShardedBitELL)):
+        kind = _operand_kind(B)[0]
+        raise TypeError(
+            f"grb.mxm: a sharded A multiplies a dense (k, F) frontier "
+            f"array; got a sparse {kind} operand for B. Gather it "
+            f"explicitly (B.to_dense()) or keep both sides unsharded for "
+            f"the SpGEMM path.")
+    if d.transpose_a:
+        if A._T is None or A._T.fmt != "bitshard":
+            raise RuntimeError(
+                "grb.mxm: transpose_a on bit-sharded storage needs the "
+                "linked transpose twin grb.distribute builds — distribute "
+                "the handle (not a hand-wrapped ShardedBitELL) first")
+        A = A.T
+        d = d.with_(transpose_a=False)
+    if isinstance(d.mask, (GBMatrix, BSR, ELL, ShardedELL, BitELL,
+                           ShardedBitELL, DeltaMatrix)):
+        m = _mask_storage(d.mask)
+        d = d.with_(mask=m if isinstance(m, jnp.ndarray) else m.to_dense())
+    B = jnp.asarray(B)
+    if sr.mode == "dot_indicator" and B.ndim == 2:
+        f = B.shape[1]
+        Yw = _bitadj.sharded_mxm_words(A.store, _bitmap.pack(B))
+        if d.mask is not None and d.mask_only and out is None:
+            Mw = _bitmap.pack(jnp.asarray(d.mask))
+            Yw = (_bitmap.word_andnot(Yw, Mw) if d.complement
+                  else _bitmap.word_and(Yw, Mw))
+            return _bitmap.unpack(Yw, f)
+        return finalize(d, _bitmap.unpack(Yw, f), out, sr.identity)
+    Ae = GBMatrix(A.store.materialize_sharded(), name=A.name)
+    if A._T is not None and A._T.fmt == "bitshard":
+        Ae.link_transpose(GBMatrix(A._T.store.materialize_sharded(),
+                                   name=A._T.name))
+    return _mxm_sharded(Ae, B, sr, d, out)
+
+
 def mxm(A, B, sr: S.Semiring, d: Descriptor = NULL,
         out: Optional[Array] = None):
     """C<M> accum= A (x) B over a semiring — the uniform GraphBLAS call.
@@ -677,8 +777,10 @@ def mxm(A, B, sr: S.Semiring, d: Descriptor = NULL,
     A = GBMatrix.wrap(A)
     if A.fmt == "sharded":
         return _mxm_sharded(A, B, sr, d, out)
-    if isinstance(B, ShardedELL) or (isinstance(B, GBMatrix)
-                                     and B.fmt == "sharded"):
+    if A.fmt == "bitshard":
+        return _mxm_bitshard(A, B, sr, d, out)
+    if isinstance(B, (ShardedELL, ShardedBitELL)) or (
+            isinstance(B, GBMatrix) and B.fmt in ("sharded", "bitshard")):
         raise TypeError(
             "grb.mxm: B is sharded but A is not — operand kinds must match. "
             "Distribute A onto the same mesh (grb.distribute(A, mesh)) or "
@@ -699,11 +801,17 @@ def mxm(A, B, sr: S.Semiring, d: Descriptor = NULL,
         return _mxm_spgemm(A, B, sr, d)
     if isinstance(B, GBMatrix):
         B = B.to_dense()
-    if isinstance(d.mask, (GBMatrix, BSR, ELL, ShardedELL, DeltaMatrix)):
+    if isinstance(d.mask, (GBMatrix, BSR, ELL, ShardedELL, BitELL,
+                           ShardedBitELL, DeltaMatrix)):
         m = _mask_storage(d.mask)
         d = d.with_(mask=m if isinstance(m, jnp.ndarray) else m.to_dense())
     if A.fmt == "delta":
         return _mxm_delta(A, jnp.asarray(B), sr, d, out)
+    if A.fmt == "bitadj" and not _packed_route_ok(A, B, sr):
+        # weighted / non-indicator call on structural storage: the cached
+        # materialize-to-ELL fallback (mirrors the DeltaMatrix contract)
+        A = GBMatrix(A.store.to_ell(), impl="auto" if A.auto else A.impl,
+                     name=A.name)
     if _packed_route_ok(A, B, sr):
         return _mxm_packed(A, jnp.asarray(B), sr, d, out)
     fuse = d.mask is not None and out is None and d.mask_only
@@ -748,8 +856,21 @@ def mxm_words(A, Bw: Array, transpose_a: bool = False) -> Array:
             else:
                 transposed = True
         return _shard.mxm_words(A.store, Bw, transposed=transposed)
+    if A.fmt == "bitshard":
+        if transpose_a:
+            if A._T is None or A._T.fmt != "bitshard":
+                raise RuntimeError(
+                    "grb.mxm_words: transpose_a on bit-sharded storage "
+                    "needs the linked twin grb.distribute builds")
+            A = A.T
+        return _bitadj.sharded_mxm_words(A.store, Bw)
     if transpose_a:
         A = A.T
+    if A.fmt == "bitadj":
+        if jax.default_backend() == "tpu":
+            from repro.kernels import ops as kops   # lazy: kernels import core
+            return kops.bitadj_mxv_packed(A.store, Bw)
+        return _bitadj.mxm_words(A.store, Bw)
     if A.fmt == "ell":
         if jax.default_backend() == "tpu":
             from repro.kernels import ops as kops   # lazy: kernels import core
@@ -768,9 +889,13 @@ def words_route_ok(A, f: int) -> bool:
     """Trace-time gate for word-resident hop loops: True when
     :func:`mxm_words` lowers natively packed for this operand (dense / ELL /
     sharded storage) and the packing policy wants a width-``f`` frontier
-    packed (``packed_frontiers`` / AUTO_PACK_MIN_WIDTH). BSR and delta
-    operands keep the float hop loop."""
+    packed (``packed_frontiers`` / AUTO_PACK_MIN_WIDTH). BitELL /
+    ShardedBitELL pass unconditionally — the adjacency side is packed
+    whatever the frontier width. BSR and delta operands keep the float
+    hop loop."""
     A = GBMatrix.wrap(A)
+    if A.fmt in ("bitadj", "bitshard"):
+        return True      # adjacency itself is packed: words always win
     return A.fmt in ("dense", "ell", "sharded") and _pack_wanted(f)
 
 
@@ -825,6 +950,10 @@ def _operand_kind(x):
         x = x.store
     if isinstance(x, DeltaMatrix):
         x = x.materialize()
+    if isinstance(x, BitELL):
+        x = x.to_ell()        # cached structural materialization (§BitAdj)
+    if isinstance(x, ShardedBitELL):
+        return "sharded", x.materialize_sharded()
     if isinstance(x, BSR):
         return "bsr", x
     if isinstance(x, ELL):
@@ -1306,6 +1435,12 @@ def reduce(x, monoid: S.Monoid, axis=None) -> Array:
     if isinstance(s, DeltaMatrix):
         h = x if isinstance(x, GBMatrix) else GBMatrix(s)
         return _reduce_delta(h, monoid, axis)
+    if isinstance(s, (BitELL, ShardedBitELL)):
+        # degree sums / any-stored straight off the bit-tiles (SWAR
+        # popcounts, no materialization; sharded arrays reduce under GSPMD)
+        if monoid.name in ("plus", "or") and axis in (None, 0, 1):
+            return _bitadj.reduce_stored(s, monoid, axis)
+        x = GBMatrix(s.to_ell()) if isinstance(s, BitELL) else x
     kind, X = _operand_kind(x)
     if kind == "bsr":
         return _reduce_bsr(X, monoid, axis)

@@ -93,7 +93,11 @@ def bsr_mxm_jnp(A: BSR, X: Array, sr: S.Semiring) -> Array:
         y = _segment_reduce(contrib, A.block_rows, nbr, sr.add)
     elif sr.mode == "bcast":
         ident = np.float32(sr.identity)
-        a = jnp.where((blocks != 0) & (A.valid[:, None, None] != 0),
+        # structure: the per-entry emask when explicit 0.0 entries exist
+        # (a zero-weight edge must relax under min_plus, not vanish into
+        # the +inf identity), else the stored == nonzero convention
+        stored = (blocks != 0) if A.emask is None else A.emask
+        a = jnp.where(stored & (A.valid[:, None, None] != 0),
                       blocks, ident)
 
         def one(k):
@@ -235,7 +239,15 @@ def _transpose(A):
 # ---------------------------------------------------------------------------
 def auto_format(rows, cols, vals, shape, block: int = 128,
                 bsr_min_fill: float = 0.02):
-    """Pick BSR (MXU path) when stored tiles are dense enough, else ELL."""
+    """Pick the storage kind for a COO build (fmt="auto" / impl="auto"):
+    BitELL for *boolean* relations whose 32x32 tiles clear the measured
+    word-route crossover (core.bitadj.auto_bitadj_ok — structure is the
+    whole payload, so bit-packing wins 8x+ on memory and the or_and family
+    runs word-level), else BSR (MXU path) when stored ``block``-tiles are
+    dense enough, else ELL."""
+    from repro.core import bitadj as _bitadj
+    if _bitadj.auto_bitadj_ok(rows, cols, vals, shape):
+        return _bitadj.BitELL.from_coo(rows, cols, vals, shape)
     rows_np = np.asarray(rows)
     cols_np = np.asarray(cols)
     nbc = -(-shape[1] // block)

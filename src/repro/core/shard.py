@@ -227,15 +227,15 @@ def mxm(s: ShardedELL, X: jnp.ndarray, sr, transposed: bool = False,
     packed=True (or_and only, set by grb's bitmap policy): X crosses the
     mesh as core.bitmap uint32 words — the frontier all-gather moves 32x
     fewer bytes in row form; the transposed form psum_scatters summable
-    nibble words (8x) and needs <= bitmap.NIBBLE_MAX_SHARDS row shards,
-    beyond which this falls back to the float route.
+    nibble words (8x) up to bitmap.NIBBLE_MAX_SHARDS row shards, beyond
+    which graph2d.mxm_2d itself builds the unpacked-psum_scatter body
+    (same word signature — the limit is enforced at the lowering, not
+    here).
     """
     from repro.core import bitmap
     from repro.distr import graph2d                 # lazy: core never pulls
     n, m = s.shape                                  # distr at import time
     dsz = s.data_size
-    if packed and transposed and dsz > bitmap.NIBBLE_MAX_SHARDS:
-        packed = False                              # nibble sums would carry
     if transposed:
         fn = graph2d.mxm_2d(s.mesh, sr, transposed=True,
                             out_rows=m + (-m) % dsz, packed=packed)
@@ -268,19 +268,14 @@ def mxm_words(s: ShardedELL, Xw: jnp.ndarray, transposed: bool = False):
     """or_and mxm with the frontier already in uint32 words: words in, words
     out — the packed-in/packed-out entry word-resident hop loops thread
     through (no pack/unpack at the call boundary, grb.mxm_words dispatches
-    here). Beyond bitmap.NIBBLE_MAX_SHARDS row shards the transposed nibble
-    psum would carry, so that case detours through the float lowering
-    *on device* (unpack -> float mxm -> pack, still mesh-resident)."""
-    from repro.core import bitmap
+    here). Beyond bitmap.NIBBLE_MAX_SHARDS row shards the transposed
+    lowering itself swaps the nibble psum for the unpacked psum_scatter
+    body (graph2d.mxm_2d detects the mesh width at build time), so the
+    word-in/word-out contract holds at any shard count."""
     from repro.core import semiring as S
     from repro.distr import graph2d
     n, m = s.shape
     dsz = s.data_size
-    if transposed and dsz > bitmap.NIBBLE_MAX_SHARDS:
-        f = Xw.shape[1] * bitmap.WORD_BITS
-        Y = mxm(s, bitmap.unpack(Xw, f), S.OR_AND, transposed=True,
-                packed=False)
-        return bitmap.pack(Y)
     if transposed:
         fn = graph2d.mxm_2d(s.mesh, S.OR_AND, transposed=True,
                             out_rows=m + (-m) % dsz, packed=True)

@@ -32,9 +32,12 @@ Two kinds of exports:
 Public contract: every callable here is mesh-resident and collective-
 explicit — nothing gathers to host (the gather-to-host fallbacks live in
 `grb`). Inputs must arrive pre-padded to the mesh (core.shard owns that);
-mis-padded `out_rows`, a packed call on a non-indicator semiring, or a
-packed transposed call over more than `bitmap.NIBBLE_MAX_SHARDS` row
-shards raise ValueError / NotImplementedError at trace time. shard_map
+mis-padded `out_rows` or a packed call on a non-indicator semiring raise
+ValueError / NotImplementedError at trace time. The packed transposed
+form's nibble-lane compression is valid only up to
+`bitmap.NIBBLE_MAX_SHARDS` row shards; wider data axes are detected at
+build time here and served by an unpacked-psum_scatter body with the same
+word-in/word-out signature (see mxm_2d). shard_map
 keeps the collectives explicit — `lowered.as_text()` shows exactly one
 all-gather per hop plus the final reduce, which is what the payload
 regression in tests/test_bitmap.py pins.
@@ -119,8 +122,12 @@ def mxm_2d(mesh: Mesh, sr: S.Semiring, transposed: bool = False,
     payload per hop — and ORs them through the packed gather-reduce.
     Transposed form still sums: the local partial bits are re-packed into
     summable nibble words (8 lanes/word, 4 bits each) so one psum_scatter
-    carries an 8x-smaller payload without bit carries (<= 15 row shards),
-    then each shard saturates its nibbles back to bits.
+    carries an 8x-smaller payload without bit carries. Nibble lanes
+    saturate at 15, so with more than `bitmap.NIBBLE_MAX_SHARDS` row
+    shards a 16th shard's contribution would carry into the next lane —
+    detected here at build time and served by the unpacked psum_scatter
+    body instead (full float partials on the wire, identical word-in/
+    word-out signature, bit-identical results).
 
     The jitted callable is lru-cached per (mesh, semiring, direction,
     packing) — repeated hops recompile only on new operand shapes.
@@ -149,10 +156,12 @@ def mxm_2d(mesh: Mesh, sr: S.Semiring, transposed: bool = False,
         if out_rows <= 0 or out_rows % dsz:
             raise ValueError(f"transposed mxm_2d needs out_rows padded to "
                              f"the data axis ({dsz}); got {out_rows}")
-        if dsz > bitmap.NIBBLE_MAX_SHARDS:
-            raise ValueError(f"packed transposed mxm_2d sums nibble lanes "
-                             f"across row shards; {dsz} > "
-                             f"{bitmap.NIBBLE_MAX_SHARDS} would carry")
+        # Nibble lanes sum carry-free only while every shard contributes at
+        # most 1 to a 4-bit lane: dsz shards can reach dsz <= 15. Past
+        # NIBBLE_MAX_SHARDS the compression is wrong, not just slow —
+        # detect at build time (dsz is mesh geometry, static) and keep the
+        # word-in/word-out contract via full float partials on the wire.
+        nibble_ok = dsz <= bitmap.NIBBLE_MAX_SHARDS
 
         def body(idx_l, msk_l, val_l, xw_l):
             # edge (i -> j) at local row i ORs x's words at row i into
@@ -165,10 +174,17 @@ def mxm_2d(mesh: Mesh, sr: S.Semiring, transposed: bool = False,
             ids = jnp.where(msk_l, idx_l, out_rows).reshape(-1)
             part = jax.ops.segment_sum(term.reshape(-1, fl), ids,
                                        num_segments=out_rows + 1)[:out_rows]
-            nib = bitmap.pack_nibbles(part > 0)        # (out_rows, fl/8)
-            tot = jax.lax.psum_scatter(nib, "data", scatter_dimension=0,
-                                       tiled=True)
-            own = bitmap.unpack_nibbles(tot, fl)       # (out_rows/dsz, fl)
+            if nibble_ok:
+                nib = bitmap.pack_nibbles(part > 0)    # (out_rows, fl/8)
+                tot = jax.lax.psum_scatter(nib, "data", scatter_dimension=0,
+                                           tiled=True)
+                own = bitmap.unpack_nibbles(tot, fl)   # (out_rows/dsz, fl)
+            else:
+                # unpacked psum_scatter fallback: float partial counts on
+                # the wire (no lane limit), saturate to bits after
+                own = jax.lax.psum_scatter(part, "data",
+                                           scatter_dimension=0, tiled=True)
+                own = (own > 0).astype(jnp.float32)
             return bitmap.pack(own)
     else:
         if out_rows <= 0 or out_rows % dsz:
@@ -215,6 +231,38 @@ def mxm_2d(mesh: Mesh, sr: S.Semiring, transposed: bool = False,
     return jax.jit(_smap(
         body, mesh,
         in_specs=(P("data", None),) * 3 + (P("data", fr),),
+        out_specs=P("data", fr)))
+
+
+@functools.lru_cache(maxsize=None)
+def bit_mxm_2d(mesh: Mesh, slots: int, k: int):
+    """or_and matmul on ShardedBitELL panels: (tiles, cols, xw) -> yw.
+
+    The fully bit-level row form — both the *adjacency* (core.bitadj
+    32x32-edge uint32 tiles, panels "data"-sharded) and the *frontier*
+    (core.bitmap words, rows over "data", words over pod x model) are
+    packed, so the per-hop all-gather over "data" carries uint32 frontier
+    words (32x less wire than the float route — the >= 8x all-gather
+    payload cut tests/test_bitadj.py pins off the HLO) and the local
+    gather-reduce is `core.bitadj.panels_mxm_words`: word-AND + OR, zero
+    float intermediates. `k` is A's logical column count (frontier rows;
+    gathered padding rows beyond the column-tile grid are zero and
+    sliced off by the query-tile squaring). Output is (p_pad*32, W) words,
+    rows "data"-sharded; `core.shard`-side padding rows are all-sentinel
+    panels and render zero. lru-cached per (mesh, slot width, k) like
+    every lowering factory here.
+    """
+    from repro.core import bitadj
+    fr = _fr_spec(mesh)
+
+    def body(tiles_l, cols_l, xw_l):
+        xw = jax.lax.all_gather(xw_l, "data", axis=0, tiled=True)
+        return bitadj.panels_mxm_words(tiles_l, cols_l, xw, k)
+
+    del slots      # cache key only: slot width changes the traced shapes
+    return jax.jit(_smap(
+        body, mesh,
+        in_specs=(P("data", None, None), P("data", None), P("data", fr)),
         out_specs=P("data", fr)))
 
 

@@ -125,6 +125,9 @@ def _make(src, dst, w, n, fmt, block):
         return BSR.from_coo(src, dst, w, (n, n), block=block)
     if fmt == "ell":
         return ELL.from_coo(src, dst, w, (n, n))
+    if fmt == "bitadj":
+        from repro.core.bitadj import BitELL
+        return BitELL.from_coo(src, dst, w, (n, n))
     return ops.auto_format(src, dst, w, (n, n), block=block)
 
 

@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: bit-tile or_and matmul  Yw = BitELL (&|) Xw.
+
+The BitELL analog of `kernels/bitmap_mxv.py`: the adjacency *structure*
+itself is packed (32x32 edge tiles in 32 uint32 words, `core.bitadj`), the
+frontier is packed (PR 5), so the whole traversal inner loop is word loads
++ bitwise select + OR — no floats, no MXU, 32x less adjacency traffic than
+the ELL gather on top of the 32x frontier cut.
+
+Layout / schedule
+-----------------
+  grid = (P,)                       # one step per 32-row panel
+  cols (scalar prefetch, SMEM)      # (P*S,) flattened slot -> column-tile
+                                    #   ids; sentinel C points at the
+                                    #   appended all-zero query tile
+  tiles (P, S*32) uint32 per step   # this panel's bit-tiles, flattened so
+                                    #   the panel is one BlockSpec row
+  Xw   ((C+1)*32, W) uint32, VMEM   # packed frontier squared up to the
+                                    #   column-tile grid + zero sentinel
+                                    #   tile; whole-resident (packed = 32x
+                                    #   smaller, same budget as bitmap_mxv)
+  Yw   (32, W) per step             # the panel's 32 result rows
+
+Per slot the kernel loads one 32-row query tile with a dynamic slice and
+one 32-word bit-tile, then spreads each of the 32 bit positions as an
+all-ones/all-zeros mask (`0 - bit` on uint32) over the matching query row
+— the word-AND + OR the XLA reference (`core.bitadj.panels_mxm_words`)
+expresses as a bit-spread einsum. CPU runs interpret mode for conformance;
+`grb` dispatch uses the XLA reference off-TPU (resolved by
+`kernels.ops.bitadj_mxv_packed`, same pattern as the BSR kernels).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.bitadj import TILE, BitELL, _pad_query_tiles
+
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")
+
+
+def _kernel(cols_ref, tiles_ref, x_ref, y_ref, *, slots: int):
+    p = pl.program_id(0)
+    w = y_ref.shape[1]
+
+    def slot_body(s, acc):
+        c = cols_ref[p * slots + s]                  # column-tile id
+        xb = x_ref[pl.dslice(c * TILE, TILE), :]     # (32, W) query tile
+        tw = tiles_ref[0, pl.dslice(s * TILE, TILE)]  # (32,) panel words
+
+        def bit_body(b, acc):
+            # all-ones where bit b is set in each of the 32 row words
+            sel = jnp.uint32(0) - jnp.bitwise_and(
+                jnp.right_shift(tw, b.astype(jnp.uint32)), jnp.uint32(1))
+            xr = jax.lax.dynamic_slice_in_dim(xb, b, 1, axis=0)  # (1, W)
+            return jnp.bitwise_or(acc, sel[:, None] & xr)
+
+        return jax.lax.fori_loop(0, TILE, bit_body, acc)
+
+    y_ref[...] = jax.lax.fori_loop(
+        0, slots, slot_body, jnp.zeros((TILE, w), dtype=jnp.uint32))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bitadj_mxv_packed(A: BitELL, Xw: jnp.ndarray, *,
+                      interpret: bool = False) -> jnp.ndarray:
+    """Yw[i] = OR_{j in adj(i)} Xw[j] over uint32 words, adjacency served
+    straight from the bit-tiles. Xw: (k, W) packed frontier. -> (n, W)."""
+    n, k = A.shape
+    Pn, Sn, _ = A.tiles.shape
+    w = Xw.shape[1]
+    Xt = _pad_query_tiles(Xw.astype(jnp.uint32), k)   # (C+1, 32, W)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, slots=Sn),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(Pn,),
+            in_specs=[
+                pl.BlockSpec((1, Sn * TILE), lambda p, cols: (p, 0)),
+                pl.BlockSpec((Xt.shape[0] * TILE, w), lambda p, cols: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((TILE, w), lambda p, cols: (p, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((Pn * TILE, w), jnp.uint32),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",)),
+    )(A.cols.reshape(-1).astype(jnp.int32),
+      A.tiles.reshape(Pn, Sn * TILE),
+      Xt.reshape(-1, w))
+    return out[:n]

@@ -44,6 +44,18 @@ def ell_mxv_packed(A, Xw: jnp.ndarray, *,
     return _bm.ell_mxv_packed(store, Xw, interpret=interpret)
 
 
+def bitadj_mxv_packed(A, Xw: jnp.ndarray, *,
+                      interpret: bool | None = None) -> jnp.ndarray:
+    """Bit-tile or_and matmul over uint32 frontier words (see
+    kernels/bitadj_mxv.py). Takes a BitELL store or a GBMatrix handle; the
+    XLA reference is `core.bitadj.panels_mxm_words`."""
+    from repro.kernels import bitadj_mxv as _ba
+    store = getattr(A, "store", A)
+    if interpret is None:
+        interpret = _interpret_default()
+    return _ba.bitadj_mxv_packed(store, Xw, interpret=interpret)
+
+
 def bsr_ewise(A, B, mode: str, op=None) -> BSR:
     """BSR element-wise family through the Pallas gathered-tile kernel
     (interpret mode off-TPU; the XLA reference is the ``impl="xla"`` default

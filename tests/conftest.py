@@ -55,6 +55,23 @@ def pytest_collection_modifyitems(config, items):
                 item.add_marker(skip_dist)
 
 
+# -- cache isolation for trace-time counter pins ------------------------------
+# The observability counters (core.bitmap.pack_calls, core.bsr.densify_calls /
+# host_numeric_calls, grb.host_transfers for mesh lowerings) bump at *trace*
+# time: a jit-cache hit re-runs the op without re-counting, so a pin that
+# asserts "this route packs / never densifies" proves nothing when an earlier
+# test already traced the same shapes — it passes vacuously against stale
+# compilations. Counter-pin tests request this fixture and call it before each
+# measured section; it drops every jit trace/compilation cache so the pinned
+# call is guaranteed to trace (and therefore count) afresh.
+@pytest.fixture
+def fresh_trace():
+    def _fresh():
+        jax.clear_caches()
+    _fresh()
+    return _fresh
+
+
 # -- the meshes the sharded suite runs on -------------------------------------
 # Both use all 8 forced devices: 2x2x2 exercises a frontier sharded over
 # pod x model with 2-way row blocks; 4x2x1 puts 4-way row blocks under a

@@ -140,11 +140,34 @@ def test_payload_accounting():
 
 
 # -- policy -------------------------------------------------------------------
-def test_policy_width_floor_and_overrides():
+# Counter pins below request `fresh_trace` (conftest): pack_calls has
+# trace-time semantics, so without cache isolation a pin can pass vacuously
+# against a compilation an earlier test left behind.
+def test_trace_time_counters_need_cache_isolation(fresh_trace):
+    # the mechanism itself: a jitted caller counts at trace, a jit-cache hit
+    # re-runs the op without re-counting, and clearing the caches restores
+    # counting — the reason every pin in this file takes `fresh_trace`.
+    import jax
+
+    f = jax.jit(lambda x: bitmap.pack(x))
+    x = jnp.ones((4, 8), dtype=jnp.float32)
+    c0 = bitmap.pack_calls()
+    np.asarray(f(x))
+    assert bitmap.pack_calls() == c0 + 1, "fresh trace must count"
+    np.asarray(f(x))
+    assert bitmap.pack_calls() == c0 + 1, \
+        "cache hit re-runs without counting — the vacuous-pass mode"
+    fresh_trace()
+    np.asarray(f(x))
+    assert bitmap.pack_calls() == c0 + 2, "isolation restores counting"
+
+
+def test_policy_width_floor_and_overrides(fresh_trace):
     D = _dense_of("rmat_s6")
     h = grb.GBMatrix.from_dense(D, fmt="ell")
     wide = jnp.asarray(_bool_frontier(D.shape[0], grb.AUTO_PACK_MIN_WIDTH))
     narrow = wide[:, :grb.AUTO_PACK_MIN_WIDTH - 1]
+    fresh_trace()
     c0 = bitmap.pack_calls()
     grb.mxm(h, narrow, S.OR_AND)
     assert bitmap.pack_calls() == c0, "below the floor must stay unpacked"
@@ -162,9 +185,10 @@ def test_policy_width_floor_and_overrides():
             pass
 
 
-def test_policy_skips_bsr_and_other_semirings():
+def test_policy_skips_bsr_and_other_semirings(fresh_trace):
     D = _dense_of("rmat_s6")
     wide = jnp.asarray(_bool_frontier(D.shape[0], F))
+    fresh_trace()
     c0 = bitmap.pack_calls()
     grb.mxm(grb.GBMatrix.from_dense(D, fmt="bsr", block=64), wide, S.OR_AND)
     grb.mxm(grb.GBMatrix.from_dense(D, fmt="ell"), wide, S.PLUS_TIMES)
@@ -206,10 +230,11 @@ def test_mxv_vxm_packed_matches_unpacked(name):
         np.testing.assert_array_equal(got, want, err_msg=f"{name} {op}")
 
 
-def test_any_pair_packs_too():
+def test_any_pair_packs_too(fresh_trace):
     D = _dense_of("c5")
     h = grb.GBMatrix.from_dense(D, fmt="ell")
     X = jnp.asarray(_bool_frontier(5, F, seed=9))
+    fresh_trace()
     c0 = bitmap.pack_calls()
     with grb.packed_frontiers("off"):
         want = np.asarray(grb.mxm(h, X, S.ANY_PAIR))

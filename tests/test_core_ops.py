@@ -98,10 +98,14 @@ def test_mxv_vxm_consistency():
 
 
 def test_auto_format():
-    # dense-ish blocks -> BSR; scattered hypersparse -> ELL
+    from repro.core.bitadj import BitELL
+    # dense-ish *boolean* blocks -> BitELL (structure is the whole payload);
+    # the same structure with real weights -> BSR; scattered hypersparse -> ELL
     r = np.repeat(np.arange(64), 32)
     c = np.tile(np.arange(32), 64)
-    assert isinstance(ops.auto_format(r, c, None, (64, 64), block=64), BSR)
+    assert isinstance(ops.auto_format(r, c, None, (64, 64), block=64), BitELL)
+    w = np.linspace(1.0, 2.0, len(r)).astype(np.float32)
+    assert isinstance(ops.auto_format(r, c, w, (64, 64), block=64), BSR)
     rng = np.random.default_rng(0)
     r2 = rng.integers(0, 100_000, size=500)
     c2 = rng.integers(0, 100_000, size=500)

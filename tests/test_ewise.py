@@ -155,7 +155,7 @@ def test_sparse_mask_may_be_sparse_handle(fmt):
                                rtol=1e-5)
 
 
-def test_ell_mask_on_bsr_path_stays_sparse():
+def test_ell_mask_on_bsr_path_stays_sparse(fresh_trace):
     """An ELL descriptor mask over BSR operands converts sparse-to-sparse
     (COO), never through a dense intermediate."""
     D1 = _rand_dense(seed=42)
@@ -169,7 +169,7 @@ def test_ell_mask_on_bsr_path_stays_sparse():
     np.testing.assert_allclose(np.asarray(got.to_dense()), want, rtol=1e-5)
 
 
-def test_bsr_ell_operands_coerce_sparsely():
+def test_bsr_ell_operands_coerce_sparsely(fresh_trace):
     """A BSR and an ELL operand meet via COO relabeling, never to_dense."""
     D1 = _rand_dense(seed=13)
     D2 = _rand_dense(seed=14)
@@ -286,7 +286,7 @@ def test_bsr_or_reduce_negative_values():
 
 @pytest.mark.parametrize("fmt", ["bsr", "ell"])
 @pytest.mark.parametrize("axis", [None, 0, 1])
-def test_sparse_reduce_axes_match_dense_oracle(fmt, axis):
+def test_sparse_reduce_axes_match_dense_oracle(fmt, axis, fresh_trace):
     D = _rand_dense(seed=24)
     D[:, 7] = 0.0                      # a structurally empty column
     D[33, :] = 0.0                     # and row
@@ -346,7 +346,7 @@ def test_extract_grid(fmt, idx_kind, mask_mode):
         assert isinstance(got, grb.GBMatrix)
 
 
-def test_extract_aligned_bsr_stays_in_tile_land():
+def test_extract_aligned_bsr_stays_in_tile_land(fresh_trace):
     """Block-aligned ranges take tile-list surgery — zero densifications."""
     D = _rand_dense(seed=31)
     A = _handle("bsr", D)

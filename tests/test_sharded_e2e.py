@@ -131,5 +131,5 @@ def test_context_mesh_rejects_bsr_graph(mesh222):
     clear TypeError (the Database freeze path avoids it by freezing ELL)."""
     g = rmat_graph(scale=6, edge_factor=8, seed=1, fmt="bsr")
     ctx = ExecutionContext(g, mesh=mesh222)
-    with pytest.raises(TypeError, match="needs ELL row storage"):
+    with pytest.raises(TypeError, match="needs ELL or BitELL row"):
         ctx.matrix("KNOWS")

@@ -267,10 +267,10 @@ def test_ewise_add_mult_roundtrip(mesh222):
 # -- the mixed-operand / wrong-store contract ---------------------------------
 def test_distribute_rejects_non_ell(mesh222):
     D = _dense_of("k4")
-    with pytest.raises(TypeError, match="needs ELL row storage"):
+    with pytest.raises(TypeError, match="needs ELL or BitELL row"):
         grb.distribute(grb.GBMatrix.from_dense(D, fmt="bsr", block=4),
                        mesh222)
-    with pytest.raises(TypeError, match="needs ELL row storage"):
+    with pytest.raises(TypeError, match="needs ELL or BitELL row"):
         grb.distribute(grb.GBMatrix(jnp.asarray(D)), mesh222)
 
 

@@ -1,0 +1,60 @@
+"""Tropical-path regressions: zero-weight edges are structure, not absence.
+
+min_plus/max_plus render absent entries as their +/-inf identity, so a stored
+0.0-weight edge used to be indistinguishable from no edge inside the tile
+matmul — SSSP through a free edge reported inf. The fix carries structure
+separately (ELL's mask already does; BSR grows a per-entry `emask` when
+explicit zeros occur), and these goldens pin it end to end: they fail on the
+pre-fix storage paths.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.algorithms import sssp
+from repro.core import bsr as bsr_mod, grb, semiring as S
+
+
+def _zero_weight_chain(fmt):
+    # 0 --(0.0)--> 1 --(1.0)--> 2 : the first hop is free but real
+    r = np.array([0, 1])
+    c = np.array([1, 2])
+    v = np.array([0.0, 1.0], np.float32)
+    kw = {"block": 2} if fmt == "bsr" else {}
+    return grb.GBMatrix.from_coo(r, c, v, (3, 3), fmt=fmt, **kw)
+
+
+@pytest.mark.parametrize("fmt", ["bsr", "ell"])
+def test_sssp_zero_weight_golden(fmt):
+    h = _zero_weight_chain(fmt)
+    dist = np.asarray(sssp(h, jnp.asarray([0])))[:, 0]
+    np.testing.assert_array_equal(dist, [0.0, 0.0, 1.0])
+
+
+@pytest.mark.parametrize("fmt", ["bsr", "ell"])
+@pytest.mark.parametrize("srname", ["min_plus", "max_plus"])
+def test_tropical_mxm_keeps_zero_edges(fmt, srname):
+    sr = S.get(srname)
+    h = _zero_weight_chain(fmt)
+    x = jnp.asarray(np.array([[0.0], [10.0], [20.0]], np.float32))
+    got = np.asarray(grb.mxm(h, x, sr, grb.TRANSPOSE_A))[:, 0]
+    # pulling along in-edges: node 1 reaches node 0's 0.0 through the free
+    # edge (0 + 0.0), node 2 reaches node 1's 10.0 through weight 1.0
+    ident = np.float32(sr.identity)
+    np.testing.assert_array_equal(got, [ident, 0.0, 11.0])
+
+
+def test_bsr_emask_only_when_needed():
+    # zero-free builds must not pay the mask: emask stays None
+    r, c = np.array([0, 1]), np.array([1, 2])
+    plain = bsr_mod.BSR.from_coo(r, c, np.array([2.0, 1.0], np.float32),
+                                 (3, 3), block=2)
+    assert plain.emask is None
+    zeroed = bsr_mod.BSR.from_coo(r, c, np.array([0.0, 1.0], np.float32),
+                                  (3, 3), block=2)
+    assert zeroed.emask is not None
+    # structure survives transpose and COO round-trips
+    rt, ct, vt = zeroed.transpose().to_coo()
+    assert sorted(zip(rt.tolist(), ct.tolist(), vt.tolist())) == \
+        [(1, 0, 0.0), (2, 1, 1.0)]
+    assert zeroed.nnz == 2

@@ -123,7 +123,7 @@ def test_bsr_ewise_pallas_matches_xla_and_oracle(mode, n, block):
                                _bsr_dense_oracle(Da, Db, mode), rtol=1e-6)
 
 
-def test_bsr_ewise_family_runs_device_side():
+def test_bsr_ewise_family_runs_device_side(fresh_trace):
     """The whole ewise family, both impls: zero trips through the
     host-numpy `from_blocks` assembly (the pre-refactor round-trip)."""
     Da, Db = _pattern(40, seed=7), _pattern(40, seed=8)
@@ -140,7 +140,7 @@ def test_bsr_ewise_family_runs_device_side():
     assert bsrmod.host_numeric_calls() == before
 
 
-def test_bsr_from_blocks_still_counts():
+def test_bsr_from_blocks_still_counts(fresh_trace):
     """The counter itself stays honest: the host assembly path bumps."""
     before = bsrmod.host_numeric_calls()
     BSR.from_blocks(np.array([0]), np.array([0]),
@@ -170,7 +170,7 @@ def test_word_loops_match_float_loops(fmt):
     np.testing.assert_array_equal(np.asarray(ww), np.asarray(wf))
 
 
-def test_server_batched_sweep_zero_transfers():
+def test_server_batched_sweep_zero_transfers(fresh_trace):
     """The continuous-batching sweep never gathers a frontier: the stats
     line the server now reports must read zero for a full mixed queue."""
     g = _sym_graph(64, seed=13, fmt="ell")
@@ -194,7 +194,7 @@ def _distributed_pair(mesh, n=48, seed=21):
 
 
 @pytest.mark.distributed
-def test_sharded_traversals_zero_transfers(mesh222):
+def test_sharded_traversals_zero_transfers(mesh222, fresh_trace):
     ell, sh = _distributed_pair(mesh222)
     seeds = jnp.arange(10) * 4
     before = grb.host_transfers()
@@ -244,7 +244,7 @@ def _blend(name: str, mask: np.ndarray):
 @pytest.mark.parametrize("blend", DESC_BLENDS)
 @pytest.mark.parametrize("opname", ["add", "mult"])
 def test_shardlocal_ewise_matches_gather_oracle(request, meshname, blend,
-                                                opname):
+                                                opname, fresh_trace):
     mesh = request.getfixturevalue(meshname)
     n = 24
     Da, Db = _pattern(n, seed=31, density=0.2), _pattern(n, seed=32,
@@ -274,7 +274,7 @@ def test_shardlocal_ewise_matches_gather_oracle(request, meshname, blend,
 
 
 @pytest.mark.distributed
-def test_shardlocal_unary_family_matches_oracle(mesh222):
+def test_shardlocal_unary_family_matches_oracle(mesh222, fresh_trace):
     """apply / select / min-max reduce / extract stay shard-local and agree
     with the ELL oracle (default descriptor; the blend grid above covers
     the descriptor surface through ewise)."""
