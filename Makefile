@@ -6,7 +6,7 @@ PY ?= python
 # src for the package, repo root so `benchmarks.*` resolves as a namespace pkg
 export PYTHONPATH := src:.$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast test-ewise test-dist test-delta test-serve test-transfers bench-smoke calibrate docs-check
+.PHONY: test test-fast test-ewise test-dist test-delta test-serve test-transfers test-algos bench-smoke calibrate docs-check
 
 # tier-1 verification (the command ROADMAP.md pins)
 test:
@@ -40,6 +40,15 @@ test-delta:
 test-serve:
 	$(PY) -m pytest -x -q -m serve
 
+# algorithm breadth suite: the cross-format oracle conformance grid
+# (betweenness/closeness/similarity/labelprop x dense/BSR/ELL/BitELL x
+# named + RMAT graphs), zero-edge goldens, the property sweep, and the
+# CALL algo.* end-to-end cells (the sharded bit-identity cells carry the
+# distributed marker and run under `make test-dist` / the tier-1
+# subprocess wrapper)
+test-algos:
+	$(PY) -m pytest -x -q -m algos
+
 # transfer-accounting suite: shard-local ewise vs the gather oracle, BSR
 # device ewise vs the XLA reference, zero-host-transfer pins on the sharded
 # and word-resident hot loops (the distributed half needs the forced
@@ -57,6 +66,7 @@ bench-smoke:
 	$(PY) benchmarks/run.py triangles --json BENCH_triangles.json
 	$(PY) benchmarks/run.py throughput --json BENCH_throughput.json
 	$(PY) benchmarks/run.py bitadj --json BENCH_bitadj.json
+	$(PY) benchmarks/run.py algos --json BENCH_algos.json
 
 # re-measure every AUTO_* crossover constant on this host and print the
 # drift vs the committed values (benchmarks/calibrate.py — report only,

@@ -1,0 +1,94 @@
+"""Algorithm breadth suite: batched multi-source centrality vs the naive
+one-BFS-per-source race, packed vs unpacked sweep widths, BitELL vs ELL.
+
+Three claims behind the `CALL algo.*` tentpole, each validated against the
+reference answer before it is timed (a fast wrong sweep is worthless):
+
+  betweenness — Brandes over F sources as ONE (n, F) columned sweep vs F
+                single-source sweeps: the multi-source batching that also
+                lets the query server coalesce many CALLs into one launch
+                (AUTO_CENTRALITY_BATCH provenance, with calibrate.py's
+                calibrate_centrality_batch as the host-drift check)
+  closeness   — the same BFS batched wide enough for the word-resident
+                packed route vs narrow sub-packing chunks: the 32-lanes-
+                per-word frontier claim applied to centrality
+  labelprop/closeness on BitELL vs ELL — the bit-packed adjacency cells:
+                structural algorithms ride the word route on 1-bit edges
+
+Rows land in BENCH_algos.json via `make bench-smoke`.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro import algorithms as alg
+from repro.core import grb
+from repro.core.bitadj import BitELL
+from repro.core.ell import ELL
+from repro.graph.datagen import rmat_edges
+
+SCALE = 8
+EDGE_FACTOR = 8
+SOURCES = 64
+
+
+def _time(fn):
+    fn()                                  # warmup: exclude trace/compile time
+    t0 = time.perf_counter()
+    got = fn()
+    return got, (time.perf_counter() - t0) * 1e6
+
+
+def _handles(scale: int):
+    src, dst, n = rmat_edges(scale=scale, edge_factor=EDGE_FACTOR, seed=scale)
+    s = np.concatenate([src, dst])        # symmetrize: undirected traversal
+    d = np.concatenate([dst, src])
+    key = s.astype(np.int64) * n + d
+    _, idx = np.unique(key, return_index=True)
+    s, d = s[idx], d[idx]
+    keep = s != d
+    s, d = s[keep], d[keep]
+    e = grb.GBMatrix(ELL.from_coo(s, d, None, (n, n)))
+    b = grb.GBMatrix(BitELL.from_coo(s, d, None, (n, n)))
+    return e, b, n
+
+
+def run(rows):
+    e, b, n = _handles(SCALE)
+    srcs = np.arange(SOURCES)
+
+    # -- batched multi-source Brandes vs one-BFS-per-source -------------------
+    batched, t_batch = _time(
+        lambda: np.asarray(alg.betweenness(e, sources=srcs, batch=SOURCES)))
+    solo, t_solo = _time(lambda: sum(
+        np.asarray(alg.brandes_parts(e, [s]))[:, 0] for s in srcs))
+    np.testing.assert_allclose(batched, solo, atol=1e-3, rtol=1e-4)
+    rows.append((f"betweenness_batched_s{SCALE}_f{SOURCES}", t_batch,
+                 f"speedup={t_solo / t_batch:.1f}x"))
+    rows.append((f"betweenness_persource_s{SCALE}_f{SOURCES}", t_solo,
+                 f"n={n}"))
+
+    # -- packed (word-resident) vs unpacked closeness sweep -------------------
+    packed, t_packed = _time(
+        lambda: np.asarray(alg.closeness(e, sources=srcs, batch=SOURCES)))
+    narrow, t_narrow = _time(
+        lambda: np.asarray(alg.closeness(e, sources=srcs, batch=4)))
+    np.testing.assert_array_equal(packed, narrow)
+    rows.append((f"closeness_packed_s{SCALE}_f{SOURCES}", t_packed,
+                 f"speedup={t_narrow / t_packed:.1f}x"))
+    rows.append((f"closeness_narrow_s{SCALE}_f4chunks", t_narrow,
+                 "below AUTO_PACK_MIN_WIDTH"))
+
+    # -- BitELL vs ELL cells --------------------------------------------------
+    cl_bit, t_bit = _time(
+        lambda: np.asarray(alg.closeness(b, sources=srcs, batch=SOURCES)))
+    np.testing.assert_array_equal(cl_bit, packed)
+    rows.append((f"closeness_bitell_s{SCALE}_f{SOURCES}", t_bit,
+                 f"vs_ell={t_packed / t_bit:.2f}x"))
+    lp_ell, t_lp_ell = _time(lambda: np.asarray(alg.label_propagation(e)))
+    lp_bit, t_lp_bit = _time(lambda: np.asarray(alg.label_propagation(b)))
+    np.testing.assert_array_equal(lp_bit, lp_ell)
+    rows.append((f"labelprop_bitell_s{SCALE}", t_lp_bit,
+                 f"vs_ell={t_lp_ell / t_lp_bit:.2f}x"))

@@ -28,6 +28,9 @@ Criteria per constant:
                        traversal
   AUTO_BITADJ_MAX_SLOTS first widest-panel slot count where the ELL route
                        wins back (slot padding outgrows the bit payload)
+  AUTO_CENTRALITY_BATCH first source-batch width where widening the
+                       multi-source centrality sweep stops paying (per-
+                       source time within 10% of the sweep's best)
 """
 from __future__ import annotations
 
@@ -235,6 +238,25 @@ def calibrate_bitadj_slots(rows):
                  _status(bitadj.AUTO_BITADJ_MAX_SLOTS, measured, steps)))
 
 
+def calibrate_centrality_batch(rows):
+    from repro import algorithms as alg
+    from repro.algorithms import centrality
+    g = rmat_graph(scale=8, edge_factor=8, seed=9, fmt="ell")
+    rel = g.relations["KNOWS"]
+    srcs = np.arange(g.n)
+    widths = (16, 32, 64, 128, 256)
+    times = [_timeit(lambda: np.asarray(
+        alg.closeness(rel, sources=srcs, batch=w)), reps=1) for w in widths]
+    best = min(times)
+    # the crossover is diminishing returns, not a winner flip: take the
+    # first width already within 10% of the sweep's best per-source time
+    sweep = [(w, t <= 1.1 * best) for w, t in zip(widths, times)]
+    measured = _first(sweep, bool, default=widths[-1])
+    rows.append(("AUTO_CENTRALITY_BATCH", centrality.AUTO_CENTRALITY_BATCH,
+                 measured,
+                 _status(centrality.AUTO_CENTRALITY_BATCH, measured, widths)))
+
+
 def main() -> None:
     rows: list = []
     calibrate_min_grid(rows)
@@ -244,6 +266,7 @@ def main() -> None:
     calibrate_delta_compact(rows)
     calibrate_bitadj_fill(rows)
     calibrate_bitadj_slots(rows)
+    calibrate_centrality_batch(rows)
     print("constant,committed,measured,status")
     drifted = [r for r in rows if r[3] == "drift"]
     for name, committed, measured, status in rows:

@@ -17,6 +17,11 @@
   bitadj      — bit-packed adjacency (BitELL): resident bytes + triangle
                 and BFS speed vs the float ELL route, validated
                 bit-identical first (AUTO_BITADJ_* provenance)
+  algos       — algorithm breadth (CALL algo.* tentpole): batched multi-
+                source Brandes vs one-BFS-per-source, packed vs unpacked
+                closeness widths, BitELL vs ELL cells — each validated
+                against the reference before timing
+                (AUTO_CENTRALITY_BATCH provenance)
   mutations   — query latency under a live Poisson insert/delete stream
                 (delta serving vs rebuild-on-freeze) + the delta-vs-rebuild
                 crossover sweep calibrating AUTO_DELTA_COMPACT
@@ -45,9 +50,9 @@ if os.environ.get("REPRO_FORCE_DEVICES"):
 
 
 def main(argv=None) -> None:
-    from benchmarks import bench_bitadj, bench_ewise, bench_khop, \
-        bench_kernels, bench_ktruss, bench_mutations, bench_throughput, \
-        bench_triangles
+    from benchmarks import bench_algos, bench_bitadj, bench_ewise, \
+        bench_khop, bench_kernels, bench_ktruss, bench_mutations, \
+        bench_throughput, bench_triangles
     argv = list(sys.argv[1:] if argv is None else argv)
     json_path = None
     if "--json" in argv:
@@ -69,6 +74,7 @@ def main(argv=None) -> None:
         "ktruss": bench_ktruss.run,
         "mutations": bench_mutations.run,
         "bitadj": bench_bitadj.run,
+        "algos": bench_algos.run,
     }
     if only and only not in suites:
         raise SystemExit(f"unknown suite {only!r}; one of "

@@ -1,9 +1,15 @@
 from repro.algorithms.traverse import bfs_levels, khop_counts
+from repro.algorithms.centrality import (betweenness, brandes_parts,
+                                         closeness, closeness_from_levels)
 from repro.algorithms.ktruss import ktruss
+from repro.algorithms.labelprop import label_propagation
 from repro.algorithms.pagerank import pagerank
+from repro.algorithms.similarity import similarity, similarity_matrix
 from repro.algorithms.sssp import sssp
 from repro.algorithms.wcc import wcc
 from repro.algorithms.triangles import triangle_count
 
-__all__ = ["bfs_levels", "khop_counts", "ktruss", "pagerank", "sssp", "wcc",
-           "triangle_count"]
+__all__ = ["bfs_levels", "betweenness", "brandes_parts", "closeness",
+           "closeness_from_levels", "khop_counts", "ktruss",
+           "label_propagation", "pagerank", "similarity",
+           "similarity_matrix", "sssp", "wcc", "triangle_count"]

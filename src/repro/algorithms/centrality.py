@@ -1,0 +1,147 @@
+"""Betweenness and closeness centrality — batched multi-source Brandes.
+
+Brandes' algorithm splits betweenness into a forward BFS that counts
+shortest paths (sigma) and a backward sweep that accumulates dependencies
+(delta) down the BFS DAG. Both phases are one semiring mxm per hop over a
+multi-source frontier matrix, so the whole computation batches over sources
+exactly like the k-hop benchmark batches over queries: column j of every
+(n, F) carry belongs to source j.
+
+  levels  or_and BFS (`traverse.bfs_levels`) — word-resident across hops
+          wherever `grb.words_route_ok` says the packed uint32 route
+          applies (dense/ELL/BitELL/sharded at width >= policy), the same
+          `_reach_words`-style loop PR 8 built
+  sigma   plus_times hops masked to `levels == t+1`: path counts only
+          accumulate along BFS-DAG edges
+  delta   the Brandes recurrence pulled backward one level at a time:
+          delta[v] += sigma[v] * sum_w A[v,w] (1 + delta[w]) / sigma[w]
+          for w exactly one level below v
+
+Everything is mxm + ewise on device carries inside lax loops: no
+``to_dense()``, no host transfers — a sharded handle (`grb.distribute`)
+runs both phases as mesh collectives unchanged, and the BSR path never
+touches the densify counter (tests/test_algo_suite.py pins both).
+
+Structural semantics: edge values are treated as unit (path *counts*);
+hand in a 0/1 adjacency — every datagen graph qualifies. Closeness uses
+the Wasserman-Faust formula, so disconnected graphs score per reachable
+set instead of collapsing to zero.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import grb, semiring as S
+from repro.core.grb import Descriptor
+from repro.algorithms.traverse import bfs_levels, seeds_to_frontier
+
+# Sources per batched Brandes sweep (and the closeness BFS batch). Measured
+# on the XLA-CPU reference host by benchmarks/bench_algos.py: per-source
+# cost keeps dropping up to ~128 frontier columns (4 packed words of
+# sources amortize one adjacency sweep), flat beyond — and 128 matches the
+# WCC closure batch, so the two share compiled sweep shapes.
+# `make calibrate` re-measures the crossover (calibrate_centrality_batch).
+AUTO_CENTRALITY_BATCH = 128
+
+
+def brandes_parts(A, seeds, rel=None) -> jnp.ndarray:
+    """(n, F) per-source Brandes dependency columns: entry [v, j] is the
+    dependency of source ``seeds[j]`` on vertex v (its own row zeroed, as
+    Brandes excludes the source). Summing columns gives betweenness over
+    that source set — the query layer batches many CALLs through this and
+    sums each member's own slice."""
+    A = grb.matrix(A, rel)
+    n = A.shape[0]
+    seeds = np.asarray(seeds, dtype=np.int64)
+    f = len(seeds)
+    if f == 0 or A.nvals == 0:
+        # zero-edge adjacency: no vertex sits on any path — skip tracing
+        # the zero-trip hop loops entirely
+        return jnp.zeros((n, f), dtype=jnp.float32)
+    levels = bfs_levels(A, seeds)
+    sigma0 = seeds_to_frontier(seeds, n)
+
+    def fwd_cond(state):
+        t, _, frontier = state
+        return jnp.logical_and(t < n, jnp.any(frontier > 0))
+
+    def fwd_body(state):
+        t, sigma, frontier = state
+        nxt = grb.mxm(A, frontier, S.PLUS_TIMES, Descriptor(transpose_a=True))
+        nxt = jnp.where(levels == t + 1.0, nxt, 0.0)
+        return t + 1.0, sigma + nxt, nxt
+
+    _, sigma, _ = jax.lax.while_loop(
+        fwd_cond, fwd_body, (jnp.float32(0.0), sigma0, sigma0))
+
+    finite = jnp.isfinite(levels)
+    dmax = jnp.max(jnp.where(finite, levels, 0.0))
+
+    def bwd_cond(state):
+        d, _ = state
+        return d > 0.5
+
+    def bwd_body(state):
+        d, delta = state
+        # sigma > 0 wherever levels is finite; the maximum() only guards
+        # unreached rows the where() already zeroes
+        coef = jnp.where(levels == d,
+                         (1.0 + delta) / jnp.maximum(sigma, 1.0), 0.0)
+        pulled = grb.mxm(A, coef, S.PLUS_TIMES)
+        delta = delta + jnp.where(levels == d - 1.0, sigma * pulled, 0.0)
+        return d - 1.0, delta
+
+    _, delta = jax.lax.while_loop(
+        bwd_cond, bwd_body, (dmax, jnp.zeros((n, f), dtype=jnp.float32)))
+    return jnp.where(levels > 0.0, delta, 0.0)
+
+
+def betweenness(A, sources=None, rel=None,
+                batch: int = AUTO_CENTRALITY_BATCH) -> jnp.ndarray:
+    """Betweenness centrality (n,) float32 over shortest paths from
+    ``sources`` (default: every vertex — exact directed betweenness).
+    A subset gives source-sampled betweenness: the same dependency sums
+    restricted to those sources; the matching oracle restricts alike."""
+    A = grb.matrix(A, rel)
+    n = A.shape[0]
+    if sources is None:
+        sources = np.arange(n)
+    sources = np.asarray(sources, dtype=np.int64)
+    bc = jnp.zeros((n,), dtype=jnp.float32)
+    if len(sources) == 0 or A.nvals == 0:
+        return bc
+    for c0 in range(0, len(sources), batch):
+        bc = bc + jnp.sum(brandes_parts(A, sources[c0:c0 + batch]), axis=1)
+    return bc
+
+
+def closeness_from_levels(levels: jnp.ndarray) -> jnp.ndarray:
+    """(F,) Wasserman-Faust closeness per BFS-level column:
+    ((r-1)/(n-1)) * ((r-1)/sum_of_distances) with r the reachable count
+    (the source included at distance 0); 0.0 when nothing is reachable."""
+    n = levels.shape[0]
+    finite = jnp.isfinite(levels)
+    r = jnp.sum(finite.astype(jnp.float32), axis=0)
+    tot = jnp.sum(jnp.where(finite, levels, 0.0), axis=0)
+    denom = float(max(n - 1, 1)) * jnp.where(tot > 0.0, tot, 1.0)
+    return jnp.where(tot > 0.0, (r - 1.0) ** 2 / denom, 0.0)
+
+
+def closeness(A, sources=None, rel=None,
+              batch: int = AUTO_CENTRALITY_BATCH) -> jnp.ndarray:
+    """Closeness centrality (F,) float32 of each source vertex, over
+    outgoing BFS distances (default sources: every vertex)."""
+    A = grb.matrix(A, rel)
+    n = A.shape[0]
+    if sources is None:
+        sources = np.arange(n)
+    sources = np.asarray(sources, dtype=np.int64)
+    if len(sources) == 0:
+        return jnp.zeros((0,), dtype=jnp.float32)
+    if A.nvals == 0:
+        return jnp.zeros((len(sources),), dtype=jnp.float32)
+    outs = [closeness_from_levels(bfs_levels(A, sources[c0:c0 + batch]))
+            for c0 in range(0, len(sources), batch)]
+    return outs[0] if len(outs) == 1 else jnp.concatenate(outs)

@@ -1,0 +1,73 @@
+"""Label-propagation community detection on label-indicator frontiers.
+
+Synchronous CDLP (the LDBC Graphalytics rule): every vertex adopts the
+most frequent label among its neighbors' current labels — in BOTH edge
+directions, plus its own vote — ties broken toward the smallest label,
+iterated until no label moves (or ``max_iter``). The self-vote lets a
+vertex keep its label absent strictly stronger evidence and lets dense
+regions hold their own label against a bridge — which is what makes this
+community detection rather than component labeling. Like every
+synchronous CDLP it is not a contraction everywhere: a bare 2-clique
+trades labels forever (both members see 2 votes for the other's label vs
+1 for their own) and exits at ``max_iter`` — the LDBC rule accepts that;
+cliques of size >= 3 converge (tests/test_algo_suite.py sweeps it).
+
+This rides the WCC machinery: like `wcc`, the labels live host-side and
+ALL graph work is batched column sweeps over the adjacency — here the
+columns are label indicators instead of reachability frontiers, and the
+per-hop op is a plus_pair vote count instead of an or_and closure:
+
+  votes[v, c] = |{w : (v,w) or (w,v) stored, label(w) = c}|
+
+chunked `batch` labels at a time (the same knob as `wcc`'s seed batch),
+with a running (best_count, best_label) fold across chunks. Structural
+plus_pair counts ignore edge values, and on a mesh the per-chunk counts
+psum as small integers — the sharded labels are bit-identical to local
+(tests/test_algo_suite.py pins it, along with the zero-transfer delta).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import grb, semiring as S
+from repro.core.grb import Descriptor
+
+
+def label_propagation(A, max_iter: int = 50, rel=None,
+                      batch: int = 256) -> jnp.ndarray:
+    """Community labels (n,) int32; initial label = vertex id, so a
+    surviving label is always the id of some member of its community.
+    Deterministic: synchronous updates, min-label tie-break."""
+    A = grb.matrix(A, rel)
+    n = A.shape[0]
+    labels = np.arange(n, dtype=np.int64)
+    if A.nvals == 0 or n == 0:
+        # zero-edge adjacency: nobody receives a vote — every vertex is
+        # its own community; skip tracing any vote sweep
+        return jnp.asarray(labels.astype(np.int32))
+    for _ in range(max_iter):
+        uniq, inv = np.unique(labels, return_inverse=True)
+        best_cnt = np.zeros(n, dtype=np.float64)
+        best_lab = labels.copy()            # no votes at all -> keep own
+        for c0 in range(0, len(uniq), batch):
+            width = min(batch, len(uniq) - c0)
+            onehot = np.zeros((n, width), dtype=np.float32)
+            sel = (inv >= c0) & (inv < c0 + width)
+            onehot[np.nonzero(sel)[0], inv[sel] - c0] = 1.0
+            L = jnp.asarray(onehot)
+            V = grb.mxm(A, L, S.PLUS_PAIR, Descriptor(transpose_a=True))
+            V = V + grb.mxm(A, L, S.PLUS_PAIR)
+            Vn = np.asarray(V) + onehot     # + self-vote
+            cmax = Vn.max(axis=1)
+            # uniq is sorted, so the first argmax column IS the smallest
+            # label with the chunk's top count
+            lab = uniq[c0 + np.argmax(Vn >= cmax[:, None], axis=1)]
+            better = (cmax > best_cnt) | ((cmax == best_cnt) & (cmax > 0)
+                                          & (lab < best_lab))
+            best_lab = np.where(better, lab, best_lab)
+            best_cnt = np.maximum(best_cnt, cmax)
+        if np.array_equal(best_lab, labels):
+            break
+        labels = best_lab
+    return jnp.asarray(labels.astype(np.int32))

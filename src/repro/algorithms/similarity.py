@@ -1,0 +1,132 @@
+"""Neighborhood similarity (Jaccard / cosine / overlap) on the semiring.
+
+Vertex similarity compares out-neighborhoods as sets; every variant is a
+normalization of the same common-neighbor count, which is one plus_pair
+product — the k-truss composition (`grb.mxm(..., S.PLUS_PAIR, ...)`):
+
+  jaccard(u, v)  = |N(u) & N(v)| / |N(u) | N(v)|
+  cosine(u, v)   = |N(u) & N(v)| / sqrt(deg(u) * deg(v))
+  overlap(u, v)  = |N(u) & N(v)| / min(deg(u), deg(v))
+
+Two entry points:
+
+  similarity(A, sources, kind)   scores of every vertex against F source
+      vertices, dense (n, F). Three mxm calls — the source neighborhoods
+      as an or_and frontier, the plus_pair intersection counts, and a
+      plus_pair degree reduce — then elementwise normalization. Runs on
+      every storage kind including a sharded handle (the mxm's lower to
+      mesh collectives; counts are small integers, so the sharded result
+      is bit-identical to local). This is what `CALL algo.jaccard(...)`
+      batches over.
+
+  similarity_matrix(A, kind)     sparse all-pairs scores on a candidate
+      pattern (default: the adjacency — similarity of connected pairs).
+      Masked plus_pair SpGEMM for the counts, then a sparse `ewise_mult`
+      against a reciprocal-denominator matrix assembled on the same stored
+      pattern — the counts never densify (BSR route). Symmetric adjacency
+      only (it reuses A for A^T, like k-truss).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import grb, semiring as S
+from repro.core.bsr import BSR, as_bsr
+from repro.core.grb import Descriptor, GBMatrix
+from repro.algorithms.traverse import seeds_to_frontier
+
+KINDS = ("jaccard", "cosine", "overlap")
+
+
+def _normalize(kind: str, M, deg_rows, deg_cols):
+    """Scores from intersection counts M and the two degree vectors;
+    entries with no common neighbor are 0 under every kind."""
+    if kind == "jaccard":
+        denom = deg_rows + deg_cols - M
+    elif kind == "cosine":
+        denom = jnp.sqrt(deg_rows * deg_cols)
+    elif kind == "overlap":
+        denom = jnp.minimum(deg_rows, deg_cols)
+    else:
+        raise ValueError(f"unknown similarity kind {kind!r} "
+                         f"(one of {', '.join(KINDS)})")
+    # denom >= 1 wherever M > 0 (counts); the where() keeps the M == 0
+    # branch away from any 0/0
+    return jnp.where(M > 0, M / jnp.where(M > 0, denom, 1.0), 0.0)
+
+
+def degrees(A, rel=None) -> jnp.ndarray:
+    """(n,) stored-entry out-degrees via one plus_pair reduce-by-mxm."""
+    A = grb.matrix(A, rel)
+    n = A.shape[0]
+    ones = jnp.ones((n, 1), dtype=jnp.float32)
+    return grb.mxm(A, ones, S.PLUS_PAIR)[:, 0]
+
+
+def similarity(A, sources, kind: str = "jaccard", rel=None) -> jnp.ndarray:
+    """(n, F) scores: column j compares every vertex's out-neighborhood
+    against that of ``sources[j]``. Entry [v, j] is 0 when the two share
+    no neighbor; a vertex paired with itself scores 1 (if it has edges)."""
+    if kind not in KINDS:
+        raise ValueError(f"unknown similarity kind {kind!r} "
+                         f"(one of {', '.join(KINDS)})")
+    A = grb.matrix(A, rel)
+    n = A.shape[0]
+    sources = np.asarray(sources, dtype=np.int64)
+    f = len(sources)
+    if f == 0 or A.nvals == 0:
+        return jnp.zeros((n, f), dtype=jnp.float32)
+    E = seeds_to_frontier(sources, n)
+    # NB[w, j] = 1 iff (sources[j], w) is a stored edge: the source
+    # neighborhoods as indicator columns (A^T against one-hots, or_and)
+    NB = grb.mxm(A, E, S.OR_AND, Descriptor(transpose_a=True))
+    # M[v, j] = |N(v) & N(sources[j])|: plus_pair counts stored-entry hits
+    M = grb.mxm(A, NB, S.PLUS_PAIR)
+    deg = degrees(A)
+    return _normalize(kind, M, deg[:, None],
+                      deg[jnp.asarray(sources)][None, :])
+
+
+def similarity_matrix(A, kind: str = "jaccard", rel=None,
+                      mask=None) -> GBMatrix:
+    """Sparse all-pairs similarity on the ``mask`` pattern (default: A's
+    own edges). C<mask> = A (x)_plus_pair A is the masked SpGEMM k-truss
+    uses; the normalization is a sparse ewise_mult against the reciprocal
+    denominators assembled once on C's stored pattern (host-side COO, like
+    k-truss's self-loop filter — outside any loop). Needs a symmetric
+    adjacency; ELL/BitELL handles are reblocked sparse-to-sparse to BSR."""
+    if kind not in KINDS:
+        raise ValueError(f"unknown similarity kind {kind!r} "
+                         f"(one of {', '.join(KINDS)})")
+    A = grb.matrix(A, rel)
+    n, m = A.shape
+    if n != m:
+        raise ValueError(f"similarity_matrix needs a square adjacency, "
+                         f"got {A.shape}")
+    impl = "auto" if A.auto else A.impl
+    if A.fmt in ("bitadj", "bitshard"):
+        A = GBMatrix(A.store.to_ell(), impl=impl)
+    if A.fmt == "ell":
+        A = GBMatrix(as_bsr(A.store, 128), impl=impl)
+    deg = np.asarray(degrees(A))
+    C = grb.mxm(A, A, S.PLUS_PAIR, Descriptor(mask=mask if mask is not None
+                                              else A))
+    if A.fmt == "dense":
+        D = jnp.asarray(C)
+        return GBMatrix(_normalize(kind, D, jnp.asarray(deg)[:, None],
+                                   jnp.asarray(deg)[None, :]))
+    if not isinstance(C, GBMatrix):
+        C = GBMatrix(C)
+    r, c, v = C.store.to_coo()
+    if kind == "jaccard":
+        denom = deg[r] + deg[c] - v
+    elif kind == "cosine":
+        denom = np.sqrt(deg[r] * deg[c])
+    else:
+        denom = np.minimum(deg[r], deg[c])
+    recip = GBMatrix(BSR.from_coo(r, c,
+                                  (1.0 / np.maximum(denom, 1.0)).astype(
+                                      np.float32),
+                                  C.shape, block=C.store.block), impl=impl)
+    return grb.ewise_mult(C, recip, lambda a, b: a * b)

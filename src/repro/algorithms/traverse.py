@@ -76,6 +76,11 @@ def bfs_levels(A, seeds, max_iter: int = 0, rel=None):
     n = A.shape[0]
     iters = max_iter or n
     frontier = seeds_to_frontier(seeds, n)
+    if A.nvals == 0:
+        # zero-edge adjacency: the frontier empties after hop 0 — the
+        # levels are fully determined by the seeds, so don't trace a hop
+        # loop whose condition is false on entry
+        return jnp.where(frontier > 0, 0.0, jnp.inf).astype(jnp.float32)
     if grb.words_route_ok(A, frontier.shape[1]):
         return _bfs_levels_words(A, frontier, iters)
     levels = jnp.where(frontier > 0, 0.0, jnp.inf).astype(jnp.float32)
@@ -126,6 +131,9 @@ def khop_counts(A, seeds, k: int, rel=None) -> jnp.ndarray:
     n = A.shape[0]
     frontier = seeds_to_frontier(seeds, n)
     f = frontier.shape[1]
+    if A.nvals == 0:
+        # zero-edge adjacency: nothing is within 1..k of anything
+        return jnp.zeros((f,), dtype=jnp.int32)
     if grb.words_route_ok(A, f):
         # reached-within-k minus the seed itself: levels never stamp a seed
         # above 0, so the seed column contributes exactly its own bit

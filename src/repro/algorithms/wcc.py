@@ -70,6 +70,12 @@ def wcc(A, max_iter: int = 0, rel=None, batch: int = 128) -> jnp.ndarray:
     `max_iter` bounds hops per closure (0 = diameter-safe n)."""
     A = grb.matrix(A, rel)
     n = A.shape[0]
+    if A.nvals == 0:
+        # zero-edge adjacency: every vertex is an isolated singleton. The
+        # pre-labeling below would reach the same labels, but only after
+        # tracing the or-reduces — short-circuit instead of compiling
+        # closure machinery that can never run a hop
+        return jnp.asarray(np.arange(n, dtype=np.int32))
     labels = np.full(n, -1, dtype=np.int64)
     # isolated vertices (no stored entry in their row or column) are their
     # own singleton components — label them up front so the closure loop

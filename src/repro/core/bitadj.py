@@ -207,7 +207,11 @@ class BitELL:
         if self._ell is None:
             xfer.record("bitadj_materialize")
             r, c, v = self.to_coo()
-            self._ell = ELL.from_coo(r, c, v, self.shape)
+            # the first caller may sit inside a lax loop trace (e.g. a
+            # weighted-semiring hop in a while_loop body); eval eagerly so
+            # the cache holds concrete arrays, not leaked tracers
+            with jax.ensure_compile_time_eval():
+                self._ell = ELL.from_coo(r, c, v, self.shape)
         return self._ell
 
     def to_dense(self) -> Array:

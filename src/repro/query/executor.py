@@ -47,7 +47,7 @@ from repro.core.grb import Descriptor
 from repro.graph.graph import Graph
 from repro.query import qast as A
 from repro.query.parser import parse
-from repro.query.planner import Plan, plan
+from repro.query.planner import PROC_COLUMNS, CallPlan, Plan, plan
 
 
 @dataclasses.dataclass
@@ -131,6 +131,167 @@ def eval_pred(graph: Graph, node, n: int) -> np.ndarray:
         m[node.seeds] = True
         return m
     raise TypeError(node)
+
+
+# -- CALL procedures ----------------------------------------------------------
+# The `CALL algo.*` surface: each procedure is a (device, rows) pair that
+# plugs into the SAME scheduler hooks MATCH plans use — `device` is the
+# traverse analog (seeds -> an unmaterialized (n, F) device array whose
+# columns belong to seed columns), `rows` is the project analog (the
+# member's column slice -> row tuples in canonical column order). Seeded
+# procedures batch: the server concatenates signature-equal members'
+# source lists into ONE device call and slices each member's columns back
+# out in finish — so `CALL algo.closeness(sources: [3])` and
+# `(sources: [5])` cost one BFS sweep, exactly like two seeded MATCHes.
+# Source-less calls are global (label-scan analog: every vertex) and ride
+# alone. Unseeded procedures (pagerank, wcc, ...) return one shared
+# column; numpy slice-clamping makes the server's per-member column
+# slicing a no-op on them.
+
+@dataclasses.dataclass(frozen=True)
+class Procedure:
+    columns: tuple                      # canonical yield columns, in order
+    seeded: bool                        # accepts a `sources:` list
+    defaults: dict                      # allowed args + default values
+    device: object                      # (ctx, args, seeds) -> jnp (n, F)
+    rows: object                        # (ctx, args, seeds, Bn) -> [tuple]
+
+
+def _proc_M(ctx: "ExecutionContext", args: dict) -> grb.GBMatrix:
+    return ctx.matrix(args["rel"])
+
+
+def _pagerank_device(ctx, a, seeds):
+    from repro.algorithms import pagerank
+    return pagerank(_proc_M(ctx, a), alpha=float(a["alpha"]),
+                    iters=int(a["iters"]))[:, None]
+
+
+def _betweenness_device(ctx, a, seeds):
+    from repro.algorithms import brandes_parts
+    return brandes_parts(_proc_M(ctx, a), seeds)
+
+
+def _levels_device(ctx, a, seeds):
+    from repro.algorithms import bfs_levels
+    return bfs_levels(_proc_M(ctx, a), seeds,
+                      max_iter=int(a.get("max_hops", 0)))
+
+
+def _similarity_device(ctx, a, seeds):
+    from repro.algorithms import similarity
+    return similarity(_proc_M(ctx, a), seeds, kind=a["kind"])
+
+
+def _wcc_device(ctx, a, seeds):
+    from repro.algorithms import wcc
+    return wcc(_proc_M(ctx, a))[:, None]
+
+
+def _labelprop_device(ctx, a, seeds):
+    from repro.algorithms import label_propagation
+    return label_propagation(_proc_M(ctx, a),
+                             max_iter=int(a["max_iter"]))[:, None]
+
+
+def _triangles_device(ctx, a, seeds):
+    from repro.algorithms import triangle_count
+    return triangle_count(_proc_M(ctx, a)).reshape(1, 1)
+
+
+def _node_float_rows(ctx, a, seeds, Bn):
+    col = Bn[:, 0]
+    return [(i, float(col[i])) for i in range(Bn.shape[0])]
+
+
+def _node_int_rows(ctx, a, seeds, Bn):
+    col = Bn[:, 0]
+    return [(i, int(col[i])) for i in range(Bn.shape[0])]
+
+
+def _betweenness_rows(ctx, a, seeds, Bn):
+    # a member's score is the dependency sum over ITS source columns —
+    # batched members each sum their own slice, so batched == solo
+    bc = Bn.sum(axis=1)
+    return [(i, float(bc[i])) for i in range(Bn.shape[0])]
+
+
+def _closeness_rows(ctx, a, seeds, Bn):
+    from repro.algorithms import closeness_from_levels
+    scores = np.asarray(closeness_from_levels(jnp.asarray(Bn)))
+    return [(int(s), float(scores[j])) for j, s in enumerate(seeds)]
+
+
+def _similarity_rows(ctx, a, seeds, Bn):
+    rows = [(int(seeds[j]), int(i), float(Bn[i, j]))
+            for i, j in zip(*np.nonzero(Bn > 0))]
+    rows.sort()
+    return rows
+
+
+def _bfs_rows(ctx, a, seeds, Bn):
+    rows = [(int(seeds[j]), int(i), int(Bn[i, j]))
+            for i, j in zip(*np.nonzero(np.isfinite(Bn)))]
+    rows.sort()
+    return rows
+
+
+def _triangles_rows(ctx, a, seeds, Bn):
+    return [(int(Bn[0, 0]),)]
+
+
+PROCEDURES = {
+    "algo.pagerank": Procedure(
+        PROC_COLUMNS["algo.pagerank"], False,
+        {"rel": None, "alpha": 0.85, "iters": 50},
+        _pagerank_device, _node_float_rows),
+    "algo.betweenness": Procedure(
+        PROC_COLUMNS["algo.betweenness"], True,
+        {"rel": None}, _betweenness_device, _betweenness_rows),
+    "algo.closeness": Procedure(
+        PROC_COLUMNS["algo.closeness"], True,
+        {"rel": None}, _levels_device, _closeness_rows),
+    "algo.similarity": Procedure(
+        PROC_COLUMNS["algo.similarity"], True,
+        {"rel": None, "kind": "jaccard"},
+        _similarity_device, _similarity_rows),
+    "algo.wcc": Procedure(
+        PROC_COLUMNS["algo.wcc"], False,
+        {"rel": None}, _wcc_device, _node_int_rows),
+    "algo.labelprop": Procedure(
+        PROC_COLUMNS["algo.labelprop"], False,
+        {"rel": None, "max_iter": 50}, _labelprop_device, _node_int_rows),
+    "algo.triangles": Procedure(
+        PROC_COLUMNS["algo.triangles"], False,
+        {"rel": None}, _triangles_device, _triangles_rows),
+    "algo.bfs": Procedure(
+        PROC_COLUMNS["algo.bfs"], True,
+        {"rel": None, "max_hops": 0}, _levels_device, _bfs_rows),
+}
+assert set(PROCEDURES) == set(PROC_COLUMNS) and all(
+    p.columns == PROC_COLUMNS[k] for k, p in PROCEDURES.items()), \
+    "planner.PROC_COLUMNS out of sync with executor.PROCEDURES"
+
+
+def _procedure(name: str) -> Procedure:
+    proc = PROCEDURES.get(name)
+    if proc is None:
+        # raised at EXECUTION, not planning: the server turns this into a
+        # per-query error Result instead of failing the submitter
+        raise ValueError(f"no procedure {name!r} "
+                         f"(have: {sorted(PROCEDURES)})")
+    return proc
+
+
+def _call_args(name: str, proc: Procedure, args: dict) -> dict:
+    unknown = sorted(set(args) - set(proc.defaults))
+    if unknown:
+        takes = sorted(proc.defaults) + (["sources"] if proc.seeded else [])
+        raise ValueError(f"{name}: unknown argument(s) {unknown} "
+                         f"(takes: {takes})")
+    out = dict(proc.defaults)
+    out.update(args)
+    return out
 
 
 # -- public execution surface -------------------------------------------------
@@ -296,7 +457,12 @@ class ExecutionContext:
         compatible members' seed columns into one call, padding lanes with
         keep=False columns). The frontier comes back UNmaterialized — under
         jax async dispatch the caller keeps scheduling host-side while the
-        device sweeps."""
+        device sweeps. A CallPlan dispatches to its procedure's device
+        half instead (same contract: columns belong to seed columns, so
+        the server's per-member slicing works identically; padding lanes
+        compute and get sliced away)."""
+        if isinstance(p, CallPlan):
+            return self._call_device(p, seeds)
         sr = S.get(p.semiring)
         B = self.seed_frontier(seeds, keep=keep)
         for e in p.expands:
@@ -306,6 +472,8 @@ class ExecutionContext:
 
     def project(self, p: Plan, seeds: np.ndarray, B: jnp.ndarray) -> Result:
         """Materialize RETURN rows from the final frontier matrix."""
+        if isinstance(p, CallPlan):
+            return self._call_project(p, seeds, np.asarray(B))
         Bn = np.asarray(B)
         cols = [_colname(r) for r in p.returns]
         src_var = p.src_var
@@ -358,11 +526,42 @@ class ExecutionContext:
             rows = rows[: p.limit]
         return Result(cols, rows)
 
+    # -- CALL dispatch -------------------------------------------------------
+    def _call_device(self, p: CallPlan, seeds) -> jnp.ndarray:
+        """Device half of a procedure call (traverse analog). Seeded
+        procedures compute one column per seed; unseeded ones return a
+        single shared column and reject an explicit `sources:` list."""
+        proc = _procedure(p.proc)
+        a = _call_args(p.proc, proc, p.args)
+        if p.seeds is not None and not proc.seeded:
+            raise ValueError(f"{p.proc} takes no sources "
+                             f"(it is a whole-graph procedure)")
+        return proc.device(self, a, np.asarray(seeds, dtype=np.int64))
+
+    def _call_project(self, p: CallPlan, seeds, Bn: np.ndarray) -> Result:
+        """Host half (project analog): the member's column slice -> YIELD
+        rows. YIELD selects/renames/reorders the procedure's canonical
+        columns; an unknown yield name raises (per-member, isolated)."""
+        proc = _procedure(p.proc)
+        a = _call_args(p.proc, proc, p.args)
+        rows = proc.rows(self, a, np.asarray(seeds, dtype=np.int64), Bn)
+        cols, idx = [], []
+        for r in p.returns:
+            if r.var not in proc.columns:
+                raise ValueError(f"{p.proc} yields {list(proc.columns)}, "
+                                 f"not {r.var!r}")
+            cols.append(r.alias or r.var)
+            idx.append(proc.columns.index(r.var))
+        rows = [tuple(row[i] for i in idx) for row in rows]
+        if p.limit is not None:
+            rows = rows[: p.limit]
+        return Result(cols, rows)
+
     # -- solo driver ---------------------------------------------------------
     def run(self, query) -> Result:
         """Execute a read query: text, MatchQuery AST, or an already-built
         Plan (the server's cached-plan path — no re-parse)."""
-        if isinstance(query, Plan):
+        if isinstance(query, (Plan, CallPlan)):
             p = query
         else:
             q = parse(query) if isinstance(query, str) else query

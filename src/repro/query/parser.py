@@ -19,7 +19,7 @@ _TOKEN = re.compile(r"""
 """, re.VERBOSE)
 
 KEYWORDS = {"MATCH", "WHERE", "RETURN", "LIMIT", "AND", "OR", "NOT", "COUNT",
-            "DISTINCT", "ID", "IN", "CREATE", "DELETE", "AS"}
+            "DISTINCT", "ID", "IN", "CREATE", "DELETE", "AS", "CALL", "YIELD"}
 
 
 def tokenize(s: str) -> List[tuple]:
@@ -85,7 +85,54 @@ class Parser:
             return self.parse_create()
         if self.peek() == "DELETE":
             return self.parse_delete()
+        if self.peek() == "CALL":
+            return self.parse_call()
         return self.parse_match()
+
+    # -- CALL ----------------------------------------------------------------
+    def parse_call(self):
+        """CALL algo.name(arg: v, ...) [YIELD col [AS a], ...] [LIMIT k]"""
+        self.expect("CALL")
+        parts = [self.expect_name()]
+        while self.accept("."):
+            parts.append(self.expect_name())
+        args = {}
+        self.expect("(")
+        while self.peek() != ")":
+            name = self.expect_name()
+            self.expect(":")
+            args[name] = self.parse_call_value()
+            self.accept(",")
+        self.expect(")")
+        yields = []
+        if self.accept("YIELD"):
+            yields.append(self.parse_yield_item())
+            while self.accept(","):
+                yields.append(self.parse_yield_item())
+        limit = None
+        if self.accept("LIMIT"):
+            limit = int(self.expect("NUM")[1])
+        self.expect("EOF")
+        return A.CallQuery(".".join(parts), args, yields, limit)
+
+    def parse_call_value(self):
+        """number | [number, ...] -> tuple | bare word -> string."""
+        if self.peek() == "NUM":
+            return _num(self.next()[1])
+        if self.accept("["):
+            vals = []
+            while self.peek() == "NUM":
+                vals.append(_num(self.next()[1]))
+                self.accept(",")
+            self.expect("]")
+            return tuple(vals)
+        return self.expect_name()
+
+    def parse_yield_item(self):
+        item = A.ReturnItem("var", self.expect_name())
+        if self.accept("AS"):
+            item.alias = self.expect_name()
+        return item
 
     # -- CREATE --------------------------------------------------------------
     def parse_create(self):
@@ -301,6 +348,11 @@ class Parser:
         if self.accept("AS"):
             item.alias = self.expect("NAME")[1]
         return item
+
+
+def _num(text: str):
+    """CALL argument numbers keep their intness: `iters: 50` is an int."""
+    return float(text) if "." in text else int(text)
 
 
 def parse(text: str):

@@ -13,6 +13,7 @@ shape never re-parses. Both are what `engine.server` schedules with.
 from __future__ import annotations
 
 import dataclasses
+import re
 from collections import OrderedDict
 from typing import List, Optional, Tuple
 
@@ -60,6 +61,74 @@ class Plan:
         return "\n".join(lines)
 
 
+# Column names each built-in procedure yields, in canonical order — the ONE
+# place the surface is declared. `plan_call` fills an omitted YIELD clause
+# from here; `query.executor.PROCEDURES` (the implementations) asserts it
+# stays in sync at import.
+PROC_COLUMNS = {
+    "algo.pagerank":    ("node", "score"),
+    "algo.betweenness": ("node", "score"),
+    "algo.closeness":   ("node", "score"),
+    "algo.similarity":  ("node1", "node2", "score"),
+    "algo.wcc":         ("node", "component"),
+    "algo.labelprop":   ("node", "community"),
+    "algo.triangles":   ("triangles",),
+    "algo.bfs":         ("source", "node", "level"),
+}
+
+
+@dataclasses.dataclass
+class CallPlan:
+    """Execution plan for `CALL algo.*` — the procedure analog of `Plan`.
+
+    Carries the same scheduler surface a MATCH plan does (`seeds`,
+    `semiring`, `src_var`/`src_label`/`var_preds`), so `engine.server`
+    batches CALL sweeps through the identical admission/launch/finish
+    machinery: seeded calls (a `sources:` list) coalesce with every
+    signature-equal member into one device sweep whose columns are the
+    union of their sources; source-less calls ride alone like label
+    scans. `semiring` is pinned to or_and so `executor.resolve_seeds`
+    binds each source vertex once (sorted, deduped)."""
+    proc: str
+    args: dict                          # named args minus `sources`
+    seeds: Optional[List[int]]          # the popped `sources` list
+    returns: List[A.ReturnItem]         # YIELD items (kind="var")
+    limit: Optional[int] = None
+    # server-compatibility surface (a CALL has no pattern to scan/filter)
+    src_var: Optional[str] = None
+    src_label: Optional[str] = None
+    var_preds: dict = dataclasses.field(default_factory=dict)
+    expands: List[Expand] = dataclasses.field(default_factory=list)
+    semiring: str = "or_and"
+
+    def explain(self) -> str:
+        src = (f"sources={self.seeds}" if self.seeds is not None
+               else "sources=*")
+        cols = [r.alias or r.var for r in self.returns]
+        return (f"ProcedureCall({self.proc}, {src}, args={self.args})\n"
+                f"Project({cols} limit={self.limit})")
+
+
+def plan_call(q: A.CallQuery) -> CallPlan:
+    """CallQuery AST -> CallPlan. `sources:` moves out of the arg dict into
+    the plan's seed slot (the batched-over dimension, excluded from the
+    signature); an omitted YIELD expands to the procedure's full column
+    list. Unknown procedure names plan fine and fail at *execution* — the
+    server isolates them as per-query error Results instead of poisoning
+    the submitter."""
+    args = dict(q.args)
+    seeds = args.pop("sources", None)
+    if seeds is not None:
+        if not isinstance(seeds, (list, tuple)):
+            seeds = [seeds]             # `sources: 3` — a single id
+        seeds = [int(s) for s in seeds]
+    returns = list(q.yields)
+    if not returns:
+        returns = [A.ReturnItem("var", c)
+                   for c in PROC_COLUMNS.get(q.proc, ())]
+    return CallPlan(q.proc, args, seeds, returns, q.limit)
+
+
 def _pred_vars(node) -> set:
     if isinstance(node, A.Comparison):
         out = set()
@@ -77,7 +146,9 @@ def _pred_vars(node) -> set:
     raise TypeError(node)
 
 
-def plan(q: A.MatchQuery) -> Plan:
+def plan(q) -> Plan:
+    if isinstance(q, A.CallQuery):
+        return plan_call(q)
     if not q.nodes:
         raise ValueError("empty pattern")
     src = q.nodes[0]
@@ -134,7 +205,15 @@ def signature(p: Plan) -> tuple:
     by side in the same matrix sweep). The key covers the full predicate
     content — a predicate-count-only key would let queries with different
     WHERE clauses share one (wrong) node mask — and excludes exactly the
-    seed ids, the batched-over dimension."""
+    seed ids, the batched-over dimension. CALL plans key on the procedure
+    plus full argument content (seeds excluded, exactly like MATCH): two
+    `algo.closeness(sources: ...)` calls with different source lists share
+    one sweep; a different `kind:`/`iters:`/YIELD/LIMIT does not."""
+    if isinstance(p, CallPlan):
+        return ("call", p.proc, tuple(sorted(p.args.items())),
+                tuple((r.kind, r.var, r.prop, r.distinct, r.alias)
+                      for r in p.returns),
+                p.limit)
     return (p.src_var, p.src_label,
             tuple((e.rel, e.direction, e.min_hops, e.max_hops,
                    e.dst_var, e.dst_label) for e in p.expands),
@@ -163,7 +242,13 @@ class PlanCache:
 
     @staticmethod
     def key(text: str) -> str:
-        return " ".join(text.split())
+        """Whitespace-normal form: runs of whitespace collapse to one
+        space, and spaces adjacent to punctuation drop entirely — so
+        `CALL algo.pagerank( iters: 20 )` and `CALL algo.pagerank(iters:20)`
+        are one cache entry (argument lists vary freely in formatting).
+        Word-adjacent tokens keep their separating space, so distinct
+        token streams can never normalize together."""
+        return re.sub(r"\s*([^\w\s])\s*", r"\1", " ".join(text.split()))
 
     def __len__(self) -> int:
         return len(self._entries)

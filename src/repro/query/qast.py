@@ -11,6 +11,10 @@ Supported:
   DELETE (i)-[:R]->(j) | DELETE (i)   (edge / whole-node forms; node
          deletion tombstones: incident edges, labels and props go, the id
          row stays allocated)
+  CALL algo.name(arg: v, sources: [i, j], kind: word) YIELD col AS alias
+       (+ LIMIT) — procedure invocation; args are named, values are
+       numbers, [number lists] or bare words. YIELD omitted = every
+       column the procedure defines (query.planner.PROC_COLUMNS).
 
 Semantics note (DESIGN.md): variable-length expansion uses BFS distinct-vertex
 semantics (the TigerGraph k-hop benchmark definition), not Cypher trail
@@ -74,6 +78,14 @@ class MatchQuery:
     edges: List[EdgePat]
     where: List[Union[BoolExpr, Comparison, InSeeds]]   # conjunction
     returns: List[ReturnItem]
+    limit: Optional[int] = None
+
+
+@dataclasses.dataclass
+class CallQuery:
+    proc: str                # dotted procedure name, e.g. "algo.pagerank"
+    args: dict               # name -> number | tuple of numbers | str
+    yields: List[ReturnItem]   # [] = all of the procedure's columns
     limit: Optional[int] = None
 
 

@@ -1,0 +1,554 @@
+"""Cross-format oracle conformance grid for the algorithm breadth suite.
+
+Every algorithm family added by the `CALL algo.*` tentpole — betweenness +
+closeness centrality (batched Brandes), jaccard/cosine/overlap similarity,
+and label-propagation community detection — checked against pure-NumPy
+oracles on a named-graph zoo (K4, C5, Petersen, K3,3) plus RMAT s6-s8,
+across every storage format (dense / BSR / ELL / BitELL). Boolean-derived
+outputs are exact; float scores get atol 1e-5 (betweenness 1e-4: its
+delta-ratio sums are order-sensitive).
+
+The sharded cells re-run the same workloads on both session meshes
+(2x2x2 and 4x2x1): integer-count-derived outputs (closeness, similarity,
+label propagation) must be BIT-IDENTICAL to local — plus_pair counts and
+or_and levels are exact under any shard reduction order — while
+betweenness (float dependency ratios, order-sensitive) gets allclose.
+Every sharded hot loop is pinned to a zero `grb.host_transfers()` delta
+and the BSR cells to a zero `bsr.densify_calls()` delta (under
+`fresh_trace`, so a stale jit cache can't make the pin vacuous).
+
+Also here: the zero-edge goldens (regression for the isolated-vertex
+short-circuits in wcc/bfs/khop and each new algorithm), the property
+sweep (hypothesis when installed, a seeded random sweep otherwise), and
+the `CALL algo.*` end-to-end conformance through `engine.Database`.
+"""
+from collections import deque
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import algorithms as alg
+from repro.core import bsr as _bsr, grb
+from repro.core.bitadj import BitELL
+from repro.core.bsr import BSR
+from repro.core.ell import ELL
+from repro.engine.database import Database
+from repro.graph.datagen import rmat_edges
+from repro.graph.graph import GraphBuilder
+
+pytestmark = pytest.mark.algos
+
+try:                                    # property sweep: hypothesis when
+    from hypothesis import given, settings, strategies as st  # installed,
+
+    def _prop(f):
+        return settings(max_examples=15, deadline=None)(
+            given(seed=st.integers(0, 10 ** 6))(f))
+except ImportError:                     # else a seeded random sweep
+    def _prop(f):
+        def wrapper():
+            for seed in range(10):
+                f(seed=seed)
+        wrapper.__name__ = f.__name__
+        wrapper.__doc__ = f.__doc__
+        return wrapper
+
+
+# -- NumPy oracles ------------------------------------------------------------
+def _adj(D):
+    return [np.nonzero(D[v])[0] for v in range(D.shape[0])]
+
+
+def _bfs_np(adj, s, n):
+    lvl = np.full(n, np.inf)
+    lvl[s] = 0
+    q = deque([s])
+    order = [s]
+    while q:
+        u = q.popleft()
+        for v in adj[u]:
+            if not np.isfinite(lvl[v]):
+                lvl[v] = lvl[u] + 1
+                q.append(v)
+                order.append(v)
+    return lvl, order
+
+
+def brandes_np(D, sources):
+    """Reference Brandes: per-source BFS path counts + reversed dependency
+    accumulation (directed, unit edges, endpoints excluded)."""
+    n = D.shape[0]
+    adj = _adj(D)
+    bc = np.zeros(n)
+    for s in sources:
+        sigma = np.zeros(n)
+        sigma[s] = 1.0
+        dist = np.full(n, -1)
+        dist[s] = 0
+        order = []
+        q = deque([s])
+        while q:
+            v = q.popleft()
+            order.append(v)
+            for w in adj[v]:
+                if dist[w] < 0:
+                    dist[w] = dist[v] + 1
+                    q.append(w)
+                if dist[w] == dist[v] + 1:
+                    sigma[w] += sigma[v]
+        delta = np.zeros(n)
+        for v in reversed(order):
+            for w in adj[v]:
+                if dist[w] == dist[v] + 1:
+                    delta[v] += sigma[v] / sigma[w] * (1.0 + delta[w])
+            if v != s:
+                bc[v] += delta[v]
+    return bc
+
+
+def closeness_np(D, sources):
+    """Wasserman-Faust closeness over the reachable set."""
+    n = D.shape[0]
+    adj = _adj(D)
+    out = []
+    for s in sources:
+        lvl, _ = _bfs_np(adj, s, n)
+        fin = lvl[np.isfinite(lvl)]
+        r, tot = len(fin), fin.sum()
+        out.append((r - 1) ** 2 / ((n - 1) * tot) if tot > 0 else 0.0)
+    return np.asarray(out, dtype=np.float64)
+
+
+def sim_np(D, sources, kind):
+    """Pairwise out-neighborhood set similarity (n, len(sources))."""
+    n = D.shape[0]
+    nbrs = [set(np.nonzero(D[v])[0]) for v in range(n)]
+    out = np.zeros((n, len(sources)))
+    for j, s in enumerate(sources):
+        for v in range(n):
+            m = len(nbrs[v] & nbrs[s])
+            if m == 0:
+                continue
+            if kind == "jaccard":
+                d = len(nbrs[v] | nbrs[s])
+            elif kind == "cosine":
+                d = np.sqrt(len(nbrs[v]) * len(nbrs[s]))
+            else:
+                d = min(len(nbrs[v]), len(nbrs[s]))
+            out[v, j] = m / d
+    return out
+
+
+def lpa_np(D, max_iter=50):
+    """Synchronous CDLP: both-direction + self vote, min tie-break."""
+    n = D.shape[0]
+    labels = np.arange(n)
+    for _ in range(max_iter):
+        new = labels.copy()
+        for v in range(n):
+            votes = {labels[v]: 1}
+            for w in np.nonzero(D[v])[0]:
+                votes[labels[w]] = votes.get(labels[w], 0) + 1
+            for w in np.nonzero(D[:, v])[0]:
+                votes[labels[w]] = votes.get(labels[w], 0) + 1
+            top = max(votes.values())
+            new[v] = min(l for l, c in votes.items() if c == top)
+        if np.array_equal(new, labels):
+            break
+        labels = new
+    return labels.astype(np.int32)
+
+
+# -- the graph zoo ------------------------------------------------------------
+def _undirected(pairs):
+    src = np.asarray([a for a, b in pairs] + [b for a, b in pairs])
+    dst = np.asarray([b for a, b in pairs] + [a for a, b in pairs])
+    return src, dst
+
+
+def _zoo_edges(name):
+    if name == "K4":
+        return 4, *_undirected([(i, j) for i in range(4)
+                                for j in range(i + 1, 4)])
+    if name == "C5":
+        return 5, *_undirected([(i, (i + 1) % 5) for i in range(5)])
+    if name == "petersen":
+        pairs = ([(i, (i + 1) % 5) for i in range(5)]
+                 + [(i, i + 5) for i in range(5)]
+                 + [(5 + i, 5 + (i + 2) % 5) for i in range(5)])
+        return 10, *_undirected(pairs)
+    if name == "K33":
+        return 6, *_undirected([(i, 3 + j) for i in range(3)
+                                for j in range(3)])
+    scale = int(name[len("rmat"):])
+    src, dst, n = rmat_edges(scale, edge_factor=4, seed=scale)
+    keep = src != dst
+    return n, src[keep], dst[keep]
+
+
+GRAPHS = ("K4", "C5", "petersen", "K33", "rmat6", "rmat7", "rmat8")
+FORMATS = ("dense", "bsr", "ell", "bitadj")
+_cells = {}
+
+
+def _cell(name, fmt):
+    """(dense oracle D, GBMatrix handle) for one grid cell, cached."""
+    key = (name, fmt)
+    if key not in _cells:
+        n, src, dst = _zoo_edges(name)
+        if fmt == "dense":
+            D = np.zeros((n, n), dtype=np.float32)
+            D[src, dst] = 1.0
+            h = grb.GBMatrix(jnp.asarray(D))
+        else:
+            g = GraphBuilder(n).add_edges("R", src, dst).build(
+                fmt=fmt, block=min(32, n))
+            h = g.relations["R"].A
+        D = np.zeros((n, n), dtype=np.float32)
+        D[src, dst] = 1.0
+        _cells[key] = (D, h)
+    return _cells[key]
+
+
+def _sources(n):
+    """All vertices on the named graphs; a fixed stride sample on RMAT
+    (the oracle is O(n*m) per source — sampled sources keep tier-1 fast
+    while still batching wider than one packed word)."""
+    return list(range(n)) if n <= 16 else list(range(0, n, max(1, n // 24)))
+
+
+# -- the conformance grid -----------------------------------------------------
+@pytest.mark.parametrize("fmt", FORMATS)
+@pytest.mark.parametrize("name", GRAPHS)
+def test_betweenness_grid(name, fmt):
+    D, h = _cell(name, fmt)
+    srcs = _sources(D.shape[0])
+    got = np.asarray(alg.betweenness(h, sources=srcs))
+    np.testing.assert_allclose(got, brandes_np(D, srcs),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("fmt", FORMATS)
+@pytest.mark.parametrize("name", GRAPHS)
+def test_closeness_grid(name, fmt):
+    D, h = _cell(name, fmt)
+    srcs = _sources(D.shape[0])
+    got = np.asarray(alg.closeness(h, sources=srcs))
+    np.testing.assert_allclose(got, closeness_np(D, srcs), atol=1e-5)
+
+
+@pytest.mark.parametrize("kind", ("jaccard", "cosine", "overlap"))
+@pytest.mark.parametrize("fmt", FORMATS)
+@pytest.mark.parametrize("name", GRAPHS)
+def test_similarity_grid(name, fmt, kind):
+    D, h = _cell(name, fmt)
+    srcs = _sources(D.shape[0])[:8]
+    got = np.asarray(alg.similarity(h, srcs, kind))
+    np.testing.assert_allclose(got, sim_np(D, srcs, kind), atol=1e-5)
+
+
+@pytest.mark.parametrize("fmt", FORMATS)
+@pytest.mark.parametrize("name", GRAPHS)
+def test_labelprop_grid(name, fmt):
+    D, h = _cell(name, fmt)
+    got = np.asarray(alg.label_propagation(h))
+    np.testing.assert_array_equal(got, lpa_np(D))
+
+
+@pytest.mark.parametrize("name", ("petersen", "rmat6"))
+def test_similarity_matrix_masked(name):
+    """similarity_matrix = masked SpGEMM + sparse ewise: scores only on
+    stored edge positions, equal to the pairwise oracle there. The A@A
+    product counts common neighbors only on a symmetric adjacency, so the
+    RMAT pattern is symmetrized first (the k-truss convention)."""
+    D, _ = _cell(name, "ell")
+    D = ((D + D.T) > 0).astype(np.float32)
+    np.fill_diagonal(D, 0)
+    h = _ell_of(D)
+    n = D.shape[0]
+    Sm = alg.similarity_matrix(h, "jaccard")
+    r, c, v = Sm.store.to_coo()
+    got = np.zeros((n, n))
+    got[r, c] = v
+    want = sim_np(D, list(range(n)), "jaccard") * D
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+def test_betweenness_bsr_never_densifies(fresh_trace):
+    """The whole centrality/similarity/labelprop stack on BSR adjacency is
+    mxm + ewise on device carries: zero to_dense() anywhere."""
+    D, h = _cell("rmat7", "bsr")
+    srcs = _sources(D.shape[0])
+    fresh_trace()
+    d0 = _bsr.densify_calls()
+    np.asarray(alg.betweenness(h, sources=srcs))
+    np.asarray(alg.closeness(h, sources=srcs))
+    np.asarray(alg.similarity(h, srcs[:8], "jaccard"))
+    np.asarray(alg.label_propagation(h))
+    assert _bsr.densify_calls() - d0 == 0
+
+
+# -- zero-edge goldens --------------------------------------------------------
+def _empty_handle(n, fmt):
+    e = np.zeros(0, dtype=np.int64)
+    w = np.zeros(0, dtype=np.float32)
+    if fmt == "dense":
+        return grb.GBMatrix(jnp.zeros((n, n), dtype=jnp.float32))
+    if fmt == "bsr":
+        return grb.GBMatrix(BSR.from_coo(e, e, w, (n, n), block=min(32, n)))
+    if fmt == "ell":
+        return grb.GBMatrix(ELL.from_coo(e, e, w, (n, n)))
+    return grb.GBMatrix(BitELL.from_coo(e, e, None, (n, n)))
+
+
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_zero_edge_goldens(fmt):
+    """An entirely-isolated (zero-edge) graph: every algorithm answers
+    from first principles without tracing a zero-trip hop loop — the
+    regression for the wcc/bfs/khop short-circuits and the new families'
+    empty-adjacency paths."""
+    n = 7
+    h = _empty_handle(n, fmt)
+    np.testing.assert_array_equal(np.asarray(alg.wcc(h)), np.arange(n))
+    lv = np.asarray(alg.bfs_levels(h, [3]))
+    want = np.full((n, 1), np.inf, dtype=np.float32)
+    want[3, 0] = 0.0
+    np.testing.assert_array_equal(lv, want)
+    np.testing.assert_array_equal(np.asarray(alg.khop_counts(h, [0, 3], 2)),
+                                  np.zeros(2, dtype=np.int32))
+    np.testing.assert_array_equal(
+        np.asarray(alg.betweenness(h)), np.zeros(n, dtype=np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(alg.closeness(h)), np.zeros(n, dtype=np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(alg.similarity(h, [0, 5], "jaccard")),
+        np.zeros((n, 2), dtype=np.float32))
+    np.testing.assert_array_equal(np.asarray(alg.label_propagation(h)),
+                                  np.arange(n, dtype=np.int32))
+
+
+# -- sharded cells: both session meshes, bit-identity + transfer pins ---------
+@pytest.fixture(scope="module")
+def _sharded_refs():
+    """Local ELL answers the mesh cells compare against (computed once)."""
+    D, h = _cell("rmat7", "ell")
+    srcs = _sources(D.shape[0])
+    return {
+        "h": h, "srcs": srcs,
+        "bc": np.asarray(alg.betweenness(h, sources=srcs)),
+        "cl": np.asarray(alg.closeness(h, sources=srcs)),
+        "sim": np.asarray(alg.similarity(h, srcs, "jaccard")),
+        "lp": np.asarray(alg.label_propagation(h)),
+    }
+
+
+def _mesh_cell(refs, mesh):
+    sh = grb.distribute(refs["h"], mesh)
+    x0 = grb.host_transfers()
+    bc = alg.betweenness(sh, sources=refs["srcs"])
+    cl = alg.closeness(sh, sources=refs["srcs"])
+    sim = alg.similarity(sh, refs["srcs"], "jaccard")
+    lp = alg.label_propagation(sh)
+    # the transfer delta is read BEFORE materializing results: pulling an
+    # answer is allowed, a gather inside the sharded hot loop is not
+    dx = grb.host_transfers() - x0
+    assert dx == 0, f"sharded hot loop gathered to host {dx}x"
+    # integer-count-derived outputs are exact under any reduction order
+    np.testing.assert_array_equal(np.asarray(cl), refs["cl"])
+    np.testing.assert_array_equal(np.asarray(sim), refs["sim"])
+    np.testing.assert_array_equal(np.asarray(lp), refs["lp"])
+    # betweenness sums float delta ratios in shard order: allclose
+    np.testing.assert_allclose(np.asarray(bc), refs["bc"],
+                               atol=1e-3, rtol=1e-4)
+
+
+@pytest.mark.distributed
+def test_algorithms_sharded_mesh222(_sharded_refs, mesh222):
+    _mesh_cell(_sharded_refs, mesh222)
+
+
+@pytest.mark.distributed
+def test_algorithms_sharded_mesh421(_sharded_refs, mesh421):
+    _mesh_cell(_sharded_refs, mesh421)
+
+
+# -- property sweep (hypothesis when installed, seeded sweep otherwise) -------
+def _rand_digraph(seed, n=24, p=0.12):
+    rng = np.random.default_rng(seed)
+    D = (rng.random((n, n)) < p).astype(np.float32)
+    np.fill_diagonal(D, 0)
+    return D
+
+
+def _ell_of(D):
+    r, c = np.nonzero(D)
+    return grb.GBMatrix(ELL.from_coo(r, c, None, D.shape))
+
+
+@_prop
+def test_prop_betweenness_off_path_zero(seed):
+    """A vertex on no shortest path has betweenness exactly 0: sources
+    (no in-DAG predecessors... they are excluded by definition) aside,
+    any sink (no out-edges) or source-only vertex (no in-edges) can never
+    be interior to a shortest path."""
+    D = _rand_digraph(seed)
+    bc = np.asarray(alg.betweenness(_ell_of(D)))
+    interior_less = (D.sum(axis=1) == 0) | (D.sum(axis=0) == 0)
+    assert np.all(bc[interior_less] == 0.0)
+    assert np.all(bc >= 0.0)
+
+
+@_prop
+def test_prop_closeness_relabel_invariant(seed):
+    """Closeness is a per-vertex structural score: permuting vertex ids
+    permutes the scores and changes nothing else."""
+    D = _rand_digraph(seed)
+    n = D.shape[0]
+    perm = np.random.default_rng(seed + 1).permutation(n)
+    Dp = np.zeros_like(D)
+    Dp[perm[:, None], perm[None, :]] = D        # Dp[perm[i],perm[j]]=D[i,j]
+    base = np.asarray(alg.closeness(_ell_of(D)))
+    relab = np.asarray(alg.closeness(_ell_of(Dp)))
+    np.testing.assert_allclose(relab[perm], base, atol=1e-6)
+
+
+@_prop
+def test_prop_jaccard_symmetric_and_reflexive(seed):
+    """jaccard(u, v) == jaccard(v, u), and a vertex pair with identical
+    out-neighborhoods scores exactly 1.0 (we clone row 0 into row 1)."""
+    D = _rand_digraph(seed)
+    D[1, :] = D[0, :]
+    D[0, 1] = D[1, 0] = D[0, 0] = D[1, 1] = 0
+    h = _ell_of(D)
+    S = np.asarray(alg.similarity(h, list(range(D.shape[0])), "jaccard"))
+    np.testing.assert_allclose(S, S.T, atol=1e-6)
+    if D[0].sum() > 0:
+        assert S[0, 1] == pytest.approx(1.0)
+
+
+@_prop
+def test_prop_labelprop_respects_components(seed):
+    """On a disjoint union of cliques of size >= 3, label propagation
+    converges to one label per clique — the WCC labels exactly (a 2-clique
+    is the known synchronous-CDLP oscillator: its two members trade labels
+    forever, which is why the sweep draws >= 3). On any graph, a vertex's
+    final label is the id of some member of its own weak component
+    (labels never cross components)."""
+    rng = np.random.default_rng(seed)
+    sizes = rng.integers(3, 7, size=4)
+    n = int(sizes.sum())
+    D = np.zeros((n, n), dtype=np.float32)
+    off = 0
+    for s in sizes:
+        D[off:off + s, off:off + s] = 1.0
+        off += s
+    np.fill_diagonal(D, 0)
+    h = _ell_of(D)
+    labels = np.asarray(alg.label_propagation(h))
+    np.testing.assert_array_equal(labels, np.asarray(alg.wcc(h)))
+    # general invariant on a random digraph
+    Dr = _rand_digraph(seed)
+    hr = _ell_of(Dr)
+    comp = np.asarray(alg.wcc(hr))
+    lab = np.asarray(alg.label_propagation(hr))
+    assert np.all(comp[lab] == comp), "a label crossed a weak component"
+
+
+# -- CALL algo.* end-to-end through engine.Database ---------------------------
+def test_call_surface_through_database():
+    """Every registered procedure served through `Database.query` answers
+    exactly what the direct algorithm call computes — the Cypher-ish
+    surface is a thin shell over the same device sweeps."""
+    D, _ = _cell("rmat6", "ell")
+    n = D.shape[0]
+    r, c = np.nonzero(D)
+    g = GraphBuilder(n).add_edges("R", r, c).build(fmt="ell")
+    db = Database()
+    db.load_graph("g", g)
+    rel = g.relations["R"]
+
+    res = db.query("g", "CALL algo.pagerank(rel: R, iters: 40)")
+    assert res.columns == ["node", "score"] and len(res.rows) == n
+    np.testing.assert_allclose(
+        [s for _, s in res.rows], np.asarray(alg.pagerank(rel, iters=40)),
+        atol=1e-6)
+
+    res = db.query("g", "CALL algo.betweenness(rel: R) YIELD node, score")
+    np.testing.assert_allclose([s for _, s in res.rows],
+                               np.asarray(alg.betweenness(rel)), atol=1e-4)
+
+    res = db.query("g", "CALL algo.closeness(rel: R, sources: [1, 4, 9]) "
+                        "YIELD node, score")
+    assert [v for v, _ in res.rows] == [1, 4, 9]
+    np.testing.assert_allclose(
+        [s for _, s in res.rows],
+        np.asarray(alg.closeness(rel, sources=[1, 4, 9])), atol=1e-6)
+
+    res = db.query("g", "CALL algo.similarity(rel: R, sources: [0, 2], "
+                        "kind: overlap) YIELD node1, node2, score")
+    S = np.asarray(alg.similarity(rel, [0, 2], "overlap"))
+    want = sorted((int(s), int(i), float(S[i, j]))
+                  for i, j in zip(*np.nonzero(S > 0))
+                  for s in [[0, 2][j]])
+    assert [(a, b) for a, b, _ in res.rows] == [(a, b) for a, b, _ in want]
+    np.testing.assert_allclose([s for _, _, s in res.rows],
+                               [s for _, _, s in want], atol=1e-6)
+
+    res = db.query("g", "CALL algo.wcc(rel: R)")
+    np.testing.assert_array_equal([comp for _, comp in res.rows],
+                                  np.asarray(alg.wcc(rel)))
+
+    res = db.query("g", "CALL algo.labelprop(rel: R) "
+                        "YIELD node, community AS c")
+    assert res.columns == ["node", "c"]
+    np.testing.assert_array_equal([lab for _, lab in res.rows],
+                                  np.asarray(alg.label_propagation(rel)))
+
+    res = db.query("g", "CALL algo.bfs(rel: R, sources: [0], max_hops: 2) "
+                        "YIELD source, node, level")
+    lv = np.asarray(alg.bfs_levels(rel, [0], max_iter=2))
+    want = sorted((0, int(i), int(lv[i, 0]))
+                  for i in np.nonzero(np.isfinite(lv[:, 0]))[0])
+    assert res.rows == want
+
+    # YIELD reorder/alias + LIMIT apply after canonical rows
+    res = db.query("g", "CALL algo.pagerank(rel: R, iters: 40) "
+                        "YIELD score AS s, node LIMIT 3")
+    assert res.columns == ["s", "node"] and len(res.rows) == 3
+    assert all(isinstance(v, float) for v, _ in res.rows)
+
+
+def test_call_undirected_triangles_through_database():
+    """algo.triangles needs a symmetric adjacency; one global count row."""
+    D, _ = _cell("petersen", "ell")
+    r, c = np.nonzero(D)
+    g = GraphBuilder(10).add_edges("R", r, c).build(fmt="ell")
+    db = Database()
+    db.load_graph("g", g)
+    res = db.query("g", "CALL algo.triangles(rel: R)")
+    assert res.columns == ["triangles"]
+    assert res.rows == [(0,)]           # the Petersen graph is triangle-free
+
+    Dk, _ = _cell("K4", "ell")
+    rk, ck = np.nonzero(Dk)
+    gk = GraphBuilder(4).add_edges("R", rk, ck).build(fmt="ell")
+    db.load_graph("k4", gk)
+    assert db.query("k4", "CALL algo.triangles(rel: R)").rows == [(4,)]
+
+
+def test_call_explain_and_default_relation():
+    """CallPlan.explain names the procedure; `rel:` omitted uses the
+    graph-wide adjacency union like an unlabeled MATCH edge."""
+    from repro.query.planner import plan
+    from repro.query.parser import parse
+    p = plan(parse("CALL algo.closeness(sources: [1, 2]) YIELD node, score"))
+    assert "ProcedureCall(algo.closeness" in p.explain()
+    D, _ = _cell("C5", "ell")
+    r, c = np.nonzero(D)
+    g = GraphBuilder(5).add_edges("R", r, c).build(fmt="ell")
+    db = Database()
+    db.load_graph("g", g)
+    res = db.query("g", "CALL algo.closeness(sources: [0])")
+    np.testing.assert_allclose([res.rows[0][1]], closeness_np(D, [0]),
+                               atol=1e-6)

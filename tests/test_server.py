@@ -385,3 +385,88 @@ def test_unaligned_mode_packs_exact_width():
     srv.flush()
     assert srv.stats["pack_slots"] == 6
     assert srv.stats["pack_ratio"] == pytest.approx(1.0)
+
+
+# -- CALL algo.* through the scheduler ----------------------------------------
+
+def test_call_batched_matches_solo():
+    """Seeded CALL queries with one signature coalesce into ONE device
+    sweep (proc + args + YIELD equal, sources differ) and every member
+    still answers exactly what the solo execute() path answers — the
+    batched ≡ solo contract extends to procedures."""
+    g, rel = _grid_graph("rmat6")
+    srv = QueryServer(g)
+    t = "CALL algo.closeness(rel: KNOWS) YIELD node, score"
+    seed_sets = [[0], [3, 9], [17], [2, 5, 30]]
+    qids = [srv.submit(t, seeds=s) for s in seed_sets]
+    # a different-kind similarity call must NOT join the closeness sweep
+    qsim = srv.submit("CALL algo.similarity(rel: KNOWS, kind: cosine) "
+                      "YIELD node1, node2, score", seeds=[1, 4])
+    # an unseeded whole-graph procedure rides alone
+    qpr = srv.submit("CALL algo.pagerank(rel: KNOWS, iters: 30) "
+                     "YIELD node, score LIMIT 5")
+    out = srv.flush()
+    for qid, seeds in zip(qids, seed_sets):
+        want = execute(g, "CALL algo.closeness(rel: KNOWS, sources: "
+                          f"{seeds}) YIELD node, score")
+        assert out[qid].error is None
+        assert out[qid].rows == want.rows, f"seeds {seeds}"
+    want = execute(g, "CALL algo.similarity(rel: KNOWS, kind: cosine, "
+                      "sources: [1, 4]) YIELD node1, node2, score")
+    assert out[qsim].rows == want.rows
+    want = execute(g, "CALL algo.pagerank(rel: KNOWS, iters: 30) "
+                      "YIELD node, score LIMIT 5")
+    assert out[qpr].rows == want.rows
+    # 4 closeness members -> one sweep; similarity -> its own; pagerank solo
+    assert srv.stats["batches"] == 2
+    assert srv.stats["solo"] == 1
+    assert srv.stats["errors"] == 0
+
+
+def test_call_plan_cache_normalizes_argument_lists():
+    """PlanCache whitespace normalization reaches INSIDE parenthesized
+    CALL argument lists: spaces next to punctuation never split the cache
+    (the pre-PR key only collapsed whitespace runs, so `(iters: 20)` and
+    `( iters:20 )` were two entries)."""
+    g, rel = _grid_graph("rmat6")
+    srv = QueryServer(g)
+    variants = [
+        "CALL algo.closeness(rel: KNOWS) YIELD node, score",
+        "CALL algo.closeness( rel: KNOWS ) YIELD node , score",
+        "CALL  algo.closeness(rel:KNOWS)  YIELD node,score",
+        "CALL algo . closeness ( rel : KNOWS ) YIELD node, score",
+    ]
+    qids = [srv.submit(t, seeds=[i]) for i, t in enumerate(variants)]
+    out = srv.flush()
+    assert srv.stats["plan_cache_misses"] == 1
+    assert srv.stats["plan_cache_hits"] == len(variants) - 1
+    # one cache entry -> one signature -> ONE coalesced sweep
+    assert srv.stats["batches"] == 1
+    for i, qid in enumerate(qids):
+        want = execute(g, f"CALL algo.closeness(rel: KNOWS, sources: [{i}])"
+                          " YIELD node, score")
+        assert out[qid].rows == want.rows
+
+
+def test_call_unknown_procedure_error_isolated():
+    """An unknown procedure name (or bad args / bad YIELD column) plans
+    fine and fails at execution — the server answers it with an error
+    Result and every other tenant still gets its rows."""
+    g, rel = _grid_graph("K4")
+    srv = QueryServer(g)
+    qgood1 = srv.submit("CALL algo.closeness(rel: R) YIELD node, score",
+                        seeds=[0])
+    qbad = srv.submit("CALL algo.nosuch() YIELD x")
+    qargs = srv.submit("CALL algo.pagerank(rel: R, bogus: 3)")
+    qyield = srv.submit("CALL algo.wcc(rel: R) YIELD nope")
+    qsrc = srv.submit("CALL algo.wcc(rel: R, sources: [1])")
+    qgood2 = srv.submit("MATCH (a)-[:R*1..1]->(b) RETURN count(DISTINCT b)",
+                        seeds=[1])
+    out = srv.flush()
+    assert out[qbad].error is not None and "no procedure" in out[qbad].error
+    assert out[qargs].error is not None and "bogus" in out[qargs].error
+    assert out[qyield].error is not None and "nope" in out[qyield].error
+    assert out[qsrc].error is not None and "takes no sources" in out[qsrc].error
+    assert out[qgood1].error is None and len(out[qgood1].rows) == 1
+    assert out[qgood2].rows == [(3,)]
+    assert srv.stats["errors"] == 4
